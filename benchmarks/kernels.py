@@ -1,0 +1,77 @@
+"""Kernel microbenchmarks: MXU-form vs cumulative distance tiles; streaming
+selection vs full sort; fused vs unfused kNN.
+
+On this CPU container the Pallas kernels execute in interpret mode (Python,
+orders of magnitude slower — correctness harness, not a timing one), so the
+TIMED comparisons here use the XLA-lowered jnp paths that implement the same
+tiling; the interpret-mode kernels are timed once and labeled as such.  On a
+TPU backend the same entry points lower to Mosaic and the timings become the
+real kernel numbers.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit
+from repro.core import topk as T
+from repro.core.distances import get_distance, matmul_finalize
+from repro.core.knn import knn_query
+from repro.data.synthetic import random_vectors
+
+
+def main(m=1024, n=2048, d=256, k=64):
+    x = jnp.asarray(random_vectors(m, d, 0))
+    y = jnp.asarray(random_vectors(n, d, 1))
+    dist = get_distance("sqeuclidean")
+
+    # MXU rewrite vs cumulative streaming (XLA-lowered)
+    mxu = jax.jit(lambda a, b: dist.matmul_form.pairwise(a, b, matmul_finalize(dist)))
+    t = timeit(mxu, x, y)
+    emit("kern_distance_mxu_form", t,
+         f"gflops={2 * m * n * d / t / 1e9:.1f}")
+    cum = jax.jit(lambda a, b: dist.pairwise(a, b, 32))
+    t2 = timeit(cum, x, y)
+    emit("kern_distance_cumulative", t2, f"mxu_speedup={t2 / t:.1f}x")
+
+    # Selection: streaming running-K vs full sort vs lax.top_k
+    D = mxu(x, y)
+    full_sort = jax.jit(lambda a: jnp.sort(a, axis=1)[:, :k])
+    t_sort = timeit(full_sort, D)
+    emit("kern_select_full_sort", t_sort)
+    lax_topk = jax.jit(lambda a: T.topk_smallest(a, k))
+    t_lax = timeit(lax_topk, D)
+    emit("kern_select_lax_topk", t_lax, f"vs_sort={t_sort / t_lax:.2f}x")
+
+    def streaming(a):
+        run = T.init_running(a.shape[0], k)
+        n_tiles = a.shape[1] // 512
+
+        def body(c, run):
+            tile = jax.lax.dynamic_slice(a, (0, c * 512), (a.shape[0], 512))
+            return T.update_running(*run, tile, c * 512, threshold_skip=True)
+
+        run = jax.lax.fori_loop(0, n_tiles, body, run)
+        return T.finalize_topk(*run, k)
+
+    t_stream = timeit(jax.jit(streaming), D)
+    emit("kern_select_streaming_bitonic", t_stream,
+         f"vs_sort={t_sort / t_stream:.2f}x")
+
+    # Fused vs unfused end-to-end (both XLA jnp paths)
+    t_unfused = timeit(
+        lambda: knn_query(x, y, k, impl="jnp", tile_m=256, tile_n=512))
+    emit("kern_knn_unfused_jnp", t_unfused)
+
+    # Pallas interpret-mode single tile (correctness harness cost, labeled)
+    from repro.kernels import ops
+    t_interp = timeit(
+        lambda: ops.pairwise_distance(x[:256], y[:256], bm=128, bn=128, bd=128),
+        iters=1)
+    emit("kern_distance_pallas_interpret", t_interp,
+         "interpret-mode;correctness-only")
+    return t
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,169 @@
+"""Roofline analysis over the dry-run records (deliverable g).
+
+Reads benchmarks/results/dryrun*.json (written by repro.launch.dryrun),
+derives the three roofline terms per (arch x shape x mesh):
+
+    compute    = HLO_FLOPs / peak_FLOPs          (cost_analysis is per-device)
+    memory     = HLO_bytes / HBM_bw
+    collective = wire_bytes_per_device / ICI_bw
+
+identifies the dominant term, computes MODEL_FLOPS (analytic useful compute)
+and the MODEL/HLO ratio that exposes remat & padding waste, and emits the
+§Roofline markdown table for EXPERIMENTS.md.
+
+Hardware constants (TPU v5e, per chip): 197 TFLOP/s bf16; 819 GB/s HBM;
+50 GB/s/link ICI (1 link assumed for the collective lane — conservative).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def model_flops(arch: str, shape: str, mesh_devices: int) -> float | None:
+    """Analytic useful FLOPs per step, GLOBAL (divide by devices for
+    per-chip).  LM: 6ND train / 2ND inference (N = active params).  GNN and
+    recsys: dominant-op analytic counts (documented per family)."""
+    from repro.configs import registry as REG
+
+    a = REG.get(arch)
+    shape = shape.split("+")[0]  # strip build-variant suffix (e.g. "+sp")
+    cell = {c.name: c for c in a.shapes}[shape]
+    if a.family == "lm":
+        cfg = a.full_config()
+        n_act = cfg.n_active_params
+        p = cell.params
+        if cell.kind == "train":
+            tokens = p["global_batch"] * p["seq_len"]
+            return 6.0 * n_act * tokens
+        if cell.kind == "prefill":
+            tokens = p["global_batch"] * p["seq_len"]
+            return 2.0 * n_act * tokens
+        # decode: one token per sequence + cache attention reads
+        return 2.0 * n_act * p["global_batch"]
+    if a.family == "knn":
+        cfg = a.full_config()
+        p = cell.params
+        if cell.kind == "allpairs":
+            # symmetric: n^2/2 pairs x 2*d MACs (MXU form) = n^2 d flops
+            return float(p["n"]) ** 2 * cfg["d"]
+        return 2.0 * p["m"] * p["n"] * cfg["d"]
+    if a.family == "gnn":
+        cfg = a.full_config()
+        p = cell.params
+        E, C = p["n_edges"], cfg.d_hidden
+        # per edge: radial MLP + n_paths tensor-product contractions (l<=2:
+        # the 1x1->2 path is 9C MACs, dominated term ~ sum over paths ~ 50C)
+        per_edge = 2 * (cfg.n_rbf * cfg.radial_hidden
+                        + cfg.radial_hidden * cfg.n_paths * C) + 2 * 50 * C
+        fwd = cfg.n_layers * E * per_edge
+        return 3.0 * fwd  # train: fwd + bwd(2x)
+    # recsys
+    cfg = a.full_config()
+    p = cell.params
+    if cell.kind == "retrieval":
+        # kNN scoring: 2 * m * n * d MACs
+        return 2.0 * p["batch"] * p["n_candidates"] * cfg.tower_mlp[-1]
+    B = p["batch"]
+    per_ex = _recsys_flops_per_example(arch, cfg)
+    return (3.0 if cell.kind == "train" else 1.0) * B * per_ex
+
+
+def _recsys_flops_per_example(arch: str, cfg) -> float:
+    def mlp_flops(sizes):
+        return sum(2 * a * b for a, b in zip(sizes, sizes[1:]))
+
+    if arch == "dlrm-rm2":
+        f = cfg.n_sparse + 1
+        return (mlp_flops((cfg.n_dense,) + cfg.bot_mlp)
+                + 2 * f * f * cfg.embed_dim
+                + mlp_flops((f * (f - 1) // 2 + cfg.embed_dim,) + cfg.top_mlp))
+    if arch == "xdeepfm":
+        F, D = cfg.n_sparse, cfg.embed_dim
+        h_prev, cin = F, 0
+        for h in cfg.cin_layers:
+            cin += 2 * h * h_prev * F * D
+            h_prev = h
+        return cin + mlp_flops((F * D,) + cfg.mlp + (1,))
+    if arch == "bst":
+        D, S = cfg.embed_dim, cfg.seq_len
+        attn = cfg.n_blocks * (8 * S * D * D + 4 * S * S * D)
+        return attn + mlp_flops((S * D + cfg.n_other * D,) + cfg.mlp + (1,))
+    # two-tower
+    return (mlp_flops((cfg.n_user_fields * cfg.feat_dim,) + cfg.tower_mlp)
+            + mlp_flops((cfg.n_item_fields * cfg.feat_dim,) + cfg.tower_mlp))
+
+
+def analyze(rec: dict) -> dict | None:
+    if rec.get("status") != "ok":
+        return None
+    t_c = rec["flops"] / PEAK_FLOPS
+    t_m = rec["bytes_accessed"] / HBM_BW
+    t_n = rec["collective_wire_bytes_per_device"] / ICI_BW
+    terms = {"compute": t_c, "memory": t_m, "collective": t_n}
+    dom = max(terms, key=terms.get)
+    mf = model_flops(rec["arch"], rec["shape"], rec["devices"])
+    per_dev_model = (mf or 0.0) / rec["devices"]
+    bound = max(terms.values())
+    out = dict(
+        arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+        compute_s=t_c, memory_s=t_m, collective_s=t_n, dominant=dom,
+        model_flops_per_dev=per_dev_model,
+        useful_ratio=(per_dev_model / rec["flops"]) if rec["flops"] else 0.0,
+        # roofline fraction: useful compute time / bound-term time
+        roofline_frac=(per_dev_model / PEAK_FLOPS) / bound if bound else 0.0,
+        peak_gib=rec.get("peak_memory_in_bytes", 0) / 2**30,
+    )
+    return out
+
+
+def main(paths=None, md_out=None):
+    # dryrun.json = scanned production compiles (the §Dry-run artifact);
+    # dryrun_unrolled.json = trip-count-true accounting (overlays by key:
+    # XLA cost_analysis counts while-loop bodies once, so scanned LM / ring
+    # records under-report — see launch/dryrun.py --unroll).
+    paths = paths or ["benchmarks/results/dryrun.json",
+                      "benchmarks/results/dryrun_unrolled.json"]
+    recs = {}
+    for p in paths:
+        if os.path.exists(p):
+            with open(p) as f:
+                recs.update(json.load(f))
+    rows = []
+    for key in sorted(recs):
+        if recs[key].get("mesh") != "single":
+            continue  # §Roofline is single-pod only; multi-pod lives in §Dry-run
+        a = analyze(recs[key])
+        if a:
+            rows.append(a)
+    lines = [
+        "| arch | shape | mesh | compute s | memory s | collective s | "
+        "dominant | useful/HLO | roofline frac | peak GiB/dev |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['compute_s']:.2e} | {r['memory_s']:.2e} "
+            f"| {r['collective_s']:.2e} | {r['dominant']} "
+            f"| {r['useful_ratio']:.2f} | {r['roofline_frac']:.2f} "
+            f"| {r['peak_gib']:.2f} |")
+    table = "\n".join(lines)
+    if md_out:
+        with open(md_out, "w") as f:
+            f.write(table + "\n")
+    print(table)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--in", dest="paths", action="append", default=None)
+    ap.add_argument("--md-out", default=None)
+    a = ap.parse_args()
+    main(a.paths, a.md_out)

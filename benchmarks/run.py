@@ -1,0 +1,41 @@
+"""Benchmark driver: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Sizes are scaled to the CPU
+container; EXPERIMENTS.md maps each section back to the paper's table.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run table1     # one suite
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+SUITES = ("table1", "scaling", "kernels", "selection")
+
+
+def main() -> None:
+    which = sys.argv[1:] or list(SUITES)
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for name in which:
+        if name == "table1":
+            from benchmarks import table1
+            table1.main(sizes=(1000, 2000, 4000), d=256, k=100)
+        elif name == "scaling":
+            from benchmarks import scaling
+            scaling.main(n=4096, d=128, k=64, devices=(1, 2, 4))
+        elif name == "kernels":
+            from benchmarks import kernels
+            kernels.main()
+        elif name == "selection":
+            from benchmarks import selection
+            selection.main()
+        else:
+            raise SystemExit(f"unknown suite {name!r}; have {SUITES}")
+    print(f"# total_wall_s,{time.time() - t0:.1f},")
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,44 @@
+"""Phase-2 amortization (paper Sect. 6/7): selection cost as a fraction of
+the distance phase, across k and with/without the threshold-skip filter.
+
+The paper's claim: keeping k heaps adds only a small constant over computing
+the O(n^2 d) distances.  We verify the structure holds for the TPU-adapted
+selection network and measure the threshold-skip win on clustered data (the
+recommender regime where most tiles lose to the current k-th best early).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit
+from repro.core.knn import knn_allpairs
+from repro.data.synthetic import clustered_vectors, random_vectors
+
+
+def main(n=4096, d=256):
+    x = jnp.asarray(random_vectors(n, d, 0))
+    xc = jnp.asarray(clustered_vectors(n, d, n_clusters=32, seed=0))
+
+    # distance-only baseline: k=1 (minimal selection work)
+    t_dist = timeit(lambda: knn_allpairs(x, 1, gsize=512))
+    emit("select_distance_floor_k1", t_dist)
+
+    for k in (10, 100, 512):
+        t = timeit(lambda kk=k: knn_allpairs(x, kk, gsize=512))
+        emit(f"select_total_k{k}", t,
+             f"selection_overhead={(t - t_dist) / t_dist * 100:.0f}%")
+
+    # threshold skip on clustered vs uniform data
+    for name, data in (("uniform", x), ("clustered", xc)):
+        t_on = timeit(lambda dd=data: knn_allpairs(dd, 100, gsize=512,
+                                                   threshold_skip=True))
+        t_off = timeit(lambda dd=data: knn_allpairs(dd, 100, gsize=512,
+                                                    threshold_skip=False))
+        emit(f"select_threshold_skip_{name}", t_on,
+             f"no_skip={t_off * 1e6:.1f}us;win={(t_off - t_on) / t_off * 100:.0f}%")
+    return t_dist
+
+
+if __name__ == "__main__":
+    main()

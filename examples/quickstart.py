@@ -1,0 +1,43 @@
+"""Quickstart: the paper's k-nearest-vector problem in five calls.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import knn_allpairs, knn_query
+from repro.data.synthetic import clustered_vectors, random_vectors
+
+# 1. The paper's exact workload (scaled down): random vectors, d=256, k=100.
+x = jnp.asarray(random_vectors(n=2000, d=256, seed=0))
+result = knn_allpairs(x, k=100)
+print("all-pairs kNN:", result.distances.shape, result.indices.shape)
+print("  nearest to vector 0:", np.asarray(result.indices[0, :5]),
+      "at distance", np.asarray(result.distances[0, :5]).round(2))
+
+# 2. Any cumulatively-computable distance (paper Sect. 3) — KL divergence:
+p = jnp.asarray(np.abs(random_vectors(500, 64, 1)) + 0.01)
+p = p / p.sum(axis=1, keepdims=True)
+res_kl = knn_allpairs(p, k=10, distance="kl")
+print("KL-divergence kNN:", res_kl.distances.shape)
+
+# 3. Query-vs-database (the recommender serving case):
+db = jnp.asarray(clustered_vectors(5000, 128, seed=2))
+q = jnp.asarray(clustered_vectors(64, 128, seed=3))
+res_q = knn_query(q, db, k=20, distance="sqeuclidean")
+print("query kNN:", res_q.indices.shape)
+
+# 4. Exact-vs-brute check: the engine is EXACT — the paper's point is that
+#    "strict computation in practical time is possible" (no ANN needed):
+brute = np.argsort(np.asarray(((q[0] - db) ** 2).sum(1)))[:20]
+match = np.array_equal(np.sort(np.asarray(res_q.indices[0])), np.sort(brute))
+print("exact top-20 matches brute force:", match)
+assert match
+
+# 5. The fused Pallas kernel (beyond-paper: distance+select in one pass,
+#    validated in interpret mode on CPU, lowers to Mosaic on TPU):
+res_f = knn_query(q[:32], db[:2048], k=16, impl="fused")
+res_j = knn_query(q[:32], db[:2048], k=16, impl="jnp")
+err = float(jnp.max(jnp.abs(res_f.distances - res_j.distances)))
+print(f"fused == jnp path: max |delta| = {err:.2e}")
+print("done.")

@@ -1,0 +1,17 @@
+"""Global accounting-mode flag.
+
+XLA's cost_analysis counts while-loop bodies ONCE regardless of trip count;
+under this flag every repro loop (model scans, the kNN ring) compiles fully
+unrolled so FLOPs / bytes / collective counts are trip-count-true.  Set only
+by the dry-run's accounting pass (launch/dryrun.py --unroll).
+"""
+
+_UNROLL = [False]
+
+
+def set_unroll(value: bool) -> None:
+    _UNROLL[0] = bool(value)
+
+
+def unrolled() -> bool:
+    return _UNROLL[0]

@@ -1,0 +1,2 @@
+"""Assigned-architecture configs + registry (--arch <id>)."""
+from repro.configs.registry import ASSIGNED, all_cells, get  # noqa: F401

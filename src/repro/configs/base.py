@@ -1,0 +1,536 @@
+"""Architecture/shape registry plumbing.
+
+Every assigned architecture is an ``ArchSpec`` with:
+
+  * ``full_config()``  — the exact published hyper-parameters (dry-run only;
+    params are ShapeDtypeStructs, nothing is allocated);
+  * ``smoke_config()`` — a reduced same-family config, small enough to run a
+    real forward/train step on CPU (per-arch smoke tests);
+  * ``shapes``         — the assigned input-shape cells, each either a
+    ``Cell`` or a ``Skip`` with the documented reason
+    (DESIGN.md §Shape-cell notes);
+  * ``build(rules, shape, smoke=False)`` — returns ``(jitted_fn, args)``
+    where ``args`` is a tuple of ShapeDtypeStruct pytrees, ready for
+    ``jitted_fn.lower(*args).compile()`` — the dry-run contract;
+  * ``smoke_batch(...)`` — real (small) host data for integration tests.
+
+Shapes whose leading/edge dims must divide the mesh are padded here, once,
+with ``pad_to`` — models mask padding internally (inf distances, self-loop
+edges, loss masks).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import AxisRules
+
+SDS = jax.ShapeDtypeStruct
+
+
+def pad_to(n: int, mult: int) -> int:
+    return n + (-n) % mult
+
+
+@dataclasses.dataclass(frozen=True)
+class Cell:
+    name: str
+    kind: str  # train | prefill | decode | serve | retrieval | allpairs
+    params: dict
+
+
+@dataclasses.dataclass(frozen=True)
+class Skip:
+    name: str
+    reason: str
+
+    @property
+    def kind(self) -> str:
+        return "skip"
+
+
+def _opt_state_sds(optimizer, values_sds):
+    return jax.eval_shape(optimizer.init, values_sds)
+
+
+def _train_state_sds(optimizer, abstract_params):
+    from repro.distributed.steps import TrainState
+    from repro.models.nn import split_params
+
+    values, _ = split_params(abstract_params)
+    return TrainState(params=values, opt=_opt_state_sds(optimizer, values))
+
+
+# ---------------------------------------------------------------------------
+# LM family.
+# ---------------------------------------------------------------------------
+
+LM_SHAPES = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+
+
+class LMArch:
+    family = "lm"
+
+    def __init__(self, arch_id: str, full_cfg: Callable, smoke_cfg: Callable,
+                 *, subquadratic: bool, step_overrides: dict | None = None):
+        self.id = arch_id
+        self.full_config = full_cfg
+        self.smoke_config = smoke_cfg
+        self.subquadratic = subquadratic
+        self.step_overrides = step_overrides or {}
+
+    @property
+    def shapes(self):
+        cells = [
+            Cell("train_4k", "train", dict(seq_len=4096, global_batch=256)),
+            Cell("prefill_32k", "prefill", dict(seq_len=32768, global_batch=32)),
+            Cell("decode_32k", "decode", dict(seq_len=32768, global_batch=128)),
+        ]
+        if self.subquadratic:
+            cells.append(Cell("long_500k", "decode",
+                              dict(seq_len=524288, global_batch=1)))
+        else:
+            cells.append(Skip(
+                "long_500k",
+                "pure full attention: a 524288-token dense KV cache per "
+                "sequence is the quadratic regime this shape excludes "
+                "(DESIGN.md §Shape-cell notes); SWA archs run it instead",
+            ))
+        return cells
+
+    def abstract_params(self, cfg):
+        from repro.models import transformer as Tr
+
+        return Tr.abstract_params(cfg)
+
+    def init_params(self, key, cfg):
+        from repro.models import transformer as Tr
+
+        return Tr.init_params(key, cfg)
+
+    def _cache_sds(self, cfg, batch: int, seq_len: int):
+        from repro.models import attention as A
+        from repro.models import transformer as Tr
+
+        C = Tr.cache_capacity(cfg, seq_len)
+        return A.KVCache(
+            k=SDS((cfg.n_layers, batch, C, cfg.n_kv_heads, cfg.head_dim), jnp.bfloat16),
+            v=SDS((cfg.n_layers, batch, C, cfg.n_kv_heads, cfg.head_dim), jnp.bfloat16),
+            pos=SDS((batch,), jnp.int32),
+        )
+
+    def input_specs(self, shape_name: str, cfg=None):
+        cfg = cfg or self.full_config()
+        cell = {c.name: c for c in self.shapes}[shape_name]
+        assert isinstance(cell, Cell), f"{self.id}/{shape_name} is skipped"
+        p = cell.params
+        if cell.kind == "train":
+            return {
+                "tokens": SDS((p["global_batch"], p["seq_len"]), jnp.int32),
+                "labels": SDS((p["global_batch"], p["seq_len"]), jnp.int32),
+            }
+        if cell.kind == "prefill":
+            return {
+                "tokens": SDS((p["global_batch"], p["seq_len"]), jnp.int32),
+                "cache": self._cache_sds(cfg, p["global_batch"], p["seq_len"]),
+            }
+        if cell.kind == "decode":
+            return {
+                "tokens": SDS((p["global_batch"],), jnp.int32),
+                "cache": self._cache_sds(cfg, p["global_batch"], p["seq_len"]),
+            }
+        raise KeyError(cell.kind)
+
+    def build(self, rules: AxisRules, shape_name: str, *, smoke: bool = False,
+              step_config=None, variant: str | None = None):
+        """``variant``: decode cells accept "sp" (sequence-parallel cache,
+        flash-decoding merge — the beyond-baseline §Perf path) or None
+        (baseline: cache seq replicated over model)."""
+        from repro.distributed import steps as ST
+
+        cfg = self.smoke_config() if smoke else self.full_config()
+        cell = {c.name: c for c in self.shapes}[shape_name]
+        assert isinstance(cell, Cell)
+        specs = self.input_specs(shape_name, cfg) if not smoke else self._smoke_specs(cell, cfg)
+        abstract = self.abstract_params(cfg)
+
+        if cell.kind == "train":
+            loss, baxes = ST.lm_loss(cfg)
+            sc = step_config or ST.StepConfig(**self.step_overrides)
+            _, jitted, _, optimizer = ST.make_train_step(loss, abstract, rules, baxes, sc)
+            batch = {"tokens": specs["tokens"], "labels": specs["labels"]}
+            state = _train_state_sds(optimizer, abstract)
+            return jitted(batch), (state, batch)
+        if cell.kind == "prefill":
+            from repro.models.nn import split_params
+
+            values, _ = split_params(abstract)
+            _, shard_for, _ = ST.make_lm_prefill_step(cfg, rules, abstract)
+            fn = shard_for(specs["tokens"], specs["cache"])
+            return fn, (values, specs["tokens"], specs["cache"])
+        if cell.kind == "decode":
+            from repro.models.nn import split_params
+
+            values, _ = split_params(abstract)
+            _, shard_for, _ = ST.make_lm_decode_step(
+                cfg, rules, abstract, seq_parallel=(variant == "sp"))
+            fn = shard_for(specs["cache"], specs["tokens"])
+            return fn, (values, specs["cache"], specs["tokens"])
+        raise KeyError(cell.kind)
+
+    def _smoke_specs(self, cell: Cell, cfg):
+        b, s = 4, 64
+        if cell.kind == "train":
+            return {"tokens": SDS((b, s), jnp.int32), "labels": SDS((b, s), jnp.int32)}
+        if cell.kind == "prefill":
+            return {"tokens": SDS((b, s), jnp.int32),
+                    "cache": self._cache_sds(cfg, b, s)}
+        return {"tokens": SDS((b,), jnp.int32),
+                "cache": self._cache_sds(cfg, b, s)}
+
+    def smoke_batch(self, shape_name: str, seed: int = 0):
+        from repro.data.synthetic import lm_batch
+
+        cfg = self.smoke_config()
+        return {k: jnp.asarray(v) for k, v in
+                lm_batch(4, 64, cfg.vocab, seed, 0).items()}
+
+
+# ---------------------------------------------------------------------------
+# GNN family (NequIP).
+# ---------------------------------------------------------------------------
+
+
+class GNNArch:
+    family = "gnn"
+
+    def __init__(self, arch_id: str, full_cfg: Callable, smoke_cfg: Callable):
+        self.id = arch_id
+        self.full_config = full_cfg
+        self.smoke_config = smoke_cfg
+
+    @property
+    def shapes(self):
+        # Edge counts padded to multiples of 512 (divides every mesh's DP
+        # product); models mask padding via self-loop edges.
+        return [
+            Cell("full_graph_sm", "train", dict(
+                n_nodes=2708, n_edges=pad_to(10556, 512), d_feat=1433,
+                n_classes=7, task="classify")),
+            Cell("minibatch_lg", "train", dict(
+                n_nodes=180224, n_edges=pad_to(168960, 512), d_feat=602,
+                n_classes=41, task="classify", sampled=True)),
+            Cell("ogb_products", "train", dict(
+                n_nodes=2449029, n_edges=pad_to(61859140, 512), d_feat=100,
+                n_classes=47, task="classify")),
+            Cell("molecule", "train", dict(
+                n_nodes=30 * 128, n_edges=pad_to(64 * 128, 512), batch=128,
+                task="potential")),
+        ]
+
+    def _cfg_for(self, cell: Cell, smoke: bool):
+        cfg = self.smoke_config() if smoke else self.full_config()
+        if cell.params["task"] == "classify":
+            d_feat = 16 if smoke else cell.params["d_feat"]
+            cfg = dataclasses.replace(cfg, d_feat=d_feat)
+        return cfg
+
+    def abstract_params(self, cfg, cell: Cell | None = None):
+        from repro.models import gnn as G
+
+        params = G.abstract_params(cfg)
+        if cell is not None and cell.params["task"] == "classify":
+            from repro.models.nn import Param
+
+            n_cls = cell.params["n_classes"]
+            params = dict(params, cls_head=Param(
+                SDS((cfg.d_hidden, n_cls), jnp.float32), ("tensor", None)))
+        return params
+
+    def init_params(self, key, cfg, cell: Cell | None = None):
+        from repro.models import gnn as G
+        from repro.models.nn import Param, lecun_init
+
+        params = G.init_params(key, cfg)
+        if cell is not None and cell.params["task"] == "classify":
+            n_cls = cell.params["n_classes"]
+            params = dict(params, cls_head=Param(
+                lecun_init(jax.random.fold_in(key, 99), (cfg.d_hidden, n_cls),
+                           cfg.d_hidden), ("tensor", None)))
+        return params
+
+    def input_specs(self, shape_name: str, cfg=None, smoke: bool = False):
+        cell = {c.name: c for c in self.shapes}[shape_name]
+        p = cell.params
+        if smoke:
+            N, E = 64, 512
+            d_feat, n_cls = 16, p.get("n_classes", 7)
+        else:
+            N, E = p["n_nodes"], p["n_edges"]
+            d_feat, n_cls = p.get("d_feat", 0), p.get("n_classes", 0)
+        base = {
+            "positions": SDS((N, 3), jnp.float32),
+            "edges": (SDS((E,), jnp.int32), SDS((E,), jnp.int32)),
+        }
+        if p["task"] == "classify":
+            base["node_input"] = SDS((N, d_feat), jnp.float32)
+            base["labels"] = SDS((N,), jnp.int32)
+            base["label_mask"] = SDS((N,), jnp.float32)
+        else:
+            n_graphs = 4 if smoke else p.get("batch", 1)
+            base["node_input"] = SDS((N,), jnp.int32)
+            base["energy"] = SDS((n_graphs,), jnp.float32)
+            base["forces"] = SDS((N, 3), jnp.float32)
+            base["node_graph"] = SDS((N,), jnp.int32)
+        return base
+
+    def build(self, rules: AxisRules, shape_name: str, *, smoke: bool = False,
+              step_config=None, variant: str | None = None):
+        from repro.distributed import steps as ST
+
+        cell = {c.name: c for c in self.shapes}[shape_name]
+        cfg = self._cfg_for(cell, smoke)
+        abstract = self.abstract_params(cfg, cell)
+        specs = self.input_specs(shape_name, cfg, smoke=smoke)
+        if cell.params["task"] == "classify":
+            loss, baxes = ST.gnn_classifier_loss(cfg, cell.params["n_classes"])
+        else:
+            n_graphs = 4 if smoke else cell.params["batch"]
+            loss, baxes = ST.gnn_potential_loss(cfg, n_graphs=n_graphs)
+        sc = step_config or ST.StepConfig()
+        _, jitted, _, optimizer = ST.make_train_step(loss, abstract, rules, baxes, sc)
+        state = _train_state_sds(optimizer, abstract)
+        return jitted(specs), (state, specs)
+
+    def smoke_batch(self, shape_name: str, seed: int = 0):
+        from repro.data.graphs import molecule_batch, random_graph
+
+        cell = {c.name: c for c in self.shapes}[shape_name]
+        rng = np.random.default_rng(seed)
+        if cell.params["task"] == "potential":
+            mb = molecule_batch(4, 12, 100, n_species=8, seed=seed)
+            # pad to the smoke spec sizes (N=64 is 4*12=48 padded... use exact)
+            return {k: jax.tree.map(jnp.asarray, v) for k, v in mb.items()
+                    if k != "n_graphs"}
+        N, E = 64, 512
+        g = random_graph(N, E, seed)
+        src = np.repeat(np.arange(N), np.diff(g.indptr).astype(int))
+        dst = g.indices.astype(np.int32)
+        return {
+            "positions": jnp.asarray(rng.standard_normal((N, 3), np.float32) * 2),
+            "edges": (jnp.asarray(src.astype(np.int32)), jnp.asarray(dst)),
+            "node_input": jnp.asarray(rng.standard_normal((N, 16), np.float32)),
+            "labels": jnp.asarray(rng.integers(0, cell.params["n_classes"], N).astype(np.int32)),
+            "label_mask": jnp.ones((N,), jnp.float32),
+        }
+
+
+# ---------------------------------------------------------------------------
+# RecSys family.
+# ---------------------------------------------------------------------------
+
+RECSYS_SHAPES = ("train_batch", "serve_p99", "serve_bulk", "retrieval_cand")
+
+
+class RecsysArch:
+    family = "recsys"
+
+    def __init__(self, arch_id: str, full_cfg: Callable, smoke_cfg: Callable):
+        self.id = arch_id
+        self.full_config = full_cfg
+        self.smoke_config = smoke_cfg
+
+    @property
+    def shapes(self):
+        cells = [
+            Cell("train_batch", "train", dict(batch=65536)),
+            Cell("serve_p99", "serve", dict(batch=512)),
+            Cell("serve_bulk", "serve", dict(batch=262144)),
+        ]
+        if self.id == "two-tower-retrieval":
+            cells.append(Cell("retrieval_cand", "retrieval",
+                              dict(batch=1, n_candidates=1_000_000)))
+        else:
+            # Ranking models score the 10^6 candidates pointwise: a bulk
+            # serve at batch = n_candidates (one user broadcast over items).
+            cells.append(Cell("retrieval_cand", "serve",
+                              dict(batch=1_000_000, broadcast_user=True)))
+        return cells
+
+    def _init_fn(self):
+        from repro.models import recsys as R
+
+        return {
+            "dlrm-rm2": R.init_dlrm,
+            "xdeepfm": R.init_xdeepfm,
+            "bst": R.init_bst,
+            "two-tower-retrieval": R.init_two_tower,
+        }[self.id]
+
+    def abstract_params(self, cfg):
+        init = self._init_fn()
+        return jax.eval_shape(lambda: init(jax.random.PRNGKey(0), cfg))
+
+    def init_params(self, key, cfg):
+        return self._init_fn()(key, cfg)
+
+    def input_specs(self, shape_name: str, cfg=None, smoke: bool = False):
+        cfg = cfg or (self.smoke_config() if smoke else self.full_config())
+        cell = {c.name: c for c in self.shapes}[shape_name]
+        B = 32 if smoke else cell.params["batch"]
+        if cell.kind == "retrieval":
+            n_cand = 4096 if smoke else cell.params["n_candidates"]
+            return {
+                "user": SDS((B, cfg.n_user_fields), jnp.int32),
+                "db": SDS((n_cand, cfg.tower_mlp[-1]), jnp.float32),
+            }
+        if self.id == "dlrm-rm2":
+            s = {"dense": SDS((B, cfg.n_dense), jnp.float32),
+                 "sparse": SDS((B, cfg.n_sparse), jnp.int32)}
+        elif self.id == "xdeepfm":
+            s = {"sparse": SDS((B, cfg.n_sparse), jnp.int32)}
+        elif self.id == "bst":
+            s = {"hist": SDS((B, cfg.seq_len - 1), jnp.int32),
+                 "target": SDS((B,), jnp.int32),
+                 "others": SDS((B, cfg.n_other), jnp.int32)}
+        else:  # two-tower
+            s = {"user": SDS((B, cfg.n_user_fields), jnp.int32),
+                 "item": SDS((B, cfg.n_item_fields), jnp.int32)}
+        if cell.kind == "train" and self.id != "two-tower-retrieval":
+            s["labels"] = SDS((B,), jnp.float32)
+        return s
+
+    def build(self, rules: AxisRules, shape_name: str, *, smoke: bool = False,
+              step_config=None, variant: str | None = None):
+        from repro.distributed import steps as ST
+        from repro.models.nn import split_params
+
+        cfg = self.smoke_config() if smoke else self.full_config()
+        cell = {c.name: c for c in self.shapes}[shape_name]
+        abstract = self.abstract_params(cfg)
+        specs = self.input_specs(shape_name, cfg, smoke=smoke)
+
+        if cell.kind == "train":
+            loss, baxes = ST.recsys_loss(self.id, cfg)
+            sc = step_config or ST.StepConfig()
+            _, jitted, _, optimizer = ST.make_train_step(loss, abstract, rules, baxes, sc)
+            state = _train_state_sds(optimizer, abstract)
+            return jitted(specs), (state, specs)
+        if cell.kind == "serve":
+            if self.id == "two-tower-retrieval":
+                # bulk/online scoring = dot of the two towers
+                from repro.models import recsys as R
+
+                p_shard, _ = ST.param_shardings(rules, abstract)
+
+                def score(values, batch):
+                    from repro.distributed.sharding import axis_rules
+
+                    with axis_rules(rules):
+                        u = R.user_embedding(values, batch["user"])
+                        v = R.item_embedding(values, batch["item"])
+                        return jnp.sum(u * v, axis=-1)
+
+                bs = {k: rules.sharding(("batch",) + (None,) * (v.ndim - 1), v.shape)
+                      for k, v in specs.items()}
+                fn = jax.jit(score, in_shardings=(p_shard, bs), out_shardings=None)
+            else:
+                _, shard_for, _ = ST.make_recsys_serve_step(self.id, cfg, rules, abstract)
+                fn = shard_for(specs)
+            values, _ = split_params(abstract)
+            return fn, (values, specs)
+        if cell.kind == "retrieval":
+            _, shard_for, _ = ST.make_retrieval_step(
+                cfg, rules, abstract, k=min(100, specs["db"].shape[0]))
+            fn = shard_for(specs["user"], specs["db"])
+            values, _ = split_params(abstract)
+            return fn, (values, specs["user"], specs["db"])
+        raise KeyError(cell.kind)
+
+    def smoke_batch(self, shape_name: str, seed: int = 0):
+        from repro.data.synthetic import recsys_batch
+
+        cfg = self.smoke_config()
+        cell = {c.name: c for c in self.shapes}[shape_name]
+        b = recsys_batch(self.id, 32, cfg, seed=seed)
+        if cell.kind != "train" and "labels" in b:
+            del b["labels"]
+        return {k: jnp.asarray(v) for k, v in b.items()}
+
+
+# ---------------------------------------------------------------------------
+# The paper's own workload (kNN all-pairs / retrieval service).
+# ---------------------------------------------------------------------------
+
+
+class KNNArch:
+    """The paper's k-nearest-vector problem as a first-class config."""
+
+    family = "knn"
+
+    def __init__(self, arch_id: str = "knn-paper"):
+        self.id = arch_id
+
+    def full_config(self):
+        return dict(d=256, k=100, distance="sqeuclidean")
+
+    def smoke_config(self):
+        return dict(d=32, k=8, distance="sqeuclidean")
+
+    @property
+    def shapes(self):
+        return [
+            Cell("allpairs_160k", "allpairs", dict(n=160_000)),  # paper Table 1 max
+            Cell("allpairs_2m", "allpairs", dict(n=2_097_152)),  # beyond-paper scale
+            Cell("query_1m", "query", dict(m=8192, n=1_048_576)),
+        ]
+
+    def build(self, rules: AxisRules, shape_name: str, *, smoke: bool = False,
+              step_config=None, variant: str | None = None):
+        from repro.core import distributed as KD
+
+        cfg = self.smoke_config() if smoke else self.full_config()
+        cell = {c.name: c for c in self.shapes}[shape_name]
+        mesh = rules.mesh
+        P = int(np.prod(list(mesh.shape.values())))
+        if cell.kind == "allpairs":
+            n = 256 if smoke else cell.params["n"]
+            n_pad = pad_to(n, P)
+            if variant == "triangle":
+                # Paper-faithful baseline: replicate the dataset (all-gather),
+                # zigzag triangle schedule, log-P butterfly heap merge.
+                # nGrids = 2P zigzag periods; n re-padded to gsize * nGrids
+                # (the schedule's granularity cost at small n/P is itself a
+                # finding — see EXPERIMENTS.md §Perf).
+                gsize = max(128, pad_to(-(-n // (2 * P)), 128))
+                n_pad = gsize * 2 * P
+                fn = KD.make_triangle_allpairs(
+                    mesh, k=cfg["k"], gsize=gsize, distance=cfg["distance"])
+            else:
+                import jax.numpy as _jnp
+
+                fn = KD.make_ring_allpairs(
+                    mesh, k=cfg["k"], distance=cfg["distance"],
+                    wire_dtype=_jnp.bfloat16 if variant == "bf16wire" else None)
+            x = SDS((n_pad, cfg["d"]), jnp.float32)
+            return fn, (x, n)
+        # query: queries over DP axes, database over model
+        dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        m = 64 if smoke else cell.params["m"]
+        n = 1024 if smoke else cell.params["n"]
+        fn = KD.make_query_sharded(
+            mesh, query_axis=dp if len(dp) > 1 else dp[0],
+            db_axis="model", k=cfg["k"], distance=cfg["distance"], impl="jnp")
+        q = SDS((m, cfg["d"]), jnp.float32)
+        db = SDS((n, cfg["d"]), jnp.float32)
+        return fn, (q, db, n)
+
+    def smoke_batch(self, shape_name: str, seed: int = 0):
+        from repro.data.synthetic import clustered_vectors
+
+        cfg = self.smoke_config()
+        return jnp.asarray(clustered_vectors(256, cfg["d"], seed=seed))

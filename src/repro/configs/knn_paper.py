@@ -1,0 +1,8 @@
+"""knn-paper — the paper's own workload as a selectable config.
+
+k-nearest-vector, d=256, k=100 (paper Sect. 7 Table 1), plus a beyond-paper
+2M-vector cell and the query-sharded serving cell.
+"""
+from repro.configs.base import KNNArch
+
+ARCH = KNNArch("knn-paper")

@@ -1,0 +1,34 @@
+"""nequip [gnn] — O(3)-equivariant interatomic potential.
+
+n_layers=5 d_hidden=32 l_max=2 n_rbf=8 cutoff=5 equivariance=E(3)
+[arXiv:2101.03164; paper].  Cartesian-irrep adaptation (DESIGN.md §6); the
+neighbor list for the molecule cell is built with the paper's kNN engine
+(data.graphs.radius_graph).
+"""
+from repro.configs.base import GNNArch
+from repro.models.gnn import GNNConfig
+
+
+def full_config() -> GNNConfig:
+    import jax.numpy as jnp
+
+    return GNNConfig(
+        n_layers=5,
+        d_hidden=32,
+        l_max=2,
+        n_rbf=8,
+        cutoff=5.0,
+        n_species=64,
+        radial_hidden=64,
+        # feature_dtype stays fp32: the bf16-wire hypothesis was REFUTED —
+        # GSPMD hoists the all-gather above the convert, so the wire payload
+        # stayed fp32 (EXPERIMENTS.md §Perf iteration 3, lesson recorded).
+    )
+
+
+def smoke_config() -> GNNConfig:
+    return GNNConfig(n_layers=2, d_hidden=8, l_max=2, n_rbf=4, cutoff=5.0,
+                     n_species=8, radial_hidden=16)
+
+
+ARCH = GNNArch("nequip", full_config, smoke_config)

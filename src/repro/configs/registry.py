@@ -1,0 +1,40 @@
+"""--arch <id> lookup table over the assigned architectures (+ the paper's)."""
+from __future__ import annotations
+
+import importlib
+
+_MODULES = {
+    "h2o-danube-3-4b": "repro.configs.h2o_danube3_4b",
+    "yi-6b": "repro.configs.yi_6b",
+    "gemma-2b": "repro.configs.gemma_2b",
+    "mixtral-8x22b": "repro.configs.mixtral_8x22b",
+    "qwen3-moe-30b-a3b": "repro.configs.qwen3_moe_30b_a3b",
+    "nequip": "repro.configs.nequip",
+    "xdeepfm": "repro.configs.xdeepfm",
+    "dlrm-rm2": "repro.configs.dlrm_rm2",
+    "bst": "repro.configs.bst",
+    "two-tower-retrieval": "repro.configs.two_tower",
+    "knn-paper": "repro.configs.knn_paper",
+}
+
+ASSIGNED = [a for a in _MODULES if a != "knn-paper"]
+
+
+def get(arch_id: str):
+    try:
+        mod = importlib.import_module(_MODULES[arch_id])
+    except KeyError:
+        raise KeyError(f"unknown arch {arch_id!r}; have {sorted(_MODULES)}") from None
+    return mod.ARCH
+
+
+def all_cells(include_knn: bool = False):
+    """Every (arch_id, shape_name, kind) triple; skips carry kind='skip'."""
+    out = []
+    ids = list(_MODULES) if include_knn else ASSIGNED
+    for aid in ids:
+        arch = get(aid)
+        for cell in arch.shapes:
+            out.append((aid, cell.name, cell.kind,
+                        getattr(cell, "reason", None)))
+    return out

@@ -1,0 +1,31 @@
+"""two-tower-retrieval [recsys] — sampled-softmax retrieval (RecSys'19).
+
+embed_dim=256 tower_mlp=1024-512-256 interaction=dot [RecSys'19 (YouTube);
+unverified].  The ``retrieval_cand`` cell (1 query x 10^6 candidates) runs on
+the paper's kNN serving engine (query-sharded fused scoring + butterfly
+top-k merge) — the workload the 2009 paper was built for.
+"""
+from repro.configs.base import RecsysArch
+from repro.models.recsys import TwoTowerConfig, default_table_sizes
+
+
+def full_config() -> TwoTowerConfig:
+    return TwoTowerConfig(
+        embed_dim=256,
+        tower_mlp=(1024, 512, 256),
+        n_user_fields=6,
+        n_item_fields=4,
+        user_sizes=tuple(default_table_sizes(6, lo=100_000, hi=50_000_000)),
+        item_sizes=tuple(default_table_sizes(4, lo=50_000, hi=10_000_000)),
+        feat_dim=64,
+    )
+
+
+def smoke_config() -> TwoTowerConfig:
+    return TwoTowerConfig(
+        embed_dim=32, tower_mlp=(64, 32), n_user_fields=6, n_item_fields=4,
+        user_sizes=tuple([256] * 6), item_sizes=tuple([128] * 4), feat_dim=16,
+    )
+
+
+ARCH = RecsysArch("two-tower-retrieval", full_config, smoke_config)

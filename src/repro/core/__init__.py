@@ -1,0 +1,11 @@
+"""Core library: the paper's k-nearest-vector solver.
+
+Public API:
+  knn_allpairs / knn_query      — single-device tiled solvers
+  distributed.knn_allpairs_*    — multi-device (shard_map) solvers
+  distances.get_distance        — cumulative distance registry
+  grid.make_schedule            — paper's zigzag grid scheduler
+  topk                          — vectorized selection-network primitives
+"""
+from repro.core.distances import get_distance, is_symmetric  # noqa: F401
+from repro.core.knn import KNNResult, knn_allpairs, knn_query  # noqa: F401

@@ -1,0 +1,529 @@
+"""Multi-device k-nearest-vector solvers (paper Sect. 4, TPU adaptation).
+
+The paper's multi-GPU design has three load-bearing ideas:
+
+  1. symmetric delta => compute only the upper triangle, each tile feeding
+     both its row-heaps and (transposed) its column-heaps;
+  2. zigzag assignment of grid rows to devices for static load balance;
+  3. per-device private heaps — no inter-device synchronization until one
+     final merge (done on the CPU in the paper).
+
+TPU mapping (see DESIGN.md "hardware adaptation"):
+
+* ``knn_allpairs_ring`` — the production path.  Points are row-sharded; a
+  half-ring of ``collective_permute`` steps rotates visiting blocks so each
+  unordered pair of blocks meets exactly once (idea 1).  Every device computes
+  the same number of tiles per step, so balance is *exact* rather than
+  zigzag-approximate (idea 2 becomes unnecessary — the triangle is never
+  materialized).  Partial results for the visiting block travel with it in a
+  "boomerang heap" and are routed home with one static permute (idea 3: still
+  no global synchronization, and the final CPU merge becomes an O(1)-depth
+  on-device merge).
+* ``knn_allpairs_triangle`` — the paper-faithful layout: dataset replicated
+  (one all-gather), the exact zigzag schedule from repro.core.grid, per-device
+  full-length heaps, and a log2(P)-depth bitonic tree merge instead of the
+  paper's CPU merge (beyond-paper: the merge is O(n k log P / P) on-device
+  instead of O(n k P) on host).
+* ``knn_query_sharded`` — serving path: queries sharded on one mesh axis,
+  database on another; local fused kNN then a butterfly top-k merge across the
+  database axis.  This is the retrieval engine used by the two-tower config's
+  ``retrieval_cand`` shape.
+
+All functions are written against ``jax.shard_map`` with explicit axis names
+and are mesh-shape agnostic (any power-of-two axis size).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import topk as T
+from repro.core.distances import get_distance, is_symmetric
+from repro.core.knn import KNNResult, pairwise_tile
+
+Array = jnp.ndarray
+
+
+# ---------------------------------------------------------------------------
+# Collective top-k merge primitives.
+# ---------------------------------------------------------------------------
+
+
+def _pvary(x, axis_name):
+    """Mark a device-invariant value as varying over ``axis_name`` (vma)."""
+    names = (axis_name,) if isinstance(axis_name, str) else tuple(axis_name)
+    if hasattr(jax.lax, "pvary"):
+        return jax.lax.pvary(x, names)
+    return jax.lax.pcast(x, names, to="varying")  # pragma: no cover
+
+
+def tree_merge_topk(run_v: Array, run_i: Array, axis_name) -> tuple[Array, Array]:
+    """All-reduce-style top-k merge: XOR-butterfly of bitonic merges.
+
+    After log2(P) rounds every device holds the K smallest of the union of all
+    devices' sorted K-buffers.  Communication: log2(P) x [rows, K] pairs —
+    exponentially less than the paper's gather-everything-to-CPU merge.
+    """
+    P = jax.lax.axis_size(axis_name)
+    assert P & (P - 1) == 0, f"butterfly merge needs pow2 axis, got {P}"
+    d = 1
+    while d < P:
+        perm = [(i, i ^ d) for i in range(P)]
+        ov = jax.lax.ppermute(run_v, axis_name, perm)
+        oi = jax.lax.ppermute(run_i, axis_name, perm)
+        run_v, run_i = T.merge_topk_sorted(run_v, run_i, ov, oi)
+        d *= 2
+    return run_v, run_i
+
+
+def _rotate(x, axis_name, shift: int):
+    """Static-ring permute: device p sends to (p + shift) mod P."""
+    P = jax.lax.axis_size(axis_name)
+    perm = [(i, (i + shift) % P) for i in range(P)]
+    return jax.lax.ppermute(x, axis_name, perm)
+
+
+def _rotate_bits(x, axis_name, shift: int):
+    """Ring permute with the payload laundered through an integer bitcast.
+
+    XLA's algebraic simplifier commutes fp converts across collectives and
+    re-widens a bf16 payload back to f32 on the wire (measured — §Perf).  A
+    bitcast to u16 is opaque to that rewrite, so the permute genuinely
+    carries 2 bytes/element.
+    """
+    bits = jax.lax.bitcast_convert_type(x, jnp.uint16)
+    out = _rotate(bits, axis_name, shift)
+    return jax.lax.bitcast_convert_type(out, x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Ring all-pairs (production path).
+# ---------------------------------------------------------------------------
+
+
+def _local_tile(x_rows, x_cols, dist, impl: str):
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+
+        return kops.pairwise_distance(x_rows, x_cols, distance=dist.name)
+    return pairwise_tile(x_rows, x_cols, dist)
+
+
+def ring_allpairs_shard(
+    x_local: Array,
+    *,
+    axis_name,
+    k: int,
+    distance: str = "sqeuclidean",
+    n_real: int,
+    impl: str = "jnp",
+    threshold_skip: bool = False,
+    wire_dtype=None,
+) -> tuple[Array, Array]:
+    """Per-shard body of the half-ring symmetric all-pairs kNN.
+
+    ``x_local``: this device's row block [n_loc, d] (zero-padded rows beyond
+    ``n_real`` globally).  Returns this block's ascending (values, indices)
+    [n_loc, K].  Runs inside shard_map.
+    """
+    dist = get_distance(distance)
+    sym = is_symmetric(distance)
+    P = jax.lax.axis_size(axis_name)
+    p = jax.lax.axis_index(axis_name)
+    n_loc, _ = x_local.shape
+    K = T.next_pow2(k)
+
+    def masked(tile, row_block, col_block, exclude_diag):
+        row_ids = row_block * n_loc + jnp.arange(n_loc)[:, None]
+        col_ids = col_block * n_loc + jnp.arange(n_loc)[None, :]
+        tile = jnp.where(col_ids >= n_real, T.POS_INF, tile)
+        tile = jnp.where(row_ids >= n_real, T.POS_INF, tile)
+        if exclude_diag:
+            tile = jnp.where(row_ids == col_ids, T.POS_INF, tile)
+        return tile
+
+    # Diagonal tile: own vs own, self-excluded. No communication.
+    run_v, run_i = T.init_running(n_loc, k)
+    tile = _local_tile(x_local, x_local, dist, impl)
+    tile = masked(tile, p, p, True)
+    run_v, run_i = T.update_running(
+        run_v, run_i, tile, p * n_loc, threshold_skip=threshold_skip
+    )
+
+    if P == 1:
+        return run_v, run_i
+
+    n_steps = P // 2 if sym else P - 1
+
+    # Boomerang state: the visiting block plus the heap being accumulated FOR
+    # that block by the devices it visits (symmetric mirror updates).
+    # ``wire_dtype`` (e.g. bf16): the traveling state is STORED in the wire
+    # dtype, so every hop's ppermute carries the compressed payload natively.
+    # (Casting right at the permute does NOT work: XLA's simplifier fuses the
+    # down/up converts and ships fp32 — §Perf refuted-then-fixed iteration.
+    # Merges/distances still compute in fp32; indices stay int32.)
+    wd = wire_dtype
+    vis_block = x_local if wd is None else x_local.astype(wd)
+    vis_v, vis_i = T.init_running(n_loc, k)
+    if wd is not None:
+        vis_v = vis_v.astype(wd)
+    vis_v = _pvary(vis_v, axis_name)
+    vis_i = _pvary(vis_i, axis_name)
+
+    rot = _rotate if wd is None else _rotate_bits
+
+    def step(s, carry):
+        run_v, run_i, vis_block, vis_v, vis_i = carry
+        # Rotate visiting state forward one hop: after s hops device p hosts
+        # block (p - s) mod P and that block's traveling heap.
+        vis_block = rot(vis_block, axis_name, 1)
+        vis_v = rot(vis_v, axis_name, 1)
+        vis_i = _rotate(vis_i, axis_name, 1)
+        src = jax.lax.rem(p - s + P, P)  # owner of the visiting block
+
+        tile = _local_tile(x_local, vis_block.astype(x_local.dtype), dist, impl)
+        tile = masked(tile, p, src, False)
+        # Even-P final half-step: each unordered pair {p, p+P/2} would be seen
+        # twice; only the lower device keeps it (the paper's "virtual mirror").
+        if sym and P % 2 == 0:
+            last = s == n_steps
+            active = jnp.logical_or(jnp.logical_not(last), p < P // 2)
+            tile = jnp.where(active, tile, T.POS_INF)
+
+        run_v, run_i = T.update_running(
+            run_v, run_i, tile, src * n_loc, threshold_skip=threshold_skip
+        )
+        if sym:
+            tv, ti = T.tile_topk(tile.T, T.next_pow2(k), p * n_loc)
+            mv, mi = T.merge_topk_sorted(vis_v.astype(jnp.float32), vis_i, tv, ti)
+            vis_v = mv if wd is None else mv.astype(wd)
+            vis_i = mi
+        return run_v, run_i, vis_block, vis_v, vis_i
+
+    from repro import accounting
+
+    if accounting.unrolled():
+        # Trip-count-true accounting: unroll the ring so every hop's
+        # collective-permute is visible to cost analysis (dry-run only).
+        carry = (run_v, run_i, vis_block, vis_v, vis_i)
+        for s in range(1, n_steps + 1):
+            carry = step(s, carry)
+        run_v, run_i, vis_block, vis_v, vis_i = carry
+    else:
+        run_v, run_i, vis_block, vis_v, vis_i = jax.lax.fori_loop(
+            1, n_steps + 1, step, (run_v, run_i, vis_block, vis_v, vis_i)
+        )
+
+    if sym:
+        # Route each traveling heap home: block q's heap sits at (q + S) mod P.
+        vis_v = _rotate(vis_v, axis_name, -n_steps)
+        vis_i = _rotate(vis_i, axis_name, -n_steps)
+        run_v, run_i = T.merge_topk_sorted(
+            run_v, run_i, vis_v.astype(jnp.float32), vis_i)
+    return run_v, run_i
+
+
+# ---------------------------------------------------------------------------
+# Paper-faithful triangle with zigzag schedule.
+# ---------------------------------------------------------------------------
+
+
+def triangle_allpairs_shard(
+    x_local: Array,
+    tiles: Array,
+    valid: Array,
+    *,
+    axis_name,
+    k: int,
+    distance: str = "sqeuclidean",
+    gsize: int,
+    n_real: int,
+    impl: str = "jnp",
+    threshold_skip: bool = False,
+) -> tuple[Array, Array]:
+    """Paper Fig. 5: zigzag-assigned upper-triangle grids, per-device heaps.
+
+    ``tiles``/``valid``: this device's padded static schedule row
+    ([max_tiles, 2] int32 / [max_tiles] bool) from grid.make_schedule.
+    Returns per-device PARTIAL heaps for ALL rows [n_pad, K]; callers merge
+    across devices (tree_merge_topk) exactly as the paper merges per-GPU heaps.
+    """
+    dist = get_distance(distance)
+    # One all-gather: the paper ships the whole dataset to every GPU up front.
+    x = jax.lax.all_gather(x_local, axis_name, tiled=True)
+    n_pad, d = x.shape
+    K = T.next_pow2(k)
+    run_v = _pvary(jnp.full((n_pad, K), T.POS_INF, jnp.float32), axis_name)
+    run_i = _pvary(jnp.full((n_pad, K), -1, jnp.int32), axis_name)
+
+    def masked(tile, row_off, col_off):
+        row_ids = row_off + jnp.arange(gsize)[:, None]
+        col_ids = col_off + jnp.arange(gsize)[None, :]
+        tile = jnp.where(col_ids >= n_real, T.POS_INF, tile)
+        tile = jnp.where(row_ids == col_ids, T.POS_INF, tile)
+        return tile
+
+    def step(carry, txy):
+        run_v, run_i = carry
+        XY, ok = txy
+        X, Y = XY[0], XY[1]
+        row_off, col_off = Y * gsize, X * gsize
+        rows = jax.lax.dynamic_slice(x, (row_off, 0), (gsize, d))
+        cols = jax.lax.dynamic_slice(x, (col_off, 0), (gsize, d))
+        tile = _local_tile(rows, cols, dist, impl)
+        tile = jnp.where(ok, tile, T.POS_INF)
+
+        t_row = masked(tile, row_off, col_off)
+        rv = jax.lax.dynamic_slice(run_v, (row_off, 0), (gsize, K))
+        ri = jax.lax.dynamic_slice(run_i, (row_off, 0), (gsize, K))
+        rv, ri = T.update_running(rv, ri, t_row, col_off, threshold_skip=threshold_skip)
+        run_v = jax.lax.dynamic_update_slice(run_v, rv, (row_off, 0))
+        run_i = jax.lax.dynamic_update_slice(run_i, ri, (row_off, 0))
+
+        t_col = masked(tile.T, col_off, row_off)
+        t_col = jnp.where(X == Y, T.POS_INF, t_col)
+        cv = jax.lax.dynamic_slice(run_v, (col_off, 0), (gsize, K))
+        ci = jax.lax.dynamic_slice(run_i, (col_off, 0), (gsize, K))
+        cv, ci = T.update_running(cv, ci, t_col, row_off, threshold_skip=threshold_skip)
+        run_v = jax.lax.dynamic_update_slice(run_v, cv, (col_off, 0))
+        run_i = jax.lax.dynamic_update_slice(run_i, ci, (col_off, 0))
+        return (run_v, run_i), None
+
+    (run_v, run_i), _ = jax.lax.scan(step, (run_v, run_i), (tiles, valid))
+    return run_v, run_i
+
+
+# ---------------------------------------------------------------------------
+# Query-sharded kNN (serving / retrieval path).
+# ---------------------------------------------------------------------------
+
+
+def query_sharded_shard(
+    q_local: Array,
+    db_local: Array,
+    *,
+    db_axis,
+    k: int,
+    distance: str = "sqeuclidean",
+    n_db_real: int,
+    impl: str = "fused",
+) -> tuple[Array, Array]:
+    """Queries sharded on one axis, database on ``db_axis``; butterfly merge.
+
+    Each device solves its query block against its database shard, then the
+    per-shard K-buffers are tree-merged across ``db_axis``.  Index space is
+    global database rows.
+    """
+    P = jax.lax.axis_size(db_axis)
+    p = jax.lax.axis_index(db_axis)
+    n_loc = db_local.shape[0]
+    K = T.next_pow2(k)
+
+    if impl == "fused":
+        from repro.kernels import ops as kops
+
+        m = q_local.shape[0]
+        bm = min(256, T.next_pow2(max(m, 8)))
+        local_valid = jnp.clip(n_db_real - p * n_loc, 0, n_loc)
+        vals, idx = kops.fused_knn(
+            q_local,
+            db_local,
+            min(k, n_loc),
+            distance=distance,
+            tile_m=bm,
+            db_valid=local_valid,
+        )
+        vals = jnp.pad(vals, ((0, 0), (0, K - vals.shape[1])), constant_values=T.POS_INF)
+        idx = jnp.pad(idx, ((0, 0), (0, K - idx.shape[1])), constant_values=-1)
+    else:
+        dist = get_distance(distance)
+        tile = pairwise_tile(q_local, db_local, dist)
+        col_ids = p * n_loc + jnp.arange(n_loc)[None, :]
+        tile = jnp.where(col_ids >= n_db_real, T.POS_INF, tile)
+        vals, idx0 = T.tile_topk(tile, K, 0)
+        idx = idx0
+
+    # local -> global database indices
+    idx = jnp.where(idx >= 0, idx + p * n_loc, -1)
+    vals, idx = tree_merge_topk(vals, idx, db_axis)
+    return vals[:, :k], idx[:, :k]
+
+
+# ---------------------------------------------------------------------------
+# Host-level jitted entry points (build shard_map closures over a mesh).
+# ---------------------------------------------------------------------------
+
+
+def _flat_spec(axes) -> jax.sharding.PartitionSpec:
+    return jax.sharding.PartitionSpec(axes)
+
+
+def pad_rows_to(x: Array, mult: int) -> Array:
+    pad = (-x.shape[0]) % mult
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad, x.shape[1]), x.dtype)], axis=0)
+    return x
+
+
+def make_ring_allpairs(
+    mesh: jax.sharding.Mesh,
+    *,
+    axes: Sequence[str] | str | None = None,
+    k: int,
+    distance: str = "sqeuclidean",
+    impl: str = "jnp",
+    threshold_skip: bool = False,
+    wire_dtype=None,
+):
+    """Build a jitted all-pairs kNN over ``mesh`` (ring over flattened axes).
+
+    Returns fn(x [n, d]) -> KNNResult with n % P == 0 (use pad_rows_to).
+    """
+    axes = tuple(mesh.axis_names) if axes is None else (
+        (axes,) if isinstance(axes, str) else tuple(axes)
+    )
+    P = int(np.prod([mesh.shape[a] for a in axes]))
+
+    def fn(x: Array, n_real: int) -> KNNResult:
+        n_pad = x.shape[0]
+        assert n_pad % P == 0
+
+        @functools.partial(
+            jax.shard_map,
+            mesh=mesh,
+            in_specs=_flat_spec(axes),
+            out_specs=(_flat_spec(axes), _flat_spec(axes)),
+            check_vma=False,  # pallas_call inside shard_map has no vma info
+        )
+        def body(x_local):
+            return ring_allpairs_shard(
+                x_local,
+                axis_name=axes,
+                k=k,
+                distance=distance,
+                n_real=n_real,
+                impl=impl,
+                threshold_skip=threshold_skip,
+                wire_dtype=wire_dtype,
+            )
+
+        v, i = body(x)
+        return KNNResult(v[:n_real, :k], i[:n_real, :k])
+
+    return jax.jit(fn, static_argnames=("n_real",))
+
+
+def make_triangle_allpairs(
+    mesh: jax.sharding.Mesh,
+    *,
+    axes: Sequence[str] | str | None = None,
+    k: int,
+    gsize: int,
+    distance: str = "sqeuclidean",
+    impl: str = "jnp",
+    threshold_skip: bool = False,
+):
+    """Paper-faithful zigzag/triangle kNN over ``mesh``; final tree merge."""
+    from repro.core import grid as G
+
+    axes = tuple(mesh.axis_names) if axes is None else (
+        (axes,) if isinstance(axes, str) else tuple(axes)
+    )
+    P = int(np.prod([mesh.shape[a] for a in axes]))
+
+    def fn(x: Array, n_real: int) -> KNNResult:
+        n_pad = x.shape[0]
+        assert n_pad % (P * gsize) == 0 or n_pad % gsize == 0
+        sched = G.make_schedule(n_pad, gsize, P)
+        tiles = jnp.asarray(sched.tiles)
+        valid = jnp.asarray(sched.valid)
+
+        @functools.partial(
+            jax.shard_map,
+            mesh=mesh,
+            in_specs=(_flat_spec(axes), _flat_spec(axes), _flat_spec(axes)),
+            out_specs=(_flat_spec(axes), _flat_spec(axes)),
+            check_vma=False,  # pallas_call inside shard_map has no vma info
+        )
+        def body(x_local, tiles_local, valid_local):
+            rv, ri = triangle_allpairs_shard(
+                x_local,
+                tiles_local[0],
+                valid_local[0],
+                axis_name=axes,
+                k=k,
+                distance=distance,
+                gsize=gsize,
+                n_real=n_real,
+                impl=impl,
+                threshold_skip=threshold_skip,
+            )
+            # Paper: merge per-GPU heaps at the end. Beyond-paper: log-depth
+            # on-device butterfly, then keep this device's row slice.
+            rv, ri = tree_merge_topk(rv, ri, axes)
+            p = jax.lax.axis_index(axes)
+            n_loc = x_local.shape[0]
+            rv = jax.lax.dynamic_slice(rv, (p * n_loc, 0), (n_loc, rv.shape[1]))
+            ri = jax.lax.dynamic_slice(ri, (p * n_loc, 0), (n_loc, ri.shape[1]))
+            return rv, ri
+
+        v, i = body(x, tiles, valid)
+        return KNNResult(v[:n_real, :k], i[:n_real, :k])
+
+    return jax.jit(fn, static_argnames=("n_real",))
+
+
+def make_query_sharded(
+    mesh: jax.sharding.Mesh,
+    *,
+    query_axis: str,
+    db_axis: str,
+    k: int,
+    distance: str = "sqeuclidean",
+    impl: str = "fused",
+):
+    """Serving-path kNN: queries over ``query_axis``, database over ``db_axis``.
+
+    fn(q [m, d], db [n, d], n_db_real) -> KNNResult; m % size(query_axis) == 0,
+    n % size(db_axis) == 0.
+    """
+    q_axes = (query_axis,) if isinstance(query_axis, str) else tuple(query_axis)
+    assert db_axis not in q_axes, (
+        "queries must be replicated over db_axis (the butterfly merge runs "
+        f"across it); got query_axis={query_axis!r} == db_axis={db_axis!r}")
+
+    def fn(q: Array, db: Array, n_db_real: int) -> KNNResult:
+        @functools.partial(
+            jax.shard_map,
+            mesh=mesh,
+            in_specs=(
+                jax.sharding.PartitionSpec(query_axis),
+                jax.sharding.PartitionSpec(db_axis),
+            ),
+            out_specs=(
+                jax.sharding.PartitionSpec(query_axis),
+                jax.sharding.PartitionSpec(query_axis),
+            ),
+            # The butterfly merge leaves results replicated over db_axis; vma
+            # tracking cannot infer replication through ppermute chains.
+            check_vma=False,
+        )
+        def body(q_local, db_local):
+            return query_sharded_shard(
+                q_local,
+                db_local,
+                db_axis=db_axis,
+                k=k,
+                distance=distance,
+                n_db_real=n_db_real,
+                impl=impl,
+            )
+
+        v, i = body(q, db)
+        return KNNResult(v, i)
+
+    return jax.jit(fn, static_argnames=("n_db_real",))

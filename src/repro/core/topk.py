@@ -1,0 +1,207 @@
+"""Top-k selection primitives (paper Sect. 6, adapted to TPU).
+
+The paper keeps, per row, a k-element max-heap in GPU memory and lets each
+thread filter candidates against the heap top (the current k-th smallest)
+before taking a lock and pushing.  TPUs have no per-thread scalar heaps and no
+cheap fine-grained synchronization — the idiomatic equivalent is a *vectorized
+selection network* with completely static dataflow:
+
+* the running "heap" is an ascending-sorted length-K buffer per row
+  (K = next_pow2(k)), the k-th smallest readable at position k-1 in O(1),
+  exactly the property the paper wants from its descending heap;
+* a candidate tile is reduced with a bitonic sorting network (log^2 K
+  compare-exchange stages, all expressible as reshape/flip/min/max — no
+  gathers, no data-dependent control flow);
+* two sorted K-buffers are merged with the classic bitonic *top-k merge*:
+  elementwise min(a_i, b_rev_i) holds exactly the K smallest of the union and
+  is bitonic, so one log-K merge network re-sorts it;
+* the paper's "skip candidates that do not beat the heap top" trick becomes a
+  per-tile ``lax.cond`` on ``any(tile < kth_best)`` — a whole-tile skip, the
+  vector analogue of the thread-local buffer filter.
+
+These primitives are shared by the pure-jnp reference implementation, the
+Pallas kernels (repro.kernels.stream_topk / fused_knn) and the distributed
+tree-merge (repro.core.distributed).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+NEG_INF = float("-inf")
+POS_INF = float("inf")
+
+
+def next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Bitonic compare-exchange stage via reshape/flip (partner index = i XOR j).
+# ---------------------------------------------------------------------------
+
+
+def _partner(x: Array, j: int) -> Array:
+    """Value at index (i XOR j) along the last axis, as reshape+flip (no gather)."""
+    L = x.shape[-1]
+    xr = x.reshape(*x.shape[:-1], L // (2 * j), 2, j)
+    return jnp.flip(xr, axis=-2).reshape(x.shape)
+
+
+def _stage(vals: Array, idx: Array, j: int, up: Array):
+    """One compare-exchange stage of the bitonic network.
+
+    ``up`` is a static bool vector over the last axis: True where the enclosing
+    block sorts ascending.  Ties broken by original position so that value/index
+    pairs stay consistent between the two halves of each pair.
+    """
+    L = vals.shape[-1]
+    pos = jnp.arange(L)
+    pvals = _partner(vals, j)
+    pidx = _partner(idx, j)
+    is_lower = (pos & j) == 0  # first element of its pair
+    ppos = pos ^ j
+    # lexicographic (value, position) strict less-than: self < partner
+    self_lt = (vals < pvals) | ((vals == pvals) & (pos < ppos))
+    take_min = jnp.logical_not(jnp.logical_xor(up, is_lower))  # up == is_lower
+    take_self = jnp.where(take_min, self_lt, jnp.logical_not(self_lt))
+    new_vals = jnp.where(take_self, vals, pvals)
+    new_idx = jnp.where(take_self, idx, pidx)
+    return new_vals, new_idx
+
+
+def bitonic_sort_kv(vals: Array, idx: Array, ascending: bool = True):
+    """Full bitonic sort of (vals, idx) along the last axis (length = 2^p).
+
+    Static O(log^2 L) network of reshape/flip/min-max ops — maps to TPU VPU
+    shuffles; no gathers or data-dependent control flow.
+    """
+    L = vals.shape[-1]
+    assert L & (L - 1) == 0, f"bitonic sort needs pow2 length, got {L}"
+    if L == 1:
+        return vals, idx
+    pos = jnp.arange(L)
+    size = 2
+    while size <= L:
+        up = (pos & size) == 0
+        if size == L:
+            up = jnp.ones((L,), bool) if ascending else jnp.zeros((L,), bool)
+        elif not ascending:
+            up = jnp.logical_not(up)
+        j = size // 2
+        while j >= 1:
+            vals, idx = _stage(vals, idx, j, up)
+            j //= 2
+        size *= 2
+    return vals, idx
+
+
+def bitonic_merge_ascending(vals: Array, idx: Array):
+    """Sort a *bitonic* sequence ascending: the final log-L merge network only."""
+    L = vals.shape[-1]
+    up = jnp.ones((L,), bool)
+    j = L // 2
+    while j >= 1:
+        vals, idx = _stage(vals, idx, j, up)
+        j //= 2
+    return vals, idx
+
+
+def merge_topk_sorted(av: Array, ai: Array, bv: Array, bi: Array):
+    """Merge two ascending length-K (value, index) sets, keep K smallest, sorted.
+
+    Classic bitonic top-k merge: ``min(a_i, reverse(b)_i)`` contains exactly the
+    K smallest of the union and is bitonic; one merge network sorts it.
+    O(log K) stages vs O(K log K) for a full re-sort.
+    """
+    rbv = jnp.flip(bv, axis=-1)
+    rbi = jnp.flip(bi, axis=-1)
+    a_wins = av <= rbv
+    lo_v = jnp.where(a_wins, av, rbv)
+    lo_i = jnp.where(a_wins, ai, rbi)
+    return bitonic_merge_ascending(lo_v, lo_i)
+
+
+# ---------------------------------------------------------------------------
+# Tile reduction + streaming scan (the pure-JAX reference used by core.knn).
+# ---------------------------------------------------------------------------
+
+
+def tile_topk(tile: Array, K: int, col_offset) -> tuple[Array, Array]:
+    """Ascending top-K (smallest) of each row of ``tile`` [m, bn], global indices."""
+    m, bn = tile.shape
+    if bn < K:
+        pad = jnp.full((m, K - bn), POS_INF, tile.dtype)
+        tile = jnp.concatenate([tile, pad], axis=1)
+    neg_vals, loc = jax.lax.top_k(-tile, K)  # descending of negated = ascending
+    vals = -neg_vals
+    idx = jnp.where(vals < POS_INF, loc + col_offset, jnp.int32(-1))
+    return vals, idx.astype(jnp.int32)
+
+
+def init_running(m: int, k: int, dtype=jnp.float32):
+    K = next_pow2(k)
+    return (
+        jnp.full((m, K), POS_INF, dtype),
+        jnp.full((m, K), -1, jnp.int32),
+    )
+
+
+def update_running(run_v, run_i, tile, col_offset, *, threshold_skip: bool = True):
+    """Fold one distance tile into the running top-K state.
+
+    ``threshold_skip``: vector analogue of the paper's heap-top filter — if no
+    element of the tile beats the current k-th best of any row, skip the whole
+    merge (a single cheap reduction guards the expensive selection network).
+    """
+    K = run_v.shape[-1]
+
+    def do_merge(args):
+        rv, ri = args
+        tv, ti = tile_topk(tile, K, col_offset)
+        return merge_topk_sorted(rv, ri, tv, ti)
+
+    if not threshold_skip:
+        return do_merge((run_v, run_i))
+
+    kth = run_v[:, -1:]  # worst kept value per row (ascending buffer)
+    any_better = jnp.any(tile < kth)
+    return jax.lax.cond(any_better, do_merge, lambda args: args, (run_v, run_i))
+
+
+def finalize_topk(run_v, run_i, k: int):
+    return run_v[:, :k], run_i[:, :k]
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def topk_smallest(x: Array, k: int):
+    """Reference: ascending k smallest of each row + indices (lax.top_k based)."""
+    neg_vals, idx = jax.lax.top_k(-x, k)
+    return -neg_vals, idx.astype(jnp.int32)
+
+
+def merge_many_sorted(vals: Array, idx: Array, k: int):
+    """Merge ``[S, m, K]`` stacked ascending partial top-K sets → ``[m, K]``.
+
+    Binary tree of pairwise bitonic merges — host/device final merge of the
+    paper's per-GPU heaps, in log2(S) rounds.
+    """
+    S = vals.shape[0]
+    while S > 1:
+        half = S // 2
+        mv, mi = merge_topk_sorted(
+            vals[:half], idx[:half], vals[half : 2 * half], idx[half : 2 * half]
+        )
+        if S % 2:
+            mv = jnp.concatenate([mv, vals[-1:]], axis=0)
+            mi = jnp.concatenate([mi, idx[-1:]], axis=0)
+        vals, idx = mv, mi
+        S = vals.shape[0]
+    return finalize_topk(vals[0], idx[0], k)

@@ -1,0 +1,22 @@
+"""Data substrate: synthetic-but-real pipelines for every workload family.
+
+All generators are deterministic functions of (seed, step) so that training is
+reproducible and *resumable* — after a checkpoint restore the pipeline
+continues from the same stream position with no state file (fault-tolerance
+requirement).  Host-sharding: each data-parallel host keeps only its slice of
+the global batch (``host_slice``).
+"""
+from repro.data.synthetic import (  # noqa: F401
+    clustered_vectors,
+    lm_batch,
+    recsys_batch,
+    token_stream,
+)
+from repro.data.graphs import (  # noqa: F401
+    CSRGraph,
+    knn_graph,
+    molecule_batch,
+    neighbor_sample,
+    radius_graph,
+    random_graph,
+)

@@ -1,0 +1,230 @@
+"""Graph storage, neighbor sampling, and kNN/radius graph construction.
+
+* ``CSRGraph`` — host-side CSR adjacency (indptr/indices), the storage format
+  every sampler reads from.  JAX has no CSR sparse type, so CSR lives in
+  numpy on the host and only the *sampled, padded* edge lists cross into jit.
+* ``neighbor_sample`` — GraphSAGE fanout sampling (e.g. 15-10): per hop,
+  sample ``fanout`` neighbors per frontier node (with replacement when the
+  degree is smaller — standard GraphSAGE semantics), emitting STATIC padded
+  edge arrays suitable for jit (the minibatch_lg cell's real sampler).
+* ``knn_graph`` / ``radius_graph`` — edge-list construction on top of the
+  paper's kNN engine (repro.core.knn): this is where the paper's technique
+  feeds the NequIP pipeline (DESIGN.md §Arch-applicability), replacing the
+  O(n^2) python double loop a naive neighbor-list build would be.
+* ``molecule_batch`` — pack B small graphs into one padded graph by index
+  offsetting (the batched-small-graphs cell).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+def _rng(seed: int, step: int = 0) -> np.random.Generator:
+    return np.random.default_rng(np.random.SeedSequence([seed, step]))
+
+
+@dataclasses.dataclass
+class CSRGraph:
+    """Host-side CSR adjacency. indptr: [N+1] int64; indices: [nnz] int32."""
+
+    indptr: np.ndarray
+    indices: np.ndarray
+
+    @property
+    def n_nodes(self) -> int:
+        return len(self.indptr) - 1
+
+    @property
+    def n_edges(self) -> int:
+        return len(self.indices)
+
+    def degree(self, u: np.ndarray) -> np.ndarray:
+        return self.indptr[u + 1] - self.indptr[u]
+
+
+def random_graph(n_nodes: int, n_edges: int, seed: int = 0, *, power: float = 0.8) -> CSRGraph:
+    """Skewed-degree random graph (preferential-attachment-ish) in CSR.
+
+    Degree skew matters: uniform graphs hide the load imbalance that real
+    neighbor samplers and segment_sums must survive.
+    """
+    g = _rng(seed)
+    # Power-law-ish destination preference.
+    dst_pref = (g.random(n_edges) ** (1.0 / max(power, 1e-3)) * n_nodes).astype(np.int64)
+    dst = np.minimum(dst_pref, n_nodes - 1)
+    src = g.integers(0, n_nodes, n_edges)
+    order = np.argsort(src, kind="stable")
+    src, dst = src[order], dst[order]
+    indptr = np.zeros(n_nodes + 1, np.int64)
+    np.add.at(indptr, src + 1, 1)
+    indptr = np.cumsum(indptr)
+    return CSRGraph(indptr=indptr, indices=dst.astype(np.int32))
+
+
+def neighbor_sample(
+    graph: CSRGraph,
+    seeds: np.ndarray,
+    fanouts: tuple[int, ...],
+    seed: int = 0,
+    step: int = 0,
+) -> dict:
+    """GraphSAGE fanout sampling with STATIC shapes.
+
+    Returns a dict with, per hop h: edges (src, dst) of size
+    len(seeds) * prod(fanouts[:h+1]), plus the deduplicated node list and a
+    relabeling so the jit side sees contiguous [0, n_sub) node ids:
+
+      nodes:      [n_pad] int32 original node ids (padded with -1)
+      node_mask:  [n_pad] bool
+      src/dst:    [sum_h E_h] int32 relabeled edge endpoints (padding edges
+                  are self-loops at 0, which the GNN masks via src == dst)
+      seeds_local:[len(seeds)] positions of the seed nodes in ``nodes``
+    """
+    g = _rng(seed, step)
+    frontier = seeds.astype(np.int64)
+    all_src: list[np.ndarray] = []
+    all_dst: list[np.ndarray] = []
+    visited = [seeds.astype(np.int64)]
+    for f in fanouts:
+        deg = graph.degree(frontier)
+        # sample-with-replacement offsets; degree-0 nodes self-loop.
+        offs = (g.random((len(frontier), f)) * np.maximum(deg, 1)[:, None]).astype(np.int64)
+        nbr = graph.indices[np.minimum(graph.indptr[frontier][:, None] + offs,
+                                       len(graph.indices) - 1)]
+        nbr = np.where(deg[:, None] > 0, nbr, frontier[:, None].astype(np.int32))
+        src = nbr.reshape(-1).astype(np.int64)  # messages flow nbr -> frontier
+        dst = np.repeat(frontier, f)
+        all_src.append(src)
+        all_dst.append(dst)
+        frontier = src
+        visited.append(src)
+
+    nodes, inv = np.unique(np.concatenate(visited), return_inverse=True)
+    # Static padding: the worst case is all sampled nodes distinct.
+    n_pad = int(len(seeds) * np.prod([1] + [f + 1 for f in fanouts]))
+    n_pad = max(n_pad, len(nodes))
+    pad_nodes = np.full(n_pad, -1, np.int32)
+    pad_nodes[: len(nodes)] = nodes.astype(np.int32)
+
+    relabel = {}
+    counts = [len(v) for v in visited]
+    splits = np.split(inv, np.cumsum(counts)[:-1])
+    seeds_local = splits[0].astype(np.int32)
+    src_rel = np.concatenate([s for s in splits[1:]]).astype(np.int32) if fanouts else np.zeros(0, np.int32)
+    dst_parts = []
+    # dst nodes of hop h are drawn from visited[:h+1]; relabel via searchsorted.
+    for h, dsts in enumerate(all_dst):
+        dst_parts.append(np.searchsorted(nodes, dsts).astype(np.int32))
+    dst_rel = np.concatenate(dst_parts) if dst_parts else np.zeros(0, np.int32)
+
+    return {
+        "nodes": pad_nodes,
+        "node_mask": pad_nodes >= 0,
+        "src": src_rel,
+        "dst": dst_rel,
+        "seeds_local": seeds_local,
+    }
+
+
+# ---------------------------------------------------------------------------
+# kNN / radius graph construction (paper's engine feeding the GNN).
+# ---------------------------------------------------------------------------
+
+
+def knn_graph(positions, k: int, *, exclude_self: bool = True, impl: str = "jnp"):
+    """Directed kNN edge list (src -> dst means src is a neighbor of dst).
+
+    positions: [N, 3] array-like.  Returns (src [N*k], dst [N*k]) int32.
+    Runs the paper's all-pairs solver — O(N^2 d) tiled, not a python loop.
+    """
+    import jax.numpy as jnp
+
+    from repro.core.knn import knn_allpairs
+
+    pos = jnp.asarray(positions, jnp.float32)
+    n = pos.shape[0]
+    res = knn_allpairs(pos, k, distance="sqeuclidean", impl=impl,
+                       gsize=min(512, max(128, n)), exclude_self=exclude_self)
+    dst = jnp.repeat(jnp.arange(n, dtype=jnp.int32), res.indices.shape[1])
+    src = res.indices.reshape(-1)
+    # Padding entries (idx -1, when k > n-1) become self-loops (masked in GNN).
+    src = jnp.where(src < 0, dst, src)
+    return np.asarray(src), np.asarray(dst)
+
+
+def radius_graph(positions, cutoff: float, max_neighbors: int, **kw):
+    """Edges within ``cutoff`` (NequIP neighbor list), k-capped, padded.
+
+    kNN with k = max_neighbors, then distance-filtered; pairs beyond cutoff
+    degrade to self-loops, keeping the shape static.
+    """
+    import jax.numpy as jnp
+
+    from repro.core.knn import knn_allpairs
+
+    pos = jnp.asarray(positions, jnp.float32)
+    n = pos.shape[0]
+    k = min(max_neighbors, max(n - 1, 1))
+    res = knn_allpairs(pos, k, distance="sqeuclidean",
+                       gsize=min(512, max(128, n)), exclude_self=True, **kw)
+    dst = jnp.repeat(jnp.arange(n, dtype=jnp.int32), k)
+    src = res.indices.reshape(-1)
+    ok = (res.distances.reshape(-1) <= cutoff * cutoff) & (src >= 0)
+    src = jnp.where(ok, src, dst)
+    return np.asarray(src), np.asarray(dst)
+
+
+def molecule_batch(batch: int, n_nodes: int, n_edges: int, n_species: int = 16,
+                   seed: int = 0, step: int = 0) -> dict:
+    """Pack ``batch`` random molecules into one graph by index offsetting.
+
+    Positions are jittered lattice points (so neighbor structure is physical);
+    edges come from the radius graph per molecule, padded to n_edges each.
+    Energies/forces follow a planted harmonic-pair potential so the loss is
+    learnable (see tests/test_gnn.py::test_molecule_train_decreases_loss).
+    """
+    g = _rng(seed, step)
+    side = int(np.ceil(n_nodes ** (1 / 3)))
+    lat = np.stack(np.meshgrid(*([np.arange(side)] * 3), indexing="ij"), -1).reshape(-1, 3)
+
+    pos_all, spec_all, src_all, dst_all, e_all, f_all, gid_all = [], [], [], [], [], [], []
+    for b in range(batch):
+        pick = g.permutation(len(lat))[:n_nodes]
+        pos = 1.8 * lat[pick].astype(np.float32) + 0.2 * g.standard_normal((n_nodes, 3), dtype=np.float32)
+        spec = g.integers(0, n_species, n_nodes).astype(np.int32)
+        # all-pairs edges within cutoff 3.0, capped to n_edges
+        d2 = ((pos[:, None] - pos[None, :]) ** 2).sum(-1)
+        np.fill_diagonal(d2, np.inf)
+        ii, jj = np.nonzero(d2 < 9.0)
+        order = np.argsort(d2[ii, jj])[:n_edges]
+        src = np.full(n_edges, 0, np.int32)
+        dst = np.full(n_edges, 0, np.int32)
+        src[: len(order)] = ii[order]
+        dst[: len(order)] = jj[order]
+        # planted potential: harmonic springs on the TRUE edges
+        diff = pos[src[: len(order)]] - pos[dst[: len(order)]]
+        r = np.linalg.norm(diff, axis=1)
+        e = 0.5 * ((r - 1.8) ** 2).sum()
+        fvec = np.zeros((n_nodes, 3), np.float32)
+        pair_f = ((r - 1.8) / np.maximum(r, 1e-9))[:, None] * diff
+        np.add.at(fvec, src[: len(order)], -pair_f)
+        np.add.at(fvec, dst[: len(order)], pair_f)
+        pos_all.append(pos)
+        spec_all.append(spec)
+        src_all.append(src + b * n_nodes)
+        dst_all.append(dst + b * n_nodes)
+        e_all.append(e)
+        f_all.append(fvec)
+        gid_all.append(np.full(n_nodes, b, np.int32))
+
+    return {
+        "positions": np.concatenate(pos_all),
+        "node_input": np.concatenate(spec_all),
+        "edges": (np.concatenate(src_all), np.concatenate(dst_all)),
+        "energy": np.asarray(e_all, np.float32),
+        "forces": np.concatenate(f_all),
+        "node_graph": np.concatenate(gid_all),
+        "n_graphs": batch,
+    }

@@ -1,0 +1,117 @@
+"""Deterministic synthetic data generators (vectors, tokens, click logs).
+
+The kNN vector generator mirrors the paper's experiment (Sect. 7: "the data
+is generated randomly", d = 256) plus a clustered mode that mimics the
+post-SVD preference vectors of the paper's recommender-system motivation —
+clustered data exercises the threshold-skip path far more than uniform noise.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def _rng(seed: int, step: int = 0) -> np.random.Generator:
+    return np.random.default_rng(np.random.SeedSequence([seed, step]))
+
+
+def host_slice(global_batch: int, n_hosts: int, host_id: int) -> slice:
+    per = global_batch // n_hosts
+    return slice(host_id * per, (host_id + 1) * per)
+
+
+# ---------------------------------------------------------------------------
+# kNN vectors (paper workload).
+# ---------------------------------------------------------------------------
+
+
+def random_vectors(n: int, d: int, seed: int = 0, dtype=np.float32) -> np.ndarray:
+    """The paper's Table-1 workload: i.i.d. random vectors."""
+    return _rng(seed).standard_normal((n, d), dtype=dtype)
+
+
+def clustered_vectors(
+    n: int, d: int, n_clusters: int = 64, spread: float = 0.15, seed: int = 0
+) -> np.ndarray:
+    """Recommender-like embeddings: gaussian mixture with tight clusters."""
+    g = _rng(seed)
+    centers = g.standard_normal((n_clusters, d), dtype=np.float32)
+    assign = g.integers(0, n_clusters, n)
+    return centers[assign] + spread * g.standard_normal((n, d), dtype=np.float32)
+
+
+def distribution_vectors(n: int, d: int, seed: int = 0) -> np.ndarray:
+    """Row-stochastic positive vectors (for KL / Hellinger distances)."""
+    g = _rng(seed)
+    x = g.gamma(1.0, 1.0, (n, d)).astype(np.float32) + 1e-6
+    return x / x.sum(axis=1, keepdims=True)
+
+
+# ---------------------------------------------------------------------------
+# LM token streams.
+# ---------------------------------------------------------------------------
+
+
+def token_stream(batch: int, seq_len: int, vocab: int, seed: int, step: int):
+    """One [B, S+1] window of a synthetic Zipf-ish token stream.
+
+    Returns dict(tokens [B,S], labels [B,S]) — next-token LM shift applied.
+    Zipf exponent 1.1 approximates natural-text unigram stats so that the
+    softmax/embedding access pattern (hot rows) is realistic.
+    """
+    g = _rng(seed, step)
+    raw = g.zipf(1.1, size=(batch, seq_len + 1)).astype(np.int64)
+    toks = np.minimum(raw - 1, vocab - 1).astype(np.int32)
+    return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+def lm_batch(batch: int, seq_len: int, vocab: int, seed: int = 0, step: int = 0):
+    return token_stream(batch, seq_len, vocab, seed, step)
+
+
+# ---------------------------------------------------------------------------
+# Click logs (recsys).
+# ---------------------------------------------------------------------------
+
+
+def recsys_batch(arch: str, batch: int, cfg, seed: int = 0, step: int = 0) -> dict:
+    """One training/serving batch for the given recsys architecture.
+
+    Click labels are generated from a planted logistic model over a few
+    hashed id buckets, so CTR losses actually *decrease* during the examples'
+    training runs (pure-noise labels would plateau at ln 2).
+    """
+    g = _rng(seed, step)
+
+    def planted_labels(ids: np.ndarray) -> np.ndarray:
+        w = ((ids.astype(np.int64) * 2654435761) % 97 < 33).astype(np.float32)  # hidden pattern
+        logit = w.mean(axis=1) * 4.0 - 2.0
+        p = 1.0 / (1.0 + np.exp(-logit))
+        return (g.random(len(p)) < p).astype(np.float32)
+
+    if arch == "dlrm-rm2":
+        sizes = np.asarray(cfg.sizes())
+        sparse = (g.random((batch, cfg.n_sparse)) ** 2 * sizes).astype(np.int32)
+        return {
+            "dense": g.standard_normal((batch, cfg.n_dense), dtype=np.float32),
+            "sparse": sparse,
+            "labels": planted_labels(sparse),
+        }
+    if arch == "xdeepfm":
+        sizes = np.asarray(cfg.sizes())
+        sparse = (g.random((batch, cfg.n_sparse)) ** 2 * sizes).astype(np.int32)
+        return {"sparse": sparse, "labels": planted_labels(sparse)}
+    if arch == "bst":
+        hist = (g.random((batch, cfg.seq_len - 1)) ** 2 * cfg.n_items).astype(np.int32)
+        target = (g.random((batch,)) ** 2 * cfg.n_items).astype(np.int32)
+        others = (g.random((batch, cfg.n_other)) * np.asarray(cfg.sizes())).astype(np.int32)
+        return {
+            "hist": hist,
+            "target": target,
+            "others": others,
+            "labels": planted_labels(np.concatenate([hist, target[:, None]], 1)),
+        }
+    if arch == "two-tower-retrieval":
+        user = (g.random((batch, cfg.n_user_fields)) ** 2 * np.asarray(cfg.u_sizes())).astype(np.int32)
+        item = (g.random((batch, cfg.n_item_fields)) ** 2 * np.asarray(cfg.i_sizes())).astype(np.int32)
+        return {"user": user, "item": item}
+    raise KeyError(arch)

@@ -1,0 +1,9 @@
+"""Distribution layer: logical-axis sharding rules + step factories."""
+from repro.distributed.sharding import (  # noqa: F401
+    AxisRules,
+    axis_rules,
+    constrain,
+    current_rules,
+    logical_to_spec,
+    spec_tree_for_params,
+)

@@ -1,0 +1,164 @@
+"""Logical-axis sharding: one rule table maps model-declared axis names to
+physical mesh axes, with divisibility-aware fallback.
+
+Models annotate every parameter dimension and key activations with *logical*
+names ("batch", "fsdp", "tensor", "expert", ...).  A single ``AxisRules``
+table — chosen per mesh at launch — resolves those names to physical mesh
+axes.  Resolution checks divisibility: if a dimension does not divide by the
+product of the mapped mesh axis sizes, the dimension falls back to replicated
+(None) instead of failing at compile time.  This is what lets e.g. a 4-way
+GQA ``kv_heads`` axis silently replicate on a 16-way ``model`` axis while a
+128-way ``expert`` axis shards.
+
+This mirrors the MaxText / flax-linen "logical axis" pattern without any
+framework dependency; ``constrain`` is the in-model annotation point
+(``with_sharding_constraint`` under a mesh, identity otherwise).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Mapping, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.nn import Param, is_param
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisRules:
+    """Logical-name → physical-mesh-axes mapping for one mesh.
+
+    ``rules`` values are tuples of physical axis names (a logical name may map
+    to several mesh axes, e.g. fsdp -> ("pod", "data")).  ``mesh`` is needed
+    for divisibility checks and to build NamedShardings.
+    """
+
+    mesh: Mesh
+    rules: Mapping[str, tuple[str, ...]]
+
+    def physical(self, logical: str | None, dim: int | None = None):
+        """Physical axes for one logical name; None if unmapped/indivisible."""
+        if logical is None:
+            return None
+        axes = self.rules.get(logical)
+        if not axes:
+            return None
+        size = int(np.prod([self.mesh.shape[a] for a in axes]))
+        if dim is not None and dim % size != 0:
+            # Divisibility-aware fallback: try prefixes of the axis tuple
+            # (e.g. ("pod","data") -> ("pod",)) before giving up.
+            for cut in range(len(axes) - 1, 0, -1):
+                sub = axes[:cut]
+                s = int(np.prod([self.mesh.shape[a] for a in sub]))
+                if dim % s == 0:
+                    return sub if len(sub) > 1 else sub[0]
+            return None
+        return axes if len(axes) > 1 else axes[0]
+
+    def spec(self, logical_axes: Sequence[str | None], shape=None) -> P:
+        """PartitionSpec for a tensor annotated with logical axis names.
+
+        A physical mesh axis may be claimed by only one dimension; later
+        claims fall back to replicated (keeps specs valid for e.g. an
+        activation annotated (batch, fsdp) when both map to "data").
+        """
+        used: set[str] = set()
+        parts = []
+        for i, name in enumerate(logical_axes):
+            dim = None if shape is None else shape[i]
+            phys = self.physical(name, dim)
+            flat = (
+                ()
+                if phys is None
+                else (phys,) if isinstance(phys, str) else tuple(phys)
+            )
+            if any(a in used for a in flat):
+                parts.append(None)
+                continue
+            used.update(flat)
+            parts.append(phys)
+        return P(*parts)
+
+    def sharding(self, logical_axes: Sequence[str | None], shape=None):
+        return NamedSharding(self.mesh, self.spec(logical_axes, shape))
+
+
+_LOCAL = threading.local()
+
+
+def current_rules() -> AxisRules | None:
+    return getattr(_LOCAL, "rules", None)
+
+
+@contextlib.contextmanager
+def axis_rules(rules: AxisRules | None):
+    """Context manager installing the rule table models see via ``constrain``."""
+    prev = getattr(_LOCAL, "rules", None)
+    _LOCAL.rules = rules
+    try:
+        yield rules
+    finally:
+        _LOCAL.rules = prev
+
+
+def constrain(x, logical_axes: Sequence[str | None]):
+    """Annotate an activation with logical axes (no-op outside axis_rules)."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    assert len(logical_axes) == x.ndim, (logical_axes, x.shape)
+    spec = rules.spec(logical_axes, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(rules.mesh, spec))
+
+
+def logical_to_spec(rules: AxisRules, axes, shape=None) -> P:
+    return rules.spec(axes, shape)
+
+
+def spec_tree_for_params(rules: AxisRules, params) -> dict:
+    """Map a Param pytree (or its axes tree) to a NamedSharding pytree."""
+
+    def one(p):
+        if is_param(p):
+            shape = getattr(p.value, "shape", None)
+            return rules.sharding(p.axes, shape)
+        return rules.sharding(p if isinstance(p, tuple) else (None,))
+
+    return jax.tree.map(one, params, is_leaf=is_param)
+
+
+# ---------------------------------------------------------------------------
+# Standard rule tables for the production meshes (see launch/mesh.py).
+# ---------------------------------------------------------------------------
+
+
+def make_rules(mesh: Mesh) -> AxisRules:
+    """Default rule table for (data, model) or (pod, data, model) meshes.
+
+    batch / fsdp span the data-parallel axes (incl. pod when present) —
+    ZeRO-3-style weight+optimizer sharding; tensor/expert/vocab span the
+    model axis; seq is sequence-parallelism over the data axis (long-context
+    decode, where batch cannot occupy it).
+    """
+    names = mesh.axis_names
+    dp: tuple[str, ...] = tuple(a for a in ("pod", "data") if a in names)
+    tp = ("model",) if "model" in names else ()
+    return AxisRules(
+        mesh=mesh,
+        rules={
+            "batch": dp,
+            "fsdp": dp,
+            "seq": ("data",) if "data" in names else (),
+            "kv_seq": tp,  # sequence-parallel decode: KV-cache seq over model
+            "tensor": tp,
+            "expert": tp,
+            "vocab": tp,
+            "kv_heads": tp,
+            "table": tp,  # recsys embedding-table rows
+            "ring": dp + tp,  # flattened axis for the kNN ring schedule
+        },
+    )

@@ -1,0 +1,447 @@
+"""pjit train/serve step factories — one per workload family.
+
+Every factory returns ``(step_fn, state_shardings, batch_shardings)`` where
+``step_fn`` is jitted with explicit in/out shardings derived from the model's
+logical axes (repro.distributed.sharding.AxisRules) and donates its state
+argument.  The same factory serves the single-device smoke tests (trivial
+mesh), the CPU examples, and the 512-chip dry-run — nothing is special-cased
+on device count.
+
+Train state = (param values, optimizer state [, EF-compression residuals]).
+Optimizer moments mirror parameter shardings by construction (ZeRO).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import AxisRules, axis_rules
+from repro.models.nn import is_param, split_params
+from repro.train import optim as O
+
+Array = jnp.ndarray
+
+
+class TrainState(NamedTuple):
+    params: Any  # value pytree (no Param wrappers inside jit)
+    opt: O.OptState
+
+
+@dataclasses.dataclass(frozen=True)
+class StepConfig:
+    optimizer: str = "adamw"
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    micro_batches: int = 1  # gradient accumulation over the batch dim
+    # Embedding tables ("table" logical axis) get ROW-WISE ADAGRAD instead
+    # of AdamW: optimizer state shrinks from 2 fp32 moments per element to
+    # one scalar per row, and untouched rows never move — the DLRM recipe
+    # (repro.train.optim.mixed_table_adamw).
+    table_rowwise: bool = True
+
+
+def _make_optimizer(sc: StepConfig, abstract_params=None) -> O.Optimizer:
+    if sc.optimizer != "adamw":
+        return O.sgdm()
+    if sc.table_rowwise and abstract_params is not None:
+        _, axes = split_params(abstract_params)
+        is_table = jax.tree.map(
+            lambda ax: isinstance(ax, tuple) and "table" in ax, axes,
+            is_leaf=lambda x: isinstance(x, tuple))
+        if any(jax.tree.leaves(is_table)):
+            return O.mixed_table_adamw(is_table, weight_decay=sc.weight_decay)
+    return O.adamw(weight_decay=sc.weight_decay)
+
+
+def param_shardings(rules: AxisRules, abstract_params):
+    """NamedSharding pytree for a Param pytree of ShapeDtypeStructs."""
+    values, axes = split_params(abstract_params)
+    return jax.tree.map(
+        lambda v, ax: rules.sharding(ax, v.shape), values, axes
+    ), values
+
+
+def state_shardings(rules: AxisRules, abstract_params):
+    p_shard, values = param_shardings(rules, abstract_params)
+    scalar = jax.sharding.NamedSharding(rules.mesh, jax.sharding.PartitionSpec())
+    opt = O.OptState(
+        step=scalar,
+        m=jax.tree.map(lambda s: s, p_shard),
+        v=jax.tree.map(lambda s: s, p_shard),
+    )
+    return TrainState(params=p_shard, opt=opt)
+
+
+def init_state(optimizer: O.Optimizer, params) -> TrainState:
+    values, _ = split_params(params)
+    return TrainState(params=values, opt=optimizer.init(values))
+
+
+def _microbatch(loss_fn, batch, values, n_micro: int):
+    """Gradient accumulation: mean loss/grads over ``n_micro`` batch slices."""
+    if n_micro == 1:
+        return jax.value_and_grad(loss_fn, has_aux=True)(values)
+
+    def slice_batch(b, i):
+        def cut(x):
+            if hasattr(x, "shape") and x.ndim >= 1 and x.shape[0] % n_micro == 0:
+                mb = x.shape[0] // n_micro
+                return jax.lax.dynamic_slice_in_dim(x, i * mb, mb, 0)
+            return x
+        return jax.tree.map(cut, b)
+
+    def acc_step(carry, i):
+        (l_acc, m_acc, g_acc) = carry
+        (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(
+            values, slice_batch(batch, i)
+        )
+        g_acc = jax.tree.map(lambda a, b: a + b, g_acc, g)
+        m_acc = jax.tree.map(lambda a, b: a + b, m_acc, m)
+        return (l_acc + l, m_acc, g_acc), None
+
+    zero_g = jax.tree.map(lambda v: jnp.zeros(v.shape, jnp.float32), values)
+    (l0, m0), _ = jax.eval_shape(
+        lambda v: jax.value_and_grad(loss_fn, has_aux=True)(v, slice_batch(batch, 0)),
+        values,
+    )
+    zero_m = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), m0)
+    (l, m, g), _ = jax.lax.scan(
+        acc_step, (jnp.zeros((), jnp.float32), zero_m, zero_g),
+        jnp.arange(n_micro),
+    )
+    inv = 1.0 / n_micro
+    return (l * inv, jax.tree.map(lambda x: x * inv, m)), jax.tree.map(
+        lambda x: x * inv, g
+    )
+
+
+def make_train_step(
+    loss_fn: Callable[[Any, Any], tuple[Array, dict]],
+    abstract_params,
+    rules: AxisRules,
+    batch_axes: dict[str, tuple],
+    sc: StepConfig,
+):
+    """Generic pjit train step.
+
+    ``loss_fn(values, batch) -> (loss, metrics)`` — model-family specific.
+    ``batch_axes``: logical axes per batch key, e.g. {"tokens": ("batch", None)}.
+    """
+    optimizer = _make_optimizer(sc, abstract_params)
+    schedule = O.warmup_cosine(sc.peak_lr, sc.warmup_steps, sc.total_steps)
+    st_shard = state_shardings(rules, abstract_params)
+
+    def batch_sharding_of(batch):
+        scalar = jax.sharding.NamedSharding(
+            rules.mesh, jax.sharding.PartitionSpec()
+        )
+
+        def one(path_key, x):
+            nd = getattr(x, "ndim", 0)
+            if nd == 0:
+                return scalar
+            ax = tuple(batch_axes.get(path_key) or ())
+            ax = ax[:nd] + (None,) * (nd - len(ax))
+            return rules.sharding(ax, getattr(x, "shape", None))
+
+        return {k: jax.tree.map(lambda x, kk=k: one(kk, x), v)
+                for k, v in batch.items()}
+
+    def step(state: TrainState, batch) -> tuple[TrainState, dict]:
+        with axis_rules(rules):
+            if sc.micro_batches == 1:
+                (loss, metrics), grads = jax.value_and_grad(
+                    lambda v: loss_fn(v, batch), has_aux=True
+                )(state.params)
+            else:
+                (loss, metrics), grads = _microbatch(
+                    lambda v, b: loss_fn(v, b), batch, state.params,
+                    sc.micro_batches,
+                )
+            if sc.grad_clip > 0:
+                grads, gnorm = O.clip_by_global_norm(grads, sc.grad_clip)
+                metrics = dict(metrics, grad_norm=gnorm)
+            lr = schedule(state.opt.step)
+            new_p, new_opt = optimizer.update(grads, state.opt, state.params, lr)
+            metrics = dict(metrics, lr=lr)
+            return TrainState(new_p, new_opt), metrics
+
+    def jitted(batch_example):
+        b_shard = batch_sharding_of(batch_example)
+        return jax.jit(
+            step,
+            in_shardings=(st_shard, b_shard),
+            out_shardings=(st_shard, None),
+            donate_argnums=(0,),
+        )
+
+    return step, jitted, st_shard, optimizer
+
+
+# ---------------------------------------------------------------------------
+# Family-specific loss closures + batch axes.
+# ---------------------------------------------------------------------------
+
+
+def lm_loss(cfg):
+    from repro.models import transformer as Tr
+
+    def loss(values, batch):
+        return Tr.loss_fn(values, batch, cfg)
+
+    axes = {"tokens": ("batch", None), "labels": ("batch", None),
+            "loss_mask": ("batch", None)}
+    return loss, axes
+
+
+def gnn_potential_loss(cfg, n_graphs: int = 1):
+    from repro.models import gnn as G
+
+    def loss(values, batch):
+        # n_graphs is a segment count -> must be static (closure, not batch).
+        return G.loss_fn(values, dict(batch, n_graphs=n_graphs), cfg)
+
+    axes = {
+        "positions": (None, None),  # nodes replicated; edges carry the scale
+        "node_input": (None,) ,
+        "edges": ("batch",),  # applied leaf-wise to (src, dst)
+        "forces": (None, None),
+        "energy": (None,),
+        "node_graph": (None,),
+        "node_mask": (None,),
+    }
+    return loss, axes
+
+
+def gnn_classifier_loss(cfg, n_classes: int):
+    from repro.models import gnn as G
+
+    def loss(values, batch):
+        head = values["cls_head"]
+        l = G.node_classifier_loss({k: v for k, v in values.items() if k != "cls_head"},
+                                   batch, cfg, n_classes, head)
+        return l, {"loss": l}
+
+    axes = {
+        "positions": (None, None),
+        "node_input": (None, None),
+        "edges": ("batch",),
+        "labels": (None,),
+        "label_mask": (None,),
+    }
+    return loss, axes
+
+
+def recsys_loss(arch: str, cfg):
+    from repro.models import recsys as R
+
+    if arch == "two-tower-retrieval":
+        def loss(values, batch):
+            return R.two_tower_loss(values, batch, cfg)
+        axes = {"user": ("batch", None), "item": ("batch", None), "logq": ("batch",)}
+        return loss, axes
+
+    logit_fn = R.LOGIT_FNS[arch]
+
+    def loss(values, batch):
+        logits = logit_fn(values, batch, cfg)
+        return R.bce_loss(logits, batch["labels"])
+
+    axes = {"dense": ("batch", None), "sparse": ("batch", None),
+            "hist": ("batch", None), "target": ("batch",),
+            "others": ("batch", None), "labels": ("batch",)}
+    return loss, axes
+
+
+# ---------------------------------------------------------------------------
+# Serve steps.
+# ---------------------------------------------------------------------------
+
+
+def make_lm_decode_step(cfg, rules: AxisRules, abstract_params,
+                        seq_parallel: bool = False):
+    """One-token decode against a (ring) KV cache — the decode_* cells.
+
+    ``seq_parallel=True`` (flash-decoding): the cache SEQUENCE axis is
+    sharded over "model" instead of replicating it; each model rank computes
+    flash accumulators (m, l, o) over its slot range and the exact merge is
+    two tiny psums + one pmax.  This is what makes a 32k-token cache at
+    batch 128 fit 16 GB/chip for the full-attention archs (EXPERIMENTS.md
+    §Perf: yi-6b 16.1 -> ~1 GiB/dev, qwen3 24.2 -> ~1.6 GiB/dev), at the
+    price of replicating q heads inside the attention (q is [B,1,Hq,D] — a
+    few hundred KB).
+    """
+    import functools as ft
+
+    from jax.sharding import PartitionSpec as P
+
+    from repro.models import attention as A
+    from repro.models import transformer as Tr
+
+    p_shard, _ = param_shardings(rules, abstract_params)
+    mesh = rules.mesh
+
+    def cache_spec(shape):
+        return A.KVCache(
+            k=rules.sharding((None, "batch") +
+                             (("kv_seq", "kv_heads", None) if seq_parallel
+                              else ("seq", "kv_heads", None)), shape.k.shape),
+            v=rules.sharding((None, "batch") +
+                             (("kv_seq", "kv_heads", None) if seq_parallel
+                              else ("seq", "kv_heads", None)), shape.v.shape),
+            pos=rules.sharding(("batch",), shape.pos.shape),
+        )
+
+    def make_sp_attn(batch: int, capacity: int):
+        dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        bspec = dp if (dp and batch % int(
+            __import__("numpy").prod([mesh.shape[a] for a in dp])) == 0) else None
+        qspec = P(bspec, None, None, None)
+        cspec = P(bspec, "model", None, None)
+
+        @ft.partial(jax.shard_map, mesh=mesh,
+                    in_specs=(qspec, cspec, cspec, P(bspec)),
+                    out_specs=qspec, check_vma=False)
+        def body(q_l, ck_l, cv_l, pos_l):
+            with axis_rules(None):  # no auto-sharding hints inside shard_map
+                r = jax.lax.axis_index("model")
+                c_loc = ck_l.shape[1]
+                k_pos, k_valid = A.cache_positions_range(
+                    pos_l + 1, capacity, r * c_loc, c_loc)
+                m, l, o = A.flash_mlo(
+                    q_l, ck_l, cv_l, q_pos=pos_l[:, None], k_pos=k_pos,
+                    window=cfg.sliding_window, k_valid=k_valid,
+                    kv_chunk=min(cfg.kv_chunk, c_loc),
+                    logits_soft_cap=cfg.logits_soft_cap)
+                m_g = jax.lax.pmax(m, "model")
+                alpha = jnp.exp(m - m_g)
+                l_g = jax.lax.psum(l * alpha, "model")
+                o_g = jax.lax.psum(o * alpha[..., None], "model")
+                return A.mlo_normalize(m_g, l_g, o_g, q_l.dtype)
+
+        return body
+
+    def step_with(attn_fn):
+        def step(values, cache, tokens):
+            with axis_rules(rules):
+                return Tr.decode_step(values, cache, tokens, cfg, attn_fn=attn_fn)
+        return step
+
+    def shardings_for(cache_example, tokens_example):
+        cs = cache_spec(cache_example)
+        ts = rules.sharding(("batch",), tokens_example.shape)
+        attn_fn = (make_sp_attn(cache_example.k.shape[1],
+                                cache_example.k.shape[2])
+                   if seq_parallel else None)
+        return jax.jit(
+            step_with(attn_fn),
+            in_shardings=(p_shard, cs, ts),
+            out_shardings=(None, cs),
+            donate_argnums=(1,),
+        )
+
+    return step_with(None), shardings_for, p_shard
+
+
+def make_lm_prefill_step(cfg, rules: AxisRules, abstract_params):
+    """Full-prompt prefill — the prefill_* cells."""
+    from repro.models import transformer as Tr
+
+    p_shard, _ = param_shardings(rules, abstract_params)
+
+    def step(values, tokens, cache):
+        with axis_rules(rules):
+            return Tr.prefill(values, tokens, cfg, cache)
+
+    def shardings_for(tokens_example, cache_example):
+        from repro.models import attention as A
+
+        cs = A.KVCache(
+            k=rules.sharding((None, "batch", "seq", "kv_heads", None),
+                             cache_example.k.shape),
+            v=rules.sharding((None, "batch", "seq", "kv_heads", None),
+                             cache_example.v.shape),
+            pos=rules.sharding(("batch",), cache_example.pos.shape),
+        )
+        ts = rules.sharding(("batch", None), tokens_example.shape)
+        return jax.jit(step, in_shardings=(p_shard, ts, cs),
+                       out_shardings=(None, cs), donate_argnums=(2,))
+
+    return step, shardings_for, p_shard
+
+
+def make_recsys_serve_step(arch: str, cfg, rules: AxisRules, abstract_params):
+    from repro.models import recsys as R
+
+    p_shard, _ = param_shardings(rules, abstract_params)
+    if arch == "two-tower-retrieval":
+        raise ValueError("use make_retrieval_step for two-tower serving")
+    logit_fn = R.LOGIT_FNS[arch]
+
+    def step(values, batch):
+        with axis_rules(rules):
+            return jax.nn.sigmoid(logit_fn(values, batch, cfg))
+
+    def shardings_for(batch_example):
+        bs = {
+            k: rules.sharding(("batch",) + (None,) * (v.ndim - 1), v.shape)
+            for k, v in batch_example.items()
+        }
+        return jax.jit(step, in_shardings=(p_shard, bs), out_shardings=None)
+
+    return step, shardings_for, p_shard
+
+
+def make_retrieval_step(cfg, rules: AxisRules, abstract_params, *, k: int = 100,
+                        impl: str = "jnp"):
+    """two-tower retrieval_cand: embed the query, kNN-score 1M candidates.
+
+    The candidate database is sharded over the "table" (model) axis; the
+    query tower runs replicated; scoring + top-k runs on the paper's
+    query-sharded kNN engine with the butterfly merge (core.distributed).
+    """
+    from repro.core import distributed as KD
+    from repro.models import recsys as R
+
+    p_shard, _ = param_shardings(rules, abstract_params)
+    db_axes = rules.rules.get("table", ("model",))
+    db_axis = db_axes[0] if db_axes else "model"
+
+    def step(values, user_ids, db):
+        with axis_rules(rules):
+            u = R.user_embedding(values, user_ids)  # [Q, E] (Q small)
+
+        import functools as ft
+
+        from jax.sharding import PartitionSpec as P
+
+        n_db = db.shape[0]
+
+        @ft.partial(
+            jax.shard_map,
+            mesh=rules.mesh,
+            in_specs=(P(), P(db_axis)),
+            out_specs=(P(), P()),
+            check_vma=False,
+        )
+        def score(q_local, db_local):
+            return KD.query_sharded_shard(
+                q_local, db_local, db_axis=db_axis, k=k,
+                distance="neg_dot", n_db_real=n_db, impl=impl,
+            )
+        vals, idx = score(u, db)
+        return -vals, idx  # negated dot -> similarity scores
+
+    def shardings_for(user_example, db_example):
+        us = rules.sharding((None, None), user_example.shape)
+        dbs = rules.sharding(("table", None), db_example.shape)
+        return jax.jit(step, in_shardings=(p_shard, us, dbs), out_shardings=None)
+
+    return step, shardings_for, p_shard

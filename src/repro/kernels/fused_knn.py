@@ -1,0 +1,164 @@
+"""Pallas TPU kernel: FUSED distance + k-smallest selection (beyond-paper).
+
+The paper stores each grid's distance tile to global memory (phase 1) and
+re-reads it for selection (phase 2): 2 x O(GSIZE^2) HBM traffic per tile.  On
+TPU the distance tile can stay in VMEM and be folded straight into the running
+top-k buffer — the [n, n] intermediate never exists in HBM, so the kNN problem
+moves from memory-bound to compute(MXU)-bound.  This is the same insight as
+FlashAttention's online-softmax fusion, applied to selection instead of
+softmax (DESIGN.md, "beyond paper").
+
+Grid: (m/bm, n/bn, d/bd); the d-axis accumulates the MXU-form distance into a
+VMEM accumulator; at the last d-chunk the finished tile is masked (column
+padding + self-exclusion) and bitonic-merged into the per-row top-K scratch;
+at the last column tile the K-buffer is emitted.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import topk as T
+from repro.core.distances import get_distance, matmul_finalize
+from repro.kernels.stream_topk import _tile_reduce_topk
+
+
+def _kernel(K, nj, nk, bm, bn, alpha, finalize, n_real, exclude_self, threshold_skip):
+    def kernel(fx_ref, gy_ref, hx_ref, hy_ref, out_v_ref, out_i_ref, acc, run_v, run_i):
+        i, j, kd = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+        @pl.when(jnp.logical_and(j == 0, kd == 0))
+        def _init_run():
+            run_v[...] = jnp.full_like(run_v, T.POS_INF)
+            run_i[...] = jnp.full_like(run_i, -1)
+
+        @pl.when(kd == 0)
+        def _init_acc():
+            acc[...] = jnp.zeros_like(acc)
+
+        acc[...] += jax.lax.dot_general(
+            fx_ref[...],
+            gy_ref[...],
+            (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+        @pl.when(kd == nk - 1)
+        def _select():
+            tile = finalize(alpha * acc[...] + hx_ref[...] + hy_ref[...])
+            col = jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 1) + j * bn
+            tile = jnp.where(col >= n_real, T.POS_INF, tile)
+            if exclude_self:
+                row = jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 0) + i * bm
+                tile = jnp.where(row == col, T.POS_INF, tile)
+
+            def merge():
+                tv, ti = _tile_reduce_topk(tile, K, j * bn)
+                mv, mi = T.merge_topk_sorted(run_v[...], run_i[...], tv, ti)
+                run_v[...] = mv
+                run_i[...] = mi
+
+            if threshold_skip:
+                kth = run_v[:, K - 1 : K]
+
+                @pl.when(jnp.any(tile < kth))
+                def _maybe():
+                    merge()
+
+            else:
+                merge()
+
+            @pl.when(j == nj - 1)
+            def _emit():
+                out_v_ref[...] = run_v[...]
+                out_i_ref[...] = run_i[...]
+
+    return kernel
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "k",
+        "distance",
+        "bm",
+        "bn",
+        "bd",
+        "n_real",
+        "exclude_self",
+        "threshold_skip",
+        "interpret",
+    ),
+)
+def fused_knn_pallas(
+    fx: jnp.ndarray,
+    gy: jnp.ndarray,
+    hx: jnp.ndarray,
+    hy: jnp.ndarray,
+    k: int,
+    *,
+    distance: str = "sqeuclidean",
+    bm: int = 256,
+    bn: int = 512,
+    bd: int = 128,
+    n_real: int,
+    exclude_self: bool = False,
+    threshold_skip: bool = True,
+    interpret: bool = True,
+):
+    """Fused kNN over pre-mapped MXU-form operands (see ops.fused_knn).
+
+    Returns (values [m, K], indices [m, K]) ascending, K = next_pow2(k).
+    """
+    dist = get_distance(distance)
+    assert dist.matmul_form is not None, f"{distance} has no MXU form"
+    m, d = fx.shape
+    n = gy.shape[0]
+    K = T.next_pow2(k)
+    assert m % bm == 0 and n % bn == 0 and d % bd == 0
+    assert bn % K == 0 and (bn // K) & (bn // K - 1) == 0, (bn, K)
+    nj, nk = n // bn, d // bd
+    grid = (m // bm, nj, nk)
+    return pl.pallas_call(
+        _kernel(
+            K,
+            nj,
+            nk,
+            bm,
+            bn,
+            dist.matmul_form.alpha,
+            matmul_finalize(dist),
+            n_real,
+            exclude_self,
+            threshold_skip,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bd), lambda i, j, kd: (i, kd)),
+            pl.BlockSpec((bn, bd), lambda i, j, kd: (j, kd)),
+            pl.BlockSpec((bm, 1), lambda i, j, kd: (i, 0)),
+            pl.BlockSpec((1, bn), lambda i, j, kd: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, K), lambda i, j, kd: (i, 0)),
+            pl.BlockSpec((bm, K), lambda i, j, kd: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, K), jnp.float32),
+            jax.ShapeDtypeStruct((m, K), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bm, bn), jnp.float32),
+            pltpu.VMEM((bm, K), jnp.float32),
+            pltpu.VMEM((bm, K), jnp.int32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary"),
+        ),
+        interpret=interpret,
+        name="fused_knn",
+    )(fx, gy, hx, hy)

@@ -1,0 +1,185 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Handles operand padding to block multiples, MXU-form pre-mapping (f/g/h), and
+the interpret-mode switch: on the CPU container every kernel runs with
+``interpret=True`` (the Pallas interpreter executes the kernel body exactly);
+on a real TPU backend the same calls lower to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import topk as T
+from repro.core.distances import get_distance, matmul_finalize
+from repro.kernels import fused_knn as _fused
+from repro.kernels import pairwise_distance as _pd
+from repro.kernels import stream_topk as _st
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_axis(x, mult, axis, value=0.0):
+    pad = (-x.shape[axis]) % mult
+    if not pad:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def _mxu_operands(x, y, distance: str):
+    dist = get_distance(distance)
+    mf = dist.matmul_form
+    assert mf is not None, f"{distance} has no MXU form"
+    fx = mf.fx(x).astype(jnp.float32)
+    gy = mf.gy(y).astype(jnp.float32)
+    hx = mf.hx(x).astype(jnp.float32)[:, None]
+    hy = mf.hy(y).astype(jnp.float32)[None, :]
+    return fx, gy, hx, hy, mf.alpha
+
+
+@functools.partial(
+    jax.jit, static_argnames=("distance", "bm", "bn", "bd", "cumulative", "interpret")
+)
+def pairwise_distance(
+    x,
+    y,
+    *,
+    distance: str = "sqeuclidean",
+    bm: int = 256,
+    bn: int = 256,
+    bd: int = 128,
+    cumulative: bool = False,
+    interpret: bool | None = None,
+):
+    """[m, n] distance matrix via the Pallas tile kernel.
+
+    Pads m/n with +inf rows (callers slice), d with zero coordinates (safe for
+    every registry distance's f/g maps: they send 0 -> 0).
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    m, n = x.shape[0], y.shape[0]
+    dist = get_distance(distance)
+    if cumulative or dist.matmul_form is None:
+        if dist.pre is not None:
+            x = dist.pre(x)
+            y = dist.pre(y)
+        xp = _pad_axis(_pad_axis(x, bm, 0), bd, 1)
+        yp = _pad_axis(_pad_axis(y, bn, 0), bd, 1)
+        out = _pd.pairwise_distance_cumulative_pallas(
+            xp,
+            yp,
+            accumulate=dist.accumulate,
+            finalize=dist.finalize,
+            init=dist.init,
+            bm=bm,
+            bn=bn,
+            bd=bd,
+            interpret=interpret,
+        )
+        return out[:m, :n]
+    fx, gy, hx, hy, alpha = _mxu_operands(x, y, distance)
+    fx = _pad_axis(_pad_axis(fx, bm, 0), bd, 1)
+    gy = _pad_axis(_pad_axis(gy, bn, 0), bd, 1)
+    hx = _pad_axis(hx, bm, 0)
+    hy = _pad_axis(hy, bn, 1)
+    out = _pd.pairwise_distance_pallas(
+        fx,
+        gy,
+        hx,
+        hy,
+        alpha=alpha,
+        finalize=matmul_finalize(dist),
+        bm=bm,
+        bn=bn,
+        bd=bd,
+        interpret=interpret,
+    )
+    return out[:m, :n]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "bm", "bn", "threshold_skip", "interpret")
+)
+def stream_topk(
+    x,
+    k: int,
+    *,
+    bm: int = 256,
+    bn: int | None = None,
+    threshold_skip: bool = True,
+    interpret: bool | None = None,
+):
+    """Ascending k smallest per row of [m, n] + int32 indices, via Pallas."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    m, n = x.shape
+    K = T.next_pow2(k)
+    if bn is None:
+        bn = max(K, 512)
+    bm = min(bm, T.next_pow2(m))
+    xp = _pad_axis(_pad_axis(x, bm, 0, value=T.POS_INF), bn, 1, value=T.POS_INF)
+    vals, idx = _st.stream_topk_pallas(
+        xp, k, bm=bm, bn=bn, threshold_skip=threshold_skip, interpret=interpret
+    )
+    return vals[:m, :k], idx[:m, :k]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "distance", "tile_m", "tile_n", "bd", "exclude_self", "interpret"),
+)
+def fused_knn(
+    q,
+    db,
+    k: int,
+    *,
+    distance: str = "sqeuclidean",
+    tile_m: int = 256,
+    tile_n: int = 512,
+    bd: int = 128,
+    exclude_self: bool = False,
+    db_valid=None,
+    interpret: bool | None = None,
+):
+    """kNN of q against db with the fused Pallas kernel; returns KNNResult.
+
+    ``db_valid``: optional traced count of valid database rows — rows at index
+    >= db_valid get +inf distance (via the rank-1 ``hy`` epilogue term), which
+    lets SPMD callers mask ragged shards without a per-device static shape.
+    """
+    from repro.core.knn import KNNResult
+
+    if interpret is None:
+        interpret = not _on_tpu()
+    m, n = q.shape[0], db.shape[0]
+    K = T.next_pow2(k)
+    tile_n = max(tile_n, K)
+    fx, gy, hx, hy, _ = _mxu_operands(q, db, distance)
+    if db_valid is not None:
+        hy = jnp.where(jnp.arange(n)[None, :] < db_valid, hy, T.POS_INF)
+    fx = _pad_axis(_pad_axis(fx, tile_m, 0), bd, 1)
+    gy = _pad_axis(_pad_axis(gy, tile_n, 0), bd, 1)
+    hx = _pad_axis(hx, tile_m, 0)
+    hy = _pad_axis(hy, tile_n, 1)
+    vals, idx = _fused.fused_knn_pallas(
+        fx,
+        gy,
+        hx,
+        hy,
+        k,
+        distance=distance,
+        bm=tile_m,
+        bn=tile_n,
+        bd=bd,
+        n_real=n,
+        exclude_self=exclude_self,
+        interpret=interpret,
+    )
+    return KNNResult(vals[:m, :k], idx[:m, :k])

@@ -1,0 +1,34 @@
+"""Pure-jnp oracles for every Pallas kernel (tested via assert_allclose)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import topk as T
+from repro.core.distances import get_distance, matmul_finalize
+
+
+def pairwise_distance_ref(x, y, *, distance: str = "sqeuclidean", chunk=None):
+    """O(m n d) reference distance matrix via the cumulative dbar path."""
+    return get_distance(distance).pairwise(x, y, chunk=chunk)
+
+
+def pairwise_distance_mxu_ref(x, y, *, distance: str = "sqeuclidean"):
+    """Reference for the MXU rewrite path (same math the kernel uses)."""
+    dist = get_distance(distance)
+    return dist.matmul_form.pairwise(x, y, matmul_finalize(dist))
+
+
+def stream_topk_ref(x, k: int):
+    """Ascending k smallest per row + indices (lax.top_k)."""
+    vals, idx = T.topk_smallest(x, k)
+    return vals, idx
+
+
+def fused_knn_ref(q, db, k: int, *, distance: str = "sqeuclidean", exclude_self=False):
+    """Distance matrix + top-k, unfused."""
+    d = pairwise_distance_ref(q, db, distance=distance)
+    if exclude_self:
+        n = d.shape[0]
+        d = jnp.where(jnp.eye(n, dtype=bool), jnp.inf, d)
+    return stream_topk_ref(d, k)

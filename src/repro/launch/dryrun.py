@@ -1,0 +1,165 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS_EXTRA", "")
+)
+# ^ MUST precede any jax import (jax locks the device count on first init).
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this proves, without hardware:
+  * the sharding annotations are coherent (SPMD partitioning succeeds);
+  * the program fits per-device HBM (memory_analysis);
+  * and it records FLOPs / HBM bytes / collective wire bytes for §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-6b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --out results/dryrun.json
+
+Each invocation appends per-cell JSON records to --out (merged by key), so
+arch-level subprocess sweeps bound compile-cache memory.
+"""
+import argparse
+import json
+import time
+import traceback
+
+
+def run_cell(arch_id: str, shape: str, multi_pod: bool, *, keep_hlo: bool = False,
+             variant: str | None = None, unroll: bool = False):
+    import jax
+
+    from repro.distributed.sharding import make_rules
+    from repro.launch.hlo_stats import collect_stats
+    from repro.launch.mesh import make_production_mesh, mesh_devices
+
+    from repro.configs import registry as REG
+
+    if unroll:
+        # Accounting mode: XLA cost_analysis counts while-loop bodies ONCE;
+        # unrolling every model scan makes FLOPs/bytes/collective counts
+        # trip-count-true (slower compiles — used for §Roofline only).
+        from repro.models.nn import set_unroll_scans
+
+        set_unroll_scans(True)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = make_rules(mesh)
+    arch = REG.get(arch_id)
+    cell = {c.name: c for c in arch.shapes}[shape]
+    if cell.kind == "skip":
+        return {"arch": arch_id, "shape": shape,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skip", "reason": cell.reason}
+
+    n_dev = mesh_devices(mesh)
+    rec = {"arch": arch_id, "shape": shape + (f"+{variant}" if variant else ""),
+           "mesh": "multi" if multi_pod else "single", "devices": n_dev,
+           "unrolled": unroll}
+    t0 = time.time()
+    kw = {"variant": variant} if variant else {}
+    fn, args = arch.build(rules, shape, smoke=False, **kw)
+    lowered = fn.lower(*args)
+    rec["lower_s"] = round(time.time() - t0, 1)
+    t1 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t1, 1)
+
+    mem = compiled.memory_analysis()
+    if mem is not None:
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "peak_memory_in_bytes"):
+            v = getattr(mem, k, None)
+            if v is not None:
+                rec[k] = int(v)
+    cost = compiled.cost_analysis()
+    if cost:
+        rec["flops"] = float(cost.get("flops", 0.0))
+        rec["bytes_accessed"] = float(cost.get("bytes accessed", 0.0))
+        rec["transcendentals"] = float(cost.get("transcendentals", 0.0))
+
+    hlo = compiled.as_text()
+    st = collect_stats(hlo, n_dev)
+    rec["collective_counts"] = st.counts
+    rec["collective_result_bytes"] = st.result_bytes
+    rec["collective_wire_bytes_per_device"] = st.wire_bytes_per_device
+    rec["hlo_chars"] = len(hlo)
+    rec["status"] = "ok"
+    if keep_hlo:
+        rec["_hlo"] = hlo
+    return rec
+
+
+def merge_out(path: str, records: list[dict]):
+    data = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            data = json.load(f)
+    for r in records:
+        r = {k: v for k, v in r.items() if not k.startswith("_")}
+        data[f'{r["arch"]}|{r["shape"]}|{r["mesh"]}'] = r
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(tmp, "w") as f:
+        json.dump(data, f, indent=1, sort_keys=True)
+    os.replace(tmp, path)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", action="append", default=None)
+    ap.add_argument("--shape", action="append", default=None)
+    ap.add_argument("--mesh", choices=("single", "multi", "both"), default="single")
+    ap.add_argument("--all", action="store_true", help="every assigned cell")
+    ap.add_argument("--include-knn", action="store_true")
+    ap.add_argument("--out", default="benchmarks/results/dryrun.json")
+    ap.add_argument("--variant", default=None,
+                    help="build variant (e.g. 'sp' = sequence-parallel decode)")
+    ap.add_argument("--unroll", action="store_true",
+                    help="unroll model scans for trip-count-true accounting")
+    ap.add_argument("--verbose", action="store_true")
+    args = ap.parse_args()
+
+    from repro.configs import registry as REG
+
+    if args.all:
+        cells = [(a, s) for a, s, kind, _ in REG.all_cells(args.include_knn)]
+    else:
+        archs = args.arch or REG.ASSIGNED
+        cells = []
+        for a in archs:
+            shapes = args.shape or [c.name for c in REG.get(a).shapes]
+            cells += [(a, s) for s in shapes]
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    records, failures = [], 0
+    for a, s in cells:
+        for mp in meshes:
+            tag = f"{a}/{s}/{'multi' if mp else 'single'}"
+            try:
+                rec = run_cell(a, s, mp, variant=args.variant, unroll=args.unroll)
+            except Exception as e:  # a failing cell is a bug; record & continue
+                failures += 1
+                rec = {"arch": a, "shape": s,
+                       "mesh": "multi" if mp else "single",
+                       "status": "fail", "error": f"{type(e).__name__}: {e}",
+                       "trace": traceback.format_exc()[-2000:]}
+            records.append(rec)
+            if rec["status"] == "ok":
+                gb = rec.get("peak_memory_in_bytes", 0) / 2**30
+                print(f"[dryrun] {tag:55s} OK  compile={rec['compile_s']:7.1f}s "
+                      f"peak={gb:6.2f} GiB/dev  flops={rec.get('flops', 0):.3e}",
+                      flush=True)
+            elif rec["status"] == "skip":
+                print(f"[dryrun] {tag:55s} SKIP ({rec['reason'][:60]}...)", flush=True)
+            else:
+                print(f"[dryrun] {tag:55s} FAIL {rec['error'][:120]}", flush=True)
+                if args.verbose:
+                    print(rec["trace"])
+    merge_out(args.out, records)
+    print(f"[dryrun] wrote {args.out}; {failures} failures")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

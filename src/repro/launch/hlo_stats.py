@@ -1,0 +1,116 @@
+"""Collective-traffic accounting from compiled HLO text.
+
+``compiled.cost_analysis()`` reports FLOPs and HBM bytes but NOT collective
+bytes; those are recovered by scanning the post-SPMD optimized HLO
+(``compiled.as_text()``) for collective ops and summing their result-shape
+bytes.  Per-op wire factors (ring algorithms, P = participants):
+
+  all-gather          result bytes x (P-1)/P      (each device receives all
+                                                   shards but its own)
+  reduce-scatter      input  bytes x (P-1)/P      (~= result x (P-1))
+  all-reduce          result bytes x 2(P-1)/P     (RS + AG)
+  all-to-all          result bytes x (P-1)/P
+  collective-permute  result bytes                (one hop)
+
+The per-device wire-byte total divided by link bandwidth is the roofline
+"collective" term.  Async pairs (``-start``/``-done``) are counted once.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "ragged-all-to-all",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_REPL_GROUPS_RE = re.compile(r"replica_groups=\{(.*?)\}")
+_REPL_GROUPS_ALT = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum byte sizes of every shape literal in a type string like
+    ``f32[16,128]`` or ``(bf16[2,4]{1,0}, u32[])``."""
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict
+    result_bytes: dict  # raw summed result-shape bytes per op kind
+    wire_bytes_per_device: float  # ring-model wire traffic per device
+
+    def total_result_bytes(self) -> int:
+        return sum(self.result_bytes.values())
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _REPL_GROUPS_ALT.search(line)
+    if m:
+        return int(m.group(2))  # replica_groups=[ngroups,size]
+    m = _REPL_GROUPS_RE.search(line)
+    if m:
+        first = m.group(1).split("}")[0].strip("{} ")
+        if first:
+            return len([x for x in first.split(",") if x.strip() != ""])
+    return default
+
+
+def collect_stats(hlo_text: str, n_devices: int) -> CollectiveStats:
+    counts: dict[str, int] = {}
+    rbytes: dict[str, int] = {}
+    wire = 0.0
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if "=" not in s:
+            continue
+        # "%name = TYPE op-name(...)" — find the op token after the type.
+        m = re.search(
+            r"=\s+((?:\([^)]*\)|\S+))\s+(%?[\w-]+)", s
+        )
+        if not m:
+            continue
+        type_str, op = m.group(1), m.group(2).lstrip("%")
+        base = None
+        for c in _COLLECTIVES:
+            if op == c or op == c + "-start":
+                base = c
+                break
+            if op.startswith(c + "-done"):
+                base = None  # counted at -start
+                break
+        if base is None:
+            continue
+        b = _shape_bytes(type_str)
+        P = _group_size(s, n_devices)
+        counts[base] = counts.get(base, 0) + 1
+        rbytes[base] = rbytes.get(base, 0) + b
+        frac = (P - 1) / max(P, 1)
+        if base == "all-reduce":
+            wire += 2.0 * frac * b
+        elif base in ("all-gather", "all-to-all", "ragged-all-to-all"):
+            wire += frac * b
+        elif base == "reduce-scatter":
+            wire += frac * b * P  # result is the scattered shard
+        elif base == "collective-permute":
+            wire += float(b)
+    return CollectiveStats(counts=counts, result_bytes=rbytes,
+                           wire_bytes_per_device=wire)

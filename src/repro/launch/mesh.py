@@ -1,0 +1,38 @@
+"""Production meshes (TPU v5e pods).
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state — the dry-run sets XLA_FLAGS before first jax init and only then calls
+``make_production_mesh``.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256-chip v5e pod; multi_pod stacks 2 pods on a leading axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(shape))
+
+
+def make_host_mesh(model_parallel: int | None = None):
+    """Best-effort (data, model) mesh over whatever devices exist (examples,
+    tests, CPU smoke runs)."""
+    n = len(jax.devices())
+    if model_parallel is None:
+        model_parallel = 1
+        # prefer a square-ish split when devices allow
+        for m in (4, 2):
+            if n % m == 0 and n >= m * m:
+                model_parallel = m
+                break
+    assert n % model_parallel == 0, (n, model_parallel)
+    return jax.make_mesh((n // model_parallel, model_parallel), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)
+
+
+def mesh_devices(mesh) -> int:
+    return int(np.prod(list(mesh.shape.values())))

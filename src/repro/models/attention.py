@@ -1,0 +1,296 @@
+"""Attention substrate: RoPE, GQA/MQA, sliding windows, chunked softmax,
+KV caches (full + ring-buffer for SWA decode).
+
+All functions are pure; activations are annotated with logical axes via
+``repro.distributed.constrain`` so the same code serves single-device smoke
+tests and the 512-chip dry-run.
+
+Memory design (the part that must survive a 32k prefill on 16GB chips):
+  * the [Sq, Sk] mask is NEVER materialized — positions go in, the mask is
+    built per key-chunk inside the online-softmax scan;
+  * attention is chunked over keys with running (max, normalizer, output)
+    accumulators — the standard flash formulation in pure JAX;
+  * KV heads are repeated to the query head count *per chunk only*, which
+    keeps the score tensor cleanly sharded on the "tensor" (heads) axis while
+    the resident cache stays at n_kv heads.
+
+The paper's technique does not apply to attention (DESIGN.md
+§Arch-applicability) so no Pallas kernel is used here.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.nn import model_scan
+
+Array = jnp.ndarray
+
+NEG_INF = -1e30  # additive mask value (finite: keeps softmax NaN-free)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings.
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> Array:
+    """Inverse frequencies [head_dim // 2] (fp32)."""
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta**exponents)
+
+
+def apply_rope(x: Array, positions: Array, theta: float = 10000.0) -> Array:
+    """Rotate pairs (x[..., :d/2], x[..., d/2:]) by position-dependent angles.
+
+    x: [B, S, H, D]; positions: [B, S] int32.  Split-half convention (llama).
+    """
+    d = x.shape[-1]
+    inv = rope_frequencies(d, theta)  # [d/2]
+    angles = positions[..., None].astype(jnp.float32) * inv  # [B, S, d/2]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Core attention: GQA with online-softmax chunking over keys.
+# ---------------------------------------------------------------------------
+
+
+def _chunk_mask(q_pos, k_pos, window, k_valid):
+    """Additive fp32 mask [B, Sq, c] for one key chunk (built lazily)."""
+    dq = q_pos[:, :, None]  # [B, Sq, 1]
+    dk = k_pos[:, None, :]  # [B, 1, c]
+    ok = dk <= dq
+    if window is not None:
+        ok = ok & (dk > dq - window)
+    if k_valid is not None:
+        ok = ok & k_valid[:, None, :]
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def flash_mlo(
+    q: Array,  # [B, Sq, Hq, D]
+    k: Array,  # [B, Sk, Hkv, D]
+    v: Array,  # [B, Sk, Hkv, D]
+    *,
+    q_pos: Array,  # [B, Sq] absolute positions
+    k_pos: Array,  # [B, Sk]
+    window: int | None = None,
+    k_valid: Array | None = None,  # [B, Sk] live-slot mask (ring caches)
+    kv_chunk: int = 1024,
+    logits_soft_cap: float | None = None,
+) -> tuple[Array, Array, Array]:
+    """Un-normalized flash accumulators (max, normalizer, weighted output).
+
+    Returns fp32 (m [B,Sq,Hq], l [B,Sq,Hq], o [B,Sq,Hq,D]) — the mergeable
+    form: two partial (m,l,o) over disjoint key sets combine exactly
+    (sequence-parallel decode, repro.distributed.steps).  ``gqa_attention``
+    is the normalize-at-the-end wrapper.
+    """
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    G = Hq // Hkv
+    scale = 1.0 / jnp.sqrt(jnp.float32(D))
+    qf = q.astype(jnp.float32) * scale
+
+    kv_chunk = min(kv_chunk, Sk)
+    n_chunks = max(1, (Sk + kv_chunk - 1) // kv_chunk)
+    pad = n_chunks * kv_chunk - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=-1)
+        k_valid = (
+            jnp.pad(k_valid, ((0, 0), (0, pad)), constant_values=False)
+            if k_valid is not None
+            else jnp.pad(
+                jnp.ones((B, Sk), bool), ((0, 0), (0, pad)), constant_values=False
+            )
+        )
+    kc = jnp.moveaxis(k.reshape(B, n_chunks, kv_chunk, Hkv, D), 1, 0)
+    vc = jnp.moveaxis(v.reshape(B, n_chunks, kv_chunk, Hkv, D), 1, 0)
+    pc = jnp.moveaxis(k_pos.reshape(B, n_chunks, kv_chunk), 1, 0)
+    valc = (
+        jnp.moveaxis(k_valid.reshape(B, n_chunks, kv_chunk), 1, 0)
+        if k_valid is not None
+        else None
+    )
+
+    def chunk_step(carry, inputs):
+        m_run, l_run, o_run = carry  # [B,Sq,Hq], [B,Sq,Hq], [B,Sq,Hq,D]
+        if valc is None:
+            k_i, v_i, p_i = inputs
+            val_i = None
+        else:
+            k_i, v_i, p_i, val_i = inputs
+        # Per-chunk KV repeat: keeps scores sharded on the heads axis while
+        # the resident cache stays at Hkv heads.
+        k_r = jnp.repeat(k_i, G, axis=2).astype(jnp.float32)  # [B,c,Hq,D]
+        v_r = jnp.repeat(v_i, G, axis=2).astype(jnp.float32)
+        k_r = constrain(k_r, ("batch", None, "tensor", None))
+        v_r = constrain(v_r, ("batch", None, "tensor", None))
+        s = jnp.einsum("bqhd,bchd->bqhc", qf, k_r)  # [B,Sq,Hq,c] fp32
+        if logits_soft_cap is not None:
+            s = logits_soft_cap * jnp.tanh(s / logits_soft_cap)
+        mask = _chunk_mask(q_pos, p_i, window, val_i)  # [B,Sq,c]
+        s = s + mask[:, :, None, :]
+        s = constrain(s, ("batch", None, "tensor", None))
+        m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_run - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l_run * alpha + jnp.sum(p, axis=-1)
+        o_new = o_run * alpha[..., None] + jnp.einsum("bqhc,bchd->bqhd", p, v_r)
+        return (m_new, l_new, o_new), None
+
+    m0 = jnp.full((B, Sq, Hq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Sq, Hq), jnp.float32)
+    o0 = jnp.zeros((B, Sq, Hq, D), jnp.float32)
+    xs = (kc, vc, pc) if valc is None else (kc, vc, pc, valc)
+    if n_chunks == 1:
+        (m_run, l_run, o_run), _ = chunk_step(
+            (m0, l0, o0), jax.tree.map(lambda x: x[0], xs)
+        )
+    else:
+        (m_run, l_run, o_run), _ = model_scan(chunk_step, (m0, l0, o0), xs)
+    return m_run, l_run, o_run
+
+
+def mlo_normalize(m: Array, l: Array, o: Array, dtype) -> Array:
+    return (o / jnp.maximum(l[..., None], 1e-30)).astype(dtype)
+
+
+def mlo_merge(parts: "list[tuple[Array, Array, Array]]"):
+    """Exact merge of flash accumulators over disjoint key sets."""
+    m = parts[0][0]
+    for p in parts[1:]:
+        m = jnp.maximum(m, p[0])
+    l = sum(jnp.exp(pm - m) * pl for pm, pl, _ in parts)
+    o = sum(jnp.exp(pm - m)[..., None] * po for pm, _, po in parts)
+    return m, l, o
+
+
+def gqa_attention(
+    q: Array,  # [B, Sq, Hq, D]
+    k: Array,  # [B, Sk, Hkv, D]
+    v: Array,  # [B, Sk, Hkv, D]
+    *,
+    q_pos: Array,  # [B, Sq] absolute positions
+    k_pos: Array,  # [B, Sk]
+    window: int | None = None,
+    k_valid: Array | None = None,  # [B, Sk] live-slot mask (ring caches)
+    kv_chunk: int = 1024,
+    logits_soft_cap: float | None = None,
+) -> Array:
+    """Grouped-query attention, chunked online softmax, lazy masking.
+
+    Returns [B, Sq, Hq, D] in q.dtype.  Hq % Hkv == 0; score math fp32.
+    """
+    m, l, o = flash_mlo(q, k, v, q_pos=q_pos, k_pos=k_pos, window=window,
+                        k_valid=k_valid, kv_chunk=kv_chunk,
+                        logits_soft_cap=logits_soft_cap)
+    return mlo_normalize(m, l, o, q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# KV caches.
+# ---------------------------------------------------------------------------
+
+
+class KVCache(NamedTuple):
+    """Decode-time key/value cache.
+
+    ``k``/``v``: [L, B, C, Hkv, D] where C = cache capacity (= seq_len for
+    full attention, = min(seq_len, window) ring buffer for SWA).
+    ``pos``: [B] int32 — number of tokens already written (next position).
+    """
+
+    k: Array
+    v: Array
+    pos: Array
+
+
+def init_cache(
+    n_layers: int,
+    batch: int,
+    capacity: int,
+    n_kv: int,
+    head_dim: int,
+    dtype=jnp.bfloat16,
+) -> KVCache:
+    shape = (n_layers, batch, capacity, n_kv, head_dim)
+    return KVCache(
+        k=jnp.zeros(shape, dtype),
+        v=jnp.zeros(shape, dtype),
+        pos=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def cache_update_layer(
+    cache_k: Array,  # [B, C, Hkv, D] one layer's cache
+    cache_v: Array,
+    k_new: Array,  # [B, S_new, Hkv, D] (RoPE already applied)
+    v_new: Array,
+    pos: Array,  # [B] int32: write offset
+) -> tuple[Array, Array]:
+    """Write S_new tokens at ring positions (pos + i) % C.  Static shapes."""
+    B, C, Hkv, D = cache_k.shape
+    S_new = k_new.shape[1]
+    if S_new == C:
+        return k_new.astype(cache_k.dtype), v_new.astype(cache_v.dtype)
+    idx = (pos[:, None] + jnp.arange(S_new)[None, :]) % C  # [B, S_new]
+    bidx = jnp.broadcast_to(jnp.arange(B)[:, None], (B, S_new))
+    ck = cache_k.at[bidx, idx].set(k_new.astype(cache_k.dtype))
+    cv = cache_v.at[bidx, idx].set(v_new.astype(cache_v.dtype))
+    return ck, cv
+
+
+def cache_positions_range(pos: Array, capacity: int, offset, length: int):
+    """Absolute position + validity for ring slots [offset, offset+length)
+    of a cache with GLOBAL capacity ``capacity`` (sequence-parallel decode:
+    each shard passes its own offset).  Slot s was last written at
+    t = pos-1 - ((pos-1-s) mod C); valid iff 0 <= t."""
+    s = offset + jnp.arange(length)[None, :]
+    last = pos[:, None] - 1 - ((pos[:, None] - 1 - s) % capacity)
+    valid = (last >= 0) & (pos[:, None] > 0)
+    return last.astype(jnp.int32), valid
+
+
+def cache_positions(pos: Array, capacity: int) -> tuple[Array, Array]:
+    """Absolute position + validity of every ring slot."""
+    return cache_positions_range(pos, capacity, 0, capacity)
+
+
+def decode_attention_layer(
+    q: Array,  # [B, 1, Hq, D] (RoPE applied at absolute position pos)
+    cache_k: Array,  # [B, C, Hkv, D]  (new token already written)
+    cache_v: Array,
+    pos: Array,  # [B] position of the NEW token
+    *,
+    window: int | None,
+    kv_chunk: int = 2048,
+    logits_soft_cap: float | None = None,
+) -> Array:
+    """One-token attention against a (possibly ring) cache."""
+    C = cache_k.shape[1]
+    k_pos, k_valid = cache_positions(pos + 1, C)  # +1: new token written
+    q_pos = pos[:, None]  # [B, 1]
+    q = constrain(q, ("batch", None, "tensor", None))
+    return gqa_attention(
+        q,
+        cache_k,
+        cache_v,
+        q_pos=q_pos,
+        k_pos=k_pos,
+        window=window,
+        k_valid=k_valid,
+        kv_chunk=kv_chunk,
+        logits_soft_cap=logits_soft_cap,
+    )

@@ -1,0 +1,427 @@
+"""NequIP-style E(3)-equivariant message-passing network (arXiv:2101.03164).
+
+Irreps are carried in the *Cartesian* basis up to l_max = 2:
+
+  l=0  scalars   s : [N, C]
+  l=1  vectors   v : [N, 3, C]
+  l=2  traceless symmetric tensors  t : [N, 3, 3, C]
+
+Edge attributes are the Cartesian harmonics of the edge unit vector u
+(Y0 = 1, Y1 = u, Y2 = u u^T - I/3) and a Bessel radial basis with a smooth
+polynomial cutoff.  Every interaction block evaluates a fixed set of
+Clebsch-Gordan *paths* (l_in x l_edge -> l_out, realized as dot / cross /
+symmetrized-outer products — the Cartesian equivalents of the CG
+contractions), each weighted per-channel by an MLP of the radial basis, and
+aggregates messages with ``jax.ops.segment_sum`` over the destination node.
+This is the SpMM-free "gather -> tensor-product -> scatter-add" regime the
+kernel taxonomy prescribes for equivariant GNNs; JAX has no CSR sparse so the
+edge-index formulation IS the system (DESIGN.md §GNN).
+
+Equivariance (validated in tests/test_gnn.py): rotating the input positions
+rotates l=1/l=2 features, leaves scalars and the total energy invariant, and
+rotates forces ( = -dE/dpos via autodiff).
+
+Scale notes (ogb_products: 61.9M edges): edges are sharded over the
+data-parallel axes, channels over "tensor"; per-layer aggregation is a local
+segment_sum followed by one psum — see distributed/steps.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.nn import Param, is_param, lecun_init
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNConfig:
+    n_layers: int = 5
+    d_hidden: int = 32  # channels per irrep
+    l_max: int = 2
+    n_rbf: int = 8
+    cutoff: float = 5.0
+    d_feat: int = 0  # optional input node-feature dim (0 = species one-hot)
+    n_species: int = 16
+    radial_hidden: int = 32
+    avg_neighbors: float = 12.0  # aggregation normalizer (NequIP conv norm)
+    # Wire dtype for node features crossing mesh boundaries (all-gather at
+    # the channel-mix contraction + the cross-DP aggregation psum).  bf16
+    # halves the collective-bound cells' wire bytes (§Perf iteration 3 on
+    # ogb_products); accumulations (segment_sum) stay fp32.
+    feature_dtype: Any = jnp.float32
+
+    @property
+    def n_paths(self) -> int:
+        # (l_in, l_edge) -> l_out Cartesian CG paths enumerated in _messages:
+        # l<=1: 0x0->0, 1x1->0, 0x1->1, 1x0->1, 1x1->1 (5 paths);
+        # l=2 adds 2x2->0, 2x1->1, 0x2->2, 1x1->2, 2x0->2 (10 total).
+        return 10 if self.l_max >= 2 else 5
+
+
+# ---------------------------------------------------------------------------
+# Radial + angular bases.
+# ---------------------------------------------------------------------------
+
+
+def bessel_rbf(r: Array, n_rbf: int, cutoff: float) -> Array:
+    """sin(n pi r / rc) / r basis (NequIP eq. 8), fp32, shape [..., n_rbf]."""
+    r = jnp.maximum(r.astype(jnp.float32), 1e-9)
+    n = jnp.arange(1, n_rbf + 1, dtype=jnp.float32)
+    return jnp.sqrt(2.0 / cutoff) * jnp.sin(n * jnp.pi * r[..., None] / cutoff) / r[..., None]
+
+
+def poly_cutoff(r: Array, cutoff: float, p: int = 6) -> Array:
+    """XPLOR-style smooth cutoff envelope, 1 at r=0, 0 at r>=cutoff (C^2)."""
+    x = jnp.clip(r.astype(jnp.float32) / cutoff, 0.0, 1.0)
+    return (
+        1.0
+        - 0.5 * (p + 1.0) * (p + 2.0) * x**p
+        + p * (p + 2.0) * x ** (p + 1)
+        - 0.5 * p * (p + 1.0) * x ** (p + 2)
+    )
+
+
+def edge_harmonics(vec: Array) -> tuple[Array, Array, Array]:
+    """Cartesian Y0/Y1/Y2 of edge vectors [E, 3] -> ([E], [E,3], [E,3,3]).
+
+    Gradient-safe at vec = 0 (padding/self edges): sqrt(r^2 + eps) keeps the
+    backward pass finite where a plain norm would emit NaN.
+    """
+    vec = vec.astype(jnp.float32)
+    r = jnp.sqrt(jnp.sum(vec * vec, axis=-1) + 1e-18)
+    u = vec / jnp.maximum(r, 1e-9)[..., None]
+    eye = jnp.eye(3, dtype=u.dtype)
+    t = u[..., :, None] * u[..., None, :] - eye / 3.0
+    return r, u, t
+
+
+# ---------------------------------------------------------------------------
+# Init.
+# ---------------------------------------------------------------------------
+
+
+def _linear(key, c_in, c_out, axes=(None, "tensor")):
+    return Param(lecun_init(key, (c_in, c_out), c_in), axes)
+
+
+def init_layer(key, cfg: GNNConfig):
+    C, R, H, P = cfg.d_hidden, cfg.n_rbf, cfg.radial_hidden, cfg.n_paths
+    ks = jax.random.split(key, 12)
+    p = {
+        # radial MLP: rbf -> per-(path, channel) weights
+        "rad_w1": Param(lecun_init(ks[0], (R, H), R), (None, None)),
+        "rad_b1": Param(jnp.zeros((H,), jnp.float32), (None,)),
+        "rad_w2": Param(lecun_init(ks[1], (H, P * C), H), (None, "tensor")),
+        # pre/post channel mixes per irrep
+        "mix_s_in": _linear(ks[2], C, C),
+        "mix_v_in": _linear(ks[3], C, C),
+        "mix_t_in": _linear(ks[4], C, C),
+        "mix_s_out": _linear(ks[5], C, C),
+        "mix_v_out": _linear(ks[6], C, C),
+        "mix_t_out": _linear(ks[7], C, C),
+        # gate: scalars -> gates for v and t channels
+        "gate_w": Param(lecun_init(ks[8], (C, 2 * C), C), (None, "tensor")),
+        "sc_w": _linear(ks[9], C, C),  # self-connection (residual mix)
+    }
+    return p
+
+
+def init_params(key, cfg: GNNConfig):
+    ks = jax.random.split(key, cfg.n_layers + 3)
+    d_in = cfg.d_feat if cfg.d_feat > 0 else cfg.n_species
+    return {
+        "embed": Param(lecun_init(ks[0], (d_in, cfg.d_hidden), d_in), (None, "tensor")),
+        "layers": [init_layer(k, cfg) for k in ks[1 : cfg.n_layers + 1]],
+        "out_w1": Param(
+            lecun_init(ks[-2], (cfg.d_hidden, cfg.d_hidden), cfg.d_hidden),
+            (None, "tensor"),
+        ),
+        "out_w2": Param(lecun_init(ks[-1], (cfg.d_hidden, 1), cfg.d_hidden), ("tensor", None)),
+    }
+
+
+def abstract_params(cfg: GNNConfig):
+    return jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+# ---------------------------------------------------------------------------
+# Interaction block.
+# ---------------------------------------------------------------------------
+
+
+def _val(p):
+    return p.value if is_param(p) else p
+
+
+def _mix(w, x):
+    """Channel mix on the last axis for any irrep layout."""
+    return jnp.einsum("...c,cd->...d", x, _val(w))
+
+
+def _messages(s_j, v_j, t_j, u, T, w, cfg: GNNConfig):
+    """Per-edge tensor-product messages.
+
+    s_j [E,C], v_j [E,3,C], t_j [E,3,3,C]; u [E,3], T [E,3,3];
+    w [E, P, C] per-path per-channel radial weights.  Returns (ms, mv, mt).
+    """
+    wi = iter(range(cfg.n_paths))
+
+    def nw():
+        return w[:, next(wi), :]
+
+    # --- l_out = 0 paths
+    ms = nw() * s_j  # 0 x 0 -> 0
+    ms += nw() * jnp.einsum("eic,ei->ec", v_j, u)  # 1 x 1 -> 0
+    # --- l_out = 1 paths
+    mv = nw()[:, None, :] * s_j[:, None, :] * u[:, :, None]  # 0 x 1 -> 1
+    mv += nw()[:, None, :] * v_j  # 1 x 0 -> 1
+    mv += nw()[:, None, :] * jnp.cross(
+        v_j, u[:, :, None], axisa=1, axisb=1, axisc=1
+    )  # 1 x 1 -> 1
+    if cfg.l_max >= 2:
+        ms += nw() * jnp.einsum("eijc,eij->ec", t_j, T)  # 2 x 2 -> 0
+        mv += nw()[:, None, :] * jnp.einsum("eijc,ej->eic", t_j, u)  # 2 x 1 -> 1
+        # --- l_out = 2 paths
+        eye = jnp.eye(3, dtype=u.dtype)
+        mt = nw()[:, None, None, :] * s_j[:, None, None, :] * T[..., None]  # 0 x 2 -> 2
+        vu = v_j[:, :, None, :] * u[:, None, :, None]
+        sym = 0.5 * (vu + jnp.swapaxes(vu, 1, 2))
+        tr = jnp.einsum("eiic->ec", sym)
+        mt += nw()[:, None, None, :] * (
+            sym - eye[None, :, :, None] * tr[:, None, None, :] / 3.0
+        )  # 1 x 1 -> 2
+        mt += nw()[:, None, None, :] * t_j  # 2 x 0 -> 2
+    else:
+        mt = None
+    return ms, mv, mt
+
+
+def pack_t(t: Array) -> Array:
+    """Traceless symmetric [..., 3, 3, C] -> irreducible [..., 5, C].
+
+    l=2 features carry 5 degrees of freedom; storing 9 Cartesian components
+    inflates every node-feature payload (HBM + collective wire) by 4C per
+    node.  Rotation acts linearly on the 5-vector (pack/rotate/unpack is
+    linear), so equivariance is exact (§Perf iteration 4 on ogb_products).
+    """
+    return jnp.stack([t[..., 0, 0, :], t[..., 1, 1, :], t[..., 0, 1, :],
+                      t[..., 0, 2, :], t[..., 1, 2, :]], axis=-2)
+
+
+def unpack_t(t5: Array) -> Array:
+    """Inverse of pack_t: [..., 5, C] -> full traceless symmetric 3x3."""
+    t00, t11, t01, t02, t12 = (t5[..., i, :] for i in range(5))
+    row0 = jnp.stack([t00, t01, t02], axis=-2)
+    row1 = jnp.stack([t01, t11, t12], axis=-2)
+    row2 = jnp.stack([t02, t12, -t00 - t11], axis=-2)
+    return jnp.stack([row0, row1, row2], axis=-3)
+
+
+def layer_forward(lp, feats, edges, edge_attr, cfg: GNNConfig):
+    """One interaction block.
+
+    feats: dict(s [N,C], v [N,3,C], t [N,5,C] irreducible); edges: (src, dst)
+    int32 [E]; edge_attr: (rbf*cutoff [E,R], u [E,3], T [E,3,3]).
+    """
+    s, v, t = feats["s"], feats["v"], feats["t"]
+    src, dst = edges
+    rbf, u, T = edge_attr
+    N, C = s.shape
+
+    # Radial weights per path x channel.
+    h = jax.nn.silu(rbf @ _val(lp["rad_w1"]) + _val(lp["rad_b1"]))
+    w = (h @ _val(lp["rad_w2"])).reshape(-1, cfg.n_paths, C)
+
+    # Pre-mix + gather neighbor features onto edges; l=2 stays in the compact
+    # 5-form through mix/gather (the bandwidth-bound hops) and is unpacked to
+    # 3x3 only in edge space where the tensor products need it.
+    wd = cfg.feature_dtype
+    s_in = _mix(lp["mix_s_in"], s.astype(wd))
+    v_in = _mix(lp["mix_v_in"], v.astype(wd))
+    t_in = _mix(lp["mix_t_in"], t.astype(wd))
+    # Edge-parallel regime: gathered features and messages live on the edge
+    # axis (sharded over the data-parallel mesh axes, "batch") x the channel
+    # axis (sharded over "tensor" — every path is channel-diagonal).  The
+    # segment_sum below then produces channel-sharded partial node sums, so
+    # the cross-DP all-reduce payload is C/|tensor| per device.
+    w = constrain(w, ("batch", None, "tensor"))
+    s_j = constrain(jnp.take(s_in, src, axis=0), ("batch", "tensor"))
+    v_j = constrain(jnp.take(v_in, src, axis=0), ("batch", None, "tensor"))
+    t_j5 = constrain(jnp.take(t_in, src, axis=0), ("batch", None, "tensor"))
+    t_j = unpack_t(t_j5)
+
+    ms, mv, mt = _messages(s_j, v_j, t_j, u.astype(wd), T.astype(wd), w.astype(wd), cfg)
+    # Accumulate in fp32 regardless of the wire dtype (61M-edge sums);
+    # l=2 messages repack to the 5-form before the scatter-add.
+    ms = constrain(ms.astype(jnp.float32), ("batch", "tensor"))
+    mv = constrain(mv.astype(jnp.float32), ("batch", None, "tensor"))
+    if mt is not None:
+        mt5 = constrain(pack_t(mt).astype(jnp.float32), ("batch", None, "tensor"))
+    else:
+        mt5 = None
+
+    # Scatter-add to destinations (the JAX-native SpMM; see module docstring).
+    # Node aggregates are CHANNEL-sharded over "tensor": every tensor-product
+    # path above is channel-diagonal, so sharding C costs nothing locally but
+    # divides the cross-DP psum payload by the model-axis size (the §Perf
+    # collective-term iteration on ogb_products — EXPERIMENTS.md).
+    norm = 1.0 / jnp.sqrt(cfg.avg_neighbors)
+    agg_s = constrain(jax.ops.segment_sum(ms, dst, num_segments=N) * norm,
+                      (None, "tensor"))
+    agg_v = constrain(jax.ops.segment_sum(mv, dst, num_segments=N) * norm,
+                      (None, None, "tensor"))
+    agg_t = (
+        constrain(jax.ops.segment_sum(mt5, dst, num_segments=N) * norm,
+                  (None, None, "tensor"))
+        if mt5 is not None
+        else jnp.zeros_like(t)
+    )
+
+    # Self-connection + post mix (fp32 residual stream).
+    s_new = constrain(
+        _mix(lp["sc_w"], s.astype(wd)).astype(jnp.float32)
+        + _mix(lp["mix_s_out"], agg_s), (None, "tensor"))
+    v_new = constrain(
+        v + _mix(lp["mix_v_out"], agg_v), (None, None, "tensor"))
+    t_new = constrain(
+        t + _mix(lp["mix_t_out"], agg_t), (None, None, "tensor"))
+
+    # Gate nonlinearity: scalars through silu; v/t scaled by sigmoid gates.
+    gates = jax.nn.sigmoid(s_new @ _val(lp["gate_w"]))
+    gv, gt = gates[:, :C], gates[:, C:]
+    s_new = jax.nn.silu(s_new)
+    v_new = v_new * gv[:, None, :]
+    t_new = t_new * gt[:, None, :]
+    return {"s": s_new, "v": v_new, "t": t_new}
+
+
+# ---------------------------------------------------------------------------
+# Full model: energy + forces.
+# ---------------------------------------------------------------------------
+
+
+def init_features(params, node_input: Array, n_nodes: int, cfg: GNNConfig):
+    """node_input: [N, d_feat] float or [N] int species ids."""
+    if node_input.ndim == 1:
+        x = jax.nn.one_hot(node_input, cfg.n_species, dtype=jnp.float32)
+    else:
+        x = node_input.astype(jnp.float32)
+    s = x @ _val(params["embed"])
+    s = constrain(s, (None, "tensor"))
+    C = cfg.d_hidden
+    return {
+        "s": s,
+        "v": jnp.zeros((n_nodes, 3, C), jnp.float32),
+        "t": jnp.zeros((n_nodes, 5, C), jnp.float32),  # irreducible l=2 form
+    }
+
+
+def energy(params, positions: Array, node_input: Array, edges, cfg: GNNConfig,
+           node_mask: Array | None = None, node_graph: Array | None = None,
+           n_graphs: int = 1):
+    """Total potential energy (or per-graph energies when batched).
+
+    positions [N,3]; edges (src, dst) [E] (padded edges point at node 0 with
+    src == dst — masked below); node_graph: [N] graph id for packed batches.
+    """
+    src, dst = edges
+    vec = jnp.take(positions, dst, axis=0) - jnp.take(positions, src, axis=0)
+    r, u, T = edge_harmonics(vec)
+    env = poly_cutoff(r, cfg.cutoff)
+    # Padding edges (src == dst) and out-of-cutoff edges contribute nothing.
+    live = (src != dst) & (r < cfg.cutoff)
+    rbf = bessel_rbf(r, cfg.n_rbf, cfg.cutoff) * (env * live)[:, None]
+
+    N = positions.shape[0]
+    feats = init_features(params, node_input, N, cfg)
+    for lp in params["layers"]:
+        feats = layer_forward(lp, feats, (src, dst), (rbf, u, T), cfg)
+
+    e_node = jax.nn.silu(feats["s"] @ _val(params["out_w1"])) @ _val(params["out_w2"])
+    e_node = e_node[:, 0]
+    if node_mask is not None:
+        e_node = e_node * node_mask
+    if node_graph is not None:
+        return jax.ops.segment_sum(e_node, node_graph, num_segments=n_graphs)
+    return jnp.sum(e_node)
+
+
+def energy_and_forces(params, positions, node_input, edges, cfg: GNNConfig,
+                      node_mask=None):
+    """(E, F = -dE/dpos) — the interatomic-potential interface."""
+    e, neg_f = jax.value_and_grad(
+        lambda pos: energy(params, pos, node_input, edges, cfg, node_mask)
+    )(positions)
+    return e, -neg_f
+
+
+def loss_fn(params, batch: dict, cfg: GNNConfig,
+            energy_weight: float = 1.0, force_weight: float = 10.0):
+    """Huber energy+force matching loss (standard potential-fitting recipe).
+
+    batch: positions [N,3], node_input, edges (src,dst), targets e [G]/f [N,3],
+    optional node_mask [N], node_graph [N], n_graphs.
+    """
+    n_graphs = batch.get("n_graphs", 1)
+
+    def e_fn(pos):
+        e_graphs = energy(params, pos, batch["node_input"], batch["edges"], cfg,
+                          batch.get("node_mask"), batch.get("node_graph"), n_graphs)
+        return jnp.sum(e_graphs), e_graphs
+
+    (_, e_graphs), neg_f = jax.value_and_grad(e_fn, has_aux=True)(batch["positions"])
+    forces = -neg_f
+
+    e_err = e_graphs - batch["energy"]
+    e_loss = jnp.mean(optax_huber(e_err))
+    f_err = forces - batch["forces"]
+    if batch.get("node_mask") is not None:
+        f_err = f_err * batch["node_mask"][:, None]
+        denom = jnp.maximum(jnp.sum(batch["node_mask"]) * 3, 1.0)
+    else:
+        denom = f_err.size
+    f_loss = jnp.sum(optax_huber(f_err)) / denom
+    loss = energy_weight * e_loss + force_weight * f_loss
+    return loss, {"loss": loss, "e_loss": e_loss, "f_loss": f_loss}
+
+
+def optax_huber(x, delta: float = 1.0):
+    ax = jnp.abs(x)
+    return jnp.where(ax <= delta, 0.5 * x * x, delta * (ax - 0.5 * delta))
+
+
+def node_classifier_loss(params, batch: dict, cfg: GNNConfig, n_classes: int,
+                         head: Array):
+    """Node-classification readout (Cora / ogb_products cells): softmax CE on
+    the final scalars.  ``head``: [C, n_classes] Param value."""
+    feats_logits = _node_logits(params, batch, cfg, head)
+    labels = batch["labels"]
+    mask = batch.get("label_mask")
+    logp = jax.nn.log_softmax(feats_logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    if mask is not None:
+        nll = nll * mask
+        return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def _node_logits(params, batch, cfg: GNNConfig, head):
+    src, dst = batch["edges"]
+    vec = jnp.take(batch["positions"], dst, axis=0) - jnp.take(
+        batch["positions"], src, axis=0
+    )
+    r, u, T = edge_harmonics(vec)
+    env = poly_cutoff(r, cfg.cutoff)
+    live = (src != dst) & (r < cfg.cutoff)
+    rbf = bessel_rbf(r, cfg.n_rbf, cfg.cutoff) * (env * live)[:, None]
+    N = batch["positions"].shape[0]
+    feats = init_features(params, batch["node_input"], N, cfg)
+    for lp in params["layers"]:
+        feats = layer_forward(lp, feats, (src, dst), (rbf, u, T), cfg)
+    return feats["s"] @ head

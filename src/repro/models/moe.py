@@ -1,0 +1,159 @@
+"""Mixture-of-experts FFN: GShard-style top-k routing with dispatch/combine
+einsums (the GSPMD-native formulation that auto-parallelizes to all-to-all
+when experts are sharded).
+
+Routing *is* a k-smallest selection problem (k experts of E by negated gate
+score) — it reuses ``repro.core.topk.topk_smallest``, the same primitive the
+paper's phase 2 exposes (DESIGN.md §Arch-applicability).
+
+Two sharding regimes, chosen by config:
+  * ``ep``  — expert dim sharded over "expert"->model (E % model == 0, e.g.
+    qwen3's 128 experts); dispatched activations reshard group->expert via
+    all-to-all, exactly GShard.
+  * ``tp``  — experts replicated, per-expert d_ff sharded over "tensor"
+    (mixtral's 8 experts on a 16-way model axis).
+
+Capacity-factor token dropping with position-priority (GShard); dropped
+tokens pass through on the residual stream.  Aux load-balance loss (Switch
+eq. 4) is returned for the trainer.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import topk as T
+from repro.distributed.sharding import constrain
+from repro.models.nn import Param, lecun_init
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff: int  # per-expert hidden
+    capacity_factor: float = 1.25
+    group_size: int = 2048  # tokens per routing group (bounds dispatch tensor)
+    router_norm: str = "softmax_topk"  # mixtral: softmax over top-k logits
+    #                "topk_softmax"    # qwen3: top-k of softmax, renormalized
+    sharding: str = "ep"  # "ep" | "tp"
+    aux_loss_weight: float = 0.01
+
+
+def init_moe(key, d_model: int, cfg: MoEConfig, dtype=jnp.float32):
+    """Expert-parallel ("ep"): E sharded; tensor-parallel ("tp"): d_ff sharded."""
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    e_ax = "expert" if cfg.sharding == "ep" else None
+    f_ax = None if cfg.sharding == "ep" else "tensor"
+    E, D, F = cfg.n_experts, d_model, cfg.d_ff
+    return {
+        "router": Param(lecun_init(kr, (D, E), D, jnp.float32), ("fsdp", None)),
+        "wi_gate": Param(lecun_init(kg, (E, D, F), D, dtype), (e_ax, "fsdp", f_ax)),
+        "wi_up": Param(lecun_init(ku, (E, D, F), D, dtype), (e_ax, "fsdp", f_ax)),
+        "wo": Param(lecun_init(kd, (E, F, D), F, dtype), (e_ax, f_ax, "fsdp")),
+    }
+
+
+def _router_probs(logits: Array, cfg: MoEConfig) -> tuple[Array, Array]:
+    """Top-k expert ids + combine weights per token.  logits: [G, S, E]."""
+    if cfg.router_norm == "topk_softmax":
+        probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+        # k smallest of negated probs == top-k probs (paper's selection
+        # primitive — core.topk.topk_smallest).
+        neg_top, ids = T.topk_smallest(-probs, cfg.top_k)
+        gates = -neg_top
+        gates = gates / jnp.maximum(jnp.sum(gates, -1, keepdims=True), 1e-9)
+    else:  # softmax_topk (mixtral)
+        neg_top, ids = T.topk_smallest(-logits.astype(jnp.float32), cfg.top_k)
+        gates = jax.nn.softmax(-neg_top, axis=-1)
+    return ids.astype(jnp.int32), gates
+
+
+def _load_balance_loss(probs_mean: Array, frac_tokens: Array, E: int) -> Array:
+    """Switch-Transformer aux loss: E * sum_e f_e * P_e."""
+    return E * jnp.sum(frac_tokens * probs_mean)
+
+
+def apply_moe(params, x: Array, cfg: MoEConfig, *, act=jax.nn.silu) -> tuple[Array, dict]:
+    """x: [B, S, D] -> (y [B, S, D], metrics incl. aux_loss).
+
+    Tokens are flattened to routing groups of ``group_size`` so the dispatch
+    tensors stay O(T * E * C / G) — the GShard grouping trick that keeps the
+    one-hot formulation feasible at 1M tokens/step.
+    """
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    tokens = x.reshape(-1, D)
+    Tn = tokens.shape[0]
+    Sg = min(cfg.group_size, Tn)
+    assert Tn % Sg == 0, (Tn, Sg)
+    G = Tn // Sg
+    xg = tokens.reshape(G, Sg, D)
+    xg = constrain(xg, ("batch", None, None))
+
+    router = params["router"].value if hasattr(params["router"], "value") else params["router"]
+    logits = jnp.einsum("gsd,de->gse", xg.astype(jnp.float32), router)
+    ids, gates = _router_probs(logits, cfg)  # [G,Sg,K]
+
+    # Capacity: per group, per expert.
+    C = int(max(K, round(Sg * K / E * cfg.capacity_factor)))
+    C = min(C, Sg)
+
+    # Position of each (token, choice) within its expert queue — priority by
+    # token order then choice order (GShard §3.2).
+    onehot = jax.nn.one_hot(ids, E, dtype=jnp.int32)  # [G,Sg,K,E]
+    flat = onehot.reshape(G, Sg * K, E)
+    pos_in_expert = jnp.cumsum(flat, axis=1) - flat  # [G, Sg*K, E]
+    pos = jnp.sum(pos_in_expert * flat, axis=-1).reshape(G, Sg, K)
+    keep = pos < C
+
+    probs_for_aux = jax.nn.softmax(logits, axis=-1)
+    frac = jnp.mean(
+        jnp.sum(jax.nn.one_hot(ids[..., 0], E, dtype=jnp.float32), axis=1) / Sg, axis=0
+    )
+    aux = _load_balance_loss(jnp.mean(probs_for_aux, axis=(0, 1)), frac, E)
+
+    gates = jnp.where(keep, gates, 0.0)
+    # Dispatch one-hot [G, Sg, E, C] (bf16 — pure permutation weights).
+    disp = (
+        jax.nn.one_hot(ids, E, dtype=jnp.bfloat16)[..., None]
+        * jax.nn.one_hot(jnp.where(keep, pos, C), C + 1, dtype=jnp.bfloat16)[..., :C][
+            :, :, :, None, :
+        ]
+    )  # [G,Sg,K,E,C]
+    dispatch = jnp.sum(disp, axis=2)  # [G,Sg,E,C]
+    combine = jnp.sum(disp * gates[..., None, None].astype(jnp.bfloat16), axis=2)
+
+    dispatch = constrain(dispatch, ("batch", None, "expert", None))
+    # Expert inputs: [E, G, C, D] — resharding group->expert is the all-to-all.
+    ein = jnp.einsum("gsec,gsd->egcd", dispatch, xg.astype(jnp.bfloat16))
+    ein = constrain(ein, ("expert", "batch", None, None))
+
+    wg = params["wi_gate"].value if hasattr(params["wi_gate"], "value") else params["wi_gate"]
+    wu = params["wi_up"].value if hasattr(params["wi_up"], "value") else params["wi_up"]
+    wo = params["wo"].value if hasattr(params["wo"], "value") else params["wo"]
+    h = act(jnp.einsum("egcd,edf->egcf", ein, wg.astype(jnp.bfloat16))) * jnp.einsum(
+        "egcd,edf->egcf", ein, wu.astype(jnp.bfloat16)
+    )
+    h = constrain(h, ("expert", "batch", None, "tensor"))
+    eout = jnp.einsum("egcf,efd->egcd", h, wo.astype(jnp.bfloat16))
+    eout = constrain(eout, ("expert", "batch", None, None))
+
+    y = jnp.einsum("gsec,egcd->gsd", combine, eout)  # back to token layout
+    y = y.reshape(B, S, D).astype(x.dtype)
+
+    metrics = {
+        "aux_loss": cfg.aux_loss_weight * aux,
+        "drop_frac": 1.0 - jnp.mean(keep.astype(jnp.float32)),
+    }
+    return y, metrics
+
+
+def moe_flops_per_token(d_model: int, cfg: MoEConfig) -> int:
+    """Active-parameter MACs per token (for MODEL_FLOPS accounting)."""
+    return 2 * cfg.top_k * 3 * d_model * cfg.d_ff

@@ -1,0 +1,182 @@
+"""Minimal functional NN substrate: params as pytrees + logical-axis specs.
+
+Every ``init_*`` returns a pytree whose leaves are ``Param(value, axes)``;
+``split_params`` separates the value tree (fed to jit) from the logical-axes
+tree (mapped to PartitionSpecs by repro.distributed.sharding).  No framework
+dependency — plain dicts + jax.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_pytree_node_class
+class Param:
+    """A weight + its logical sharding axes.
+
+    Registered as a pytree node with ``axes`` as *static* metadata so Param
+    trees pass through jit / eval_shape / scan cleanly (only ``value`` is a
+    leaf).
+    """
+
+    __slots__ = ("value", "axes")
+
+    def __init__(self, value, axes: tuple[str | None, ...]):
+        self.value = value
+        self.axes = tuple(axes)
+
+    def tree_flatten(self):
+        return (self.value,), self.axes
+
+    @classmethod
+    def tree_unflatten(cls, axes, children):
+        return cls(children[0], axes)
+
+    def __repr__(self):
+        shape = getattr(self.value, "shape", None)
+        return f"Param(shape={shape}, axes={self.axes})"
+
+
+def is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def split_params(tree):
+    """(values, axes) trees with the same structure as ``tree``."""
+    values = jax.tree.map(lambda p: p.value, tree, is_leaf=is_param)
+    axes = jax.tree.map(lambda p: p.axes, tree, is_leaf=is_param)
+    return values, axes
+
+
+def n_params(tree) -> int:
+    values = tree
+    if any(is_param(l) for l in jax.tree.leaves(tree, is_leaf=is_param)):
+        values, _ = split_params(tree)
+    return sum(int(x.size) for x in jax.tree.leaves(values))
+
+
+# -- initializers ------------------------------------------------------------
+
+
+def normal_init(key, shape, stddev, dtype=jnp.float32):
+    return stddev * jax.random.normal(key, shape, dtype)
+
+
+def lecun_init(key, shape, fan_in, dtype=jnp.float32):
+    return normal_init(key, shape, 1.0 / math.sqrt(max(fan_in, 1)), dtype)
+
+
+def dense(key, d_in: int, d_out: int, axes, *, bias=False, dtype=jnp.float32):
+    p = {"kernel": Param(lecun_init(key, (d_in, d_out), d_in, dtype), axes)}
+    if bias:
+        p["bias"] = Param(jnp.zeros((d_out,), dtype), (axes[-1],))
+    return p
+
+
+def apply_dense(p, x, *, compute_dtype=None):
+    k = p["kernel"].value if is_param(p["kernel"]) else p["kernel"]
+    if compute_dtype is not None:
+        x = x.astype(compute_dtype)
+        k = k.astype(compute_dtype)
+    y = x @ k
+    if "bias" in p:
+        b = p["bias"].value if is_param(p["bias"]) else p["bias"]
+        y = y + b.astype(y.dtype)
+    return y
+
+
+def mlp(key, sizes: Sequence[int], axes_hidden: str | None = "mlp", *, bias=True):
+    """Plain ReLU/SiLU MLP stack params: sizes = [d_in, h1, ..., d_out]."""
+    keys = jax.random.split(key, len(sizes) - 1)
+    layers = []
+    for i, kk in enumerate(keys):
+        layers.append(
+            dense(
+                kk,
+                sizes[i],
+                sizes[i + 1],
+                (None, axes_hidden if i < len(sizes) - 2 else None),
+                bias=bias,
+            )
+        )
+    return {"layers": layers}
+
+
+def apply_mlp(p, x, *, act=jax.nn.relu, final_act=None, compute_dtype=None):
+    n = len(p["layers"])
+    for i, layer in enumerate(p["layers"]):
+        x = apply_dense(layer, x, compute_dtype=compute_dtype)
+        if i < n - 1:
+            x = act(x)
+        elif final_act is not None:
+            x = final_act(x)
+    return x
+
+
+# -- norms -------------------------------------------------------------------
+
+
+def rmsnorm_params(d: int, axes=(None,)):
+    return {"scale": Param(jnp.zeros((d,), jnp.float32), axes)}
+
+
+def apply_rmsnorm(p, x, *, eps=1e-6, offset=1.0):
+    """RMSNorm with (offset + scale) weight — offset=1.0 covers llama & gemma."""
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    s = p["scale"].value if is_param(p["scale"]) else p["scale"]
+    return (y * (offset + s.astype(jnp.float32))).astype(dtype)
+
+
+def layernorm_params(d: int, axes=(None,)):
+    return {
+        "scale": Param(jnp.ones((d,), jnp.float32), axes),
+        "bias": Param(jnp.zeros((d,), jnp.float32), axes),
+    }
+
+
+def apply_layernorm(p, x, *, eps=1e-6):
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    s = p["scale"].value if is_param(p["scale"]) else p["scale"]
+    b = p["bias"].value if is_param(p["bias"]) else p["bias"]
+    return (y * s + b).astype(dtype)
+
+
+ACTS = {
+    "relu": jax.nn.relu,
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+    "tanh": jnp.tanh,
+}
+
+
+# ---------------------------------------------------------------------------
+# Accounting-mode scan.
+# ---------------------------------------------------------------------------
+
+# XLA's cost_analysis counts a while-loop body ONCE regardless of trip count,
+# which silently under-reports FLOPs/bytes/collectives for scanned models.
+# The dry-run's accounting pass flips this flag (repro.accounting) to compile
+# a fully-unrolled variant of every model loop (launch/dryrun.py --unroll);
+# production compiles keep scans (O(1) HLO in depth).
+from repro import accounting as _acct
+
+
+def set_unroll_scans(value: bool):
+    _acct.set_unroll(value)
+
+
+def model_scan(body, init, xs, length=None):
+    """lax.scan that fully unrolls under the accounting flag."""
+    return jax.lax.scan(body, init, xs, length=length,
+                        unroll=True if _acct.unrolled() else 1)

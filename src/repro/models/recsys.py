@@ -1,0 +1,412 @@
+"""RecSys substrate: EmbeddingBag + the four assigned ranking/retrieval models.
+
+JAX has no native ``EmbeddingBag`` and no CSR sparse — per the kernel
+taxonomy, the lookup IS part of the system: ``embedding_bag`` below is
+``jnp.take`` + ``jax.ops.segment_sum`` over a (values, offsets)-style bag
+layout, vectorized over the batch.  Tables are row-sharded over the "table"
+logical axis (-> "model"); XLA lowers a gather from a row-sharded operand to
+the local-gather + mask + all-reduce pattern, which is exactly the classic
+model-parallel embedding plan (the lookup is the hot path — DESIGN.md).
+
+Models (configs give exact shapes):
+
+  * ``dlrm``      — bottom MLP on dense, EmbeddingBag per sparse field, dot
+                    self-interaction of [n_sparse+1, D] features, top MLP.
+  * ``xdeepfm``   — CIN (compressed interaction network) over field
+                    embeddings + DNN + linear, summed into one logit.
+  * ``bst``       — Behavior Sequence Transformer: item+position embeddings,
+                    one post-LN transformer block over the 20-item session,
+                    concat with user/context embeddings into an MLP.
+  * ``two_tower`` — user/item MLP towers to a shared 256-dim space, dot
+                    scoring, in-batch sampled softmax with logQ correction.
+                    Retrieval serving (1 query x 1M candidates) runs on the
+                    paper's kNN engine (core.distributed.query_sharded) —
+                    the recommendation workload the paper was built for.
+
+All ``loss_fn``/``score`` functions are pure; params are Param pytrees.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.nn import Param, apply_layernorm, is_param, layernorm_params, lecun_init, normal_init
+
+Array = jnp.ndarray
+
+
+def _val(p):
+    return p.value if is_param(p) else p
+
+
+# ---------------------------------------------------------------------------
+# EmbeddingBag (the JAX-native one).
+# ---------------------------------------------------------------------------
+
+
+def init_table(key, n_rows: int, dim: int, dtype=jnp.float32) -> Param:
+    return Param(normal_init(key, (n_rows, dim), 1.0 / dim**0.5, dtype), ("table", None))
+
+
+def embedding_lookup(table, ids: Array) -> Array:
+    """Single-valued lookup: ids [...,] -> [..., D].  Row-sharded gather."""
+    return jnp.take(_val(table), ids, axis=0)
+
+
+def embedding_bag(table, ids: Array, bag_ids: Array, n_bags: int,
+                  weights: Array | None = None, mode: str = "sum") -> Array:
+    """Multi-valued pooled lookup (torch EmbeddingBag equivalent).
+
+    ids: [nnz] row indices; bag_ids: [nnz] which bag each id belongs to
+    (sorted or not); returns [n_bags, D].  ``mode``: sum | mean.
+    Implemented as take + segment_sum — there is no native op; this is it.
+    """
+    rows = jnp.take(_val(table), ids, axis=0)
+    if weights is not None:
+        rows = rows * weights[:, None]
+    out = jax.ops.segment_sum(rows, bag_ids, num_segments=n_bags)
+    if mode == "mean":
+        cnt = jax.ops.segment_sum(jnp.ones_like(ids, jnp.float32), bag_ids, n_bags)
+        out = out / jnp.maximum(cnt, 1.0)[:, None]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Shared MLP helper (recsys towers are plain ReLU stacks).
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, sizes: Sequence[int], dtype=jnp.float32, hidden_axis="tensor"):
+    ks = jax.random.split(key, len(sizes) - 1)
+    layers = []
+    for i, kk in enumerate(ks):
+        ax_out = hidden_axis if i < len(sizes) - 2 else None
+        layers.append({
+            "w": Param(lecun_init(kk, (sizes[i], sizes[i + 1]), sizes[i], dtype),
+                       (None, ax_out)),
+            "b": Param(jnp.zeros((sizes[i + 1],), dtype), (ax_out,)),
+        })
+    return layers
+
+
+def apply_mlp(layers, x, act=jax.nn.relu, final_act=None):
+    n = len(layers)
+    for i, l in enumerate(layers):
+        x = x @ _val(l["w"]) + _val(l["b"])
+        if i < n - 1:
+            x = act(x)
+        elif final_act is not None:
+            x = final_act(x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# DLRM (arXiv:1906.00091, RM2 scale).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DLRMConfig:
+    n_dense: int = 13
+    n_sparse: int = 26
+    embed_dim: int = 64
+    bot_mlp: tuple[int, ...] = (512, 256, 64)
+    top_mlp: tuple[int, ...] = (512, 512, 256, 1)
+    table_sizes: tuple[int, ...] = ()  # len == n_sparse; configs fill this
+
+    def sizes(self) -> tuple[int, ...]:
+        if self.table_sizes:
+            assert len(self.table_sizes) == self.n_sparse
+            return self.table_sizes
+        return tuple(default_table_sizes(self.n_sparse))
+
+
+def default_table_sizes(n: int, lo: int = 10_000, hi: int = 40_000_000) -> list[int]:
+    """Deterministic Criteo-like skewed size mix (a few huge, many small).
+
+    Rounded up to multiples of 1024 so the "table" (row) dim always divides
+    the model mesh axis — otherwise the divisibility fallback would silently
+    REPLICATE the table (16x the HBM; caught by the dry-run memory analysis).
+    """
+    out = []
+    for i in range(n):
+        # log-spaced with a deterministic scramble, heaviest first
+        f = ((i * 2654435761) % 997) / 997.0
+        s = int(lo * (hi / lo) ** ((1.0 - f) ** 2))
+        out.append(s + (-s) % 1024)
+    return out
+
+
+def init_dlrm(key, cfg: DLRMConfig):
+    kt, kb, ktp = jax.random.split(key, 3)
+    tkeys = jax.random.split(kt, cfg.n_sparse)
+    n_feat = cfg.n_sparse + 1
+    n_inter = n_feat * (n_feat - 1) // 2
+    return {
+        "tables": [init_table(k, s, cfg.embed_dim) for k, s in zip(tkeys, cfg.sizes())],
+        "bot": init_mlp(kb, (cfg.n_dense,) + cfg.bot_mlp),
+        "top": init_mlp(ktp, (n_inter + cfg.embed_dim,) + cfg.top_mlp),
+    }
+
+
+def dlrm_logits(params, batch, cfg: DLRMConfig) -> Array:
+    """batch: dense [B, 13] float, sparse [B, 26] int32 (one id per field)."""
+    dense, sparse = batch["dense"], batch["sparse"]
+    B = dense.shape[0]
+    x_bot = apply_mlp(params["bot"], dense.astype(jnp.float32))  # [B, D]
+    embs = [embedding_lookup(t, sparse[:, i]) for i, t in enumerate(params["tables"])]
+    feats = jnp.stack([x_bot] + embs, axis=1)  # [B, F, D]
+    feats = constrain(feats, ("batch", None, None))
+    inter = jnp.einsum("bfd,bgd->bfg", feats, feats)  # dot interaction
+    iu, ju = jnp.triu_indices(feats.shape[1], k=1)
+    flat = inter[:, iu, ju]  # [B, F(F-1)/2]
+    top_in = jnp.concatenate([flat, x_bot], axis=-1)
+    return apply_mlp(params["top"], top_in)[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# xDeepFM (arXiv:1803.05170).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class XDeepFMConfig:
+    n_sparse: int = 39
+    embed_dim: int = 10
+    cin_layers: tuple[int, ...] = (200, 200, 200)
+    mlp: tuple[int, ...] = (400, 400)
+    table_sizes: tuple[int, ...] = ()
+
+    def sizes(self):
+        if self.table_sizes:
+            assert len(self.table_sizes) == self.n_sparse
+            return self.table_sizes
+        return tuple(default_table_sizes(self.n_sparse, hi=10_000_000))
+
+
+def init_xdeepfm(key, cfg: XDeepFMConfig):
+    kt, kc, km, kl, ko = jax.random.split(key, 5)
+    tkeys = jax.random.split(kt, cfg.n_sparse)
+    F = cfg.n_sparse
+    cin = []
+    h_prev = F
+    for i, h in enumerate(cfg.cin_layers):
+        kk = jax.random.fold_in(kc, i)
+        cin.append(Param(lecun_init(kk, (h, h_prev, F), h_prev * F), ("tensor", None, None)))
+        h_prev = h
+    return {
+        "tables": [init_table(k, s, cfg.embed_dim) for k, s in zip(tkeys, cfg.sizes())],
+        "lin_tables": [Param(normal_init(jax.random.fold_in(kl, i), (s, 1), 0.01),
+                             ("table", None)) for i, s in enumerate(cfg.sizes())],
+        "cin": cin,
+        "mlp": init_mlp(km, (F * cfg.embed_dim,) + cfg.mlp + (1,)),
+        "out_cin": Param(lecun_init(ko, (sum(cfg.cin_layers), 1), sum(cfg.cin_layers)),
+                         (None, None)),
+        "bias": Param(jnp.zeros((), jnp.float32), ()),
+    }
+
+
+def xdeepfm_logits(params, batch, cfg: XDeepFMConfig) -> Array:
+    """batch: sparse [B, 39] int32.  logit = linear + CIN + DNN."""
+    sparse = batch["sparse"]
+    x0 = jnp.stack(
+        [embedding_lookup(t, sparse[:, i]) for i, t in enumerate(params["tables"])],
+        axis=1,
+    )  # [B, F, D]
+    x0 = constrain(x0, ("batch", None, None))
+
+    # Linear (first-order) term.
+    lin = sum(
+        embedding_lookup(t, sparse[:, i])[:, 0]
+        for i, t in enumerate(params["lin_tables"])
+    )
+
+    # CIN: x^k_{b,h,d} = sum_{i,j} W^k_{h,i,j} x^{k-1}_{b,i,d} x^0_{b,j,d}.
+    xs, pooled = x0, []
+    for wk in params["cin"]:
+        # one fused contraction — the [B,H,F,D] outer product never
+        # materializes (XLA contracts W first).
+        xs = jnp.einsum("bid,bjd,hij->bhd", xs, x0, _val(wk))
+        xs = constrain(xs, ("batch", "tensor", None))
+        pooled.append(jnp.sum(xs, axis=-1))  # [B, H]
+    cin_out = jnp.concatenate(pooled, axis=-1) @ _val(params["out_cin"])  # [B,1]
+
+    dnn = apply_mlp(params["mlp"], x0.reshape(x0.shape[0], -1))  # [B,1]
+    return lin + cin_out[:, 0] + dnn[:, 0] + _val(params["bias"])
+
+
+# ---------------------------------------------------------------------------
+# BST — Behavior Sequence Transformer (arXiv:1905.06874).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BSTConfig:
+    embed_dim: int = 32
+    seq_len: int = 20
+    n_blocks: int = 1
+    n_heads: int = 8
+    mlp: tuple[int, ...] = (1024, 512, 256)
+    n_items: int = 4_000_000
+    n_other: int = 8  # side-feature fields (user profile / context)
+    other_sizes: tuple[int, ...] = ()
+
+    def sizes(self):
+        if self.other_sizes:
+            return self.other_sizes
+        return tuple(default_table_sizes(self.n_other, hi=1_000_000))
+
+
+def init_bst(key, cfg: BSTConfig):
+    ki, kp, ko, kb, km = jax.random.split(key, 5)
+    D = cfg.embed_dim
+    okeys = jax.random.split(ko, cfg.n_other)
+    blocks = []
+    for i in range(cfg.n_blocks):
+        kk = jax.random.split(jax.random.fold_in(kb, i), 6)
+        blocks.append({
+            "wq": Param(lecun_init(kk[0], (D, D), D), (None, "tensor")),
+            "wk": Param(lecun_init(kk[1], (D, D), D), (None, "tensor")),
+            "wv": Param(lecun_init(kk[2], (D, D), D), (None, "tensor")),
+            "wo": Param(lecun_init(kk[3], (D, D), D), ("tensor", None)),
+            "ln1": layernorm_params(D),
+            "ln2": layernorm_params(D),
+            "ff1": Param(lecun_init(kk[4], (D, 4 * D), D), (None, "tensor")),
+            "ff2": Param(lecun_init(kk[5], (4 * D, D), 4 * D), ("tensor", None)),
+        })
+    # seq_len counts the session INCLUDING the target item (paper Fig. 1):
+    # hist is [B, seq_len-1], target appended as the last position.
+    mlp_in = cfg.seq_len * D + cfg.n_other * D
+    return {
+        "items": init_table(ki, cfg.n_items, D),
+        "pos": Param(normal_init(kp, (cfg.seq_len, D), 0.02), (None, None)),
+        "others": [init_table(k, s, D) for k, s in zip(okeys, cfg.sizes())],
+        "blocks": blocks,
+        "mlp": init_mlp(km, (mlp_in,) + cfg.mlp + (1,)),
+    }
+
+
+def _bst_block(bp, x, n_heads):
+    """Post-LN encoder block over [B, S, D] (no causal mask — session attn)."""
+    B, S, D = x.shape
+    hd = D // n_heads
+    q = (x @ _val(bp["wq"])).reshape(B, S, n_heads, hd)
+    k = (x @ _val(bp["wk"])).reshape(B, S, n_heads, hd)
+    v = (x @ _val(bp["wv"])).reshape(B, S, n_heads, hd)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(jnp.float32(hd))
+    a = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(x.dtype)
+    o = jnp.einsum("bhqk,bkhd->bqhd", a, v).reshape(B, S, D)
+    x = apply_layernorm(bp["ln1"], x + o @ _val(bp["wo"]))
+    ff = jax.nn.relu(x @ _val(bp["ff1"])) @ _val(bp["ff2"])
+    return apply_layernorm(bp["ln2"], x + ff)
+
+
+def bst_logits(params, batch, cfg: BSTConfig) -> Array:
+    """batch: hist [B, S-1] int32 item ids, target [B] int32, others [B, n_other]."""
+    hist, target = batch["hist"], batch["target"]
+    seq_ids = jnp.concatenate([hist, target[:, None]], axis=1)  # [B, S]
+    x = embedding_lookup(params["items"], seq_ids) + _val(params["pos"])[None]
+    x = constrain(x, ("batch", None, None))
+    for bp in params["blocks"]:
+        x = _bst_block(bp, x, cfg.n_heads)
+    others = [
+        embedding_lookup(t, batch["others"][:, i])
+        for i, t in enumerate(params["others"])
+    ]
+    flat = jnp.concatenate([x.reshape(x.shape[0], -1)] + others, axis=-1)
+    return apply_mlp(params["mlp"], flat)[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# Two-tower retrieval (YouTube/RecSys'19-style sampled softmax).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TwoTowerConfig:
+    embed_dim: int = 256
+    tower_mlp: tuple[int, ...] = (1024, 512, 256)
+    n_user_fields: int = 6
+    n_item_fields: int = 4
+    user_sizes: tuple[int, ...] = ()
+    item_sizes: tuple[int, ...] = ()
+    feat_dim: int = 64  # per-field embedding dim fed to the towers
+    temperature: float = 0.05
+
+    def u_sizes(self):
+        return self.user_sizes or tuple(default_table_sizes(self.n_user_fields, hi=50_000_000))
+
+    def i_sizes(self):
+        return self.item_sizes or tuple(default_table_sizes(self.n_item_fields, hi=10_000_000))
+
+
+def init_two_tower(key, cfg: TwoTowerConfig):
+    ku, ki, kmu, kmi = jax.random.split(key, 4)
+    ukeys = jax.random.split(ku, cfg.n_user_fields)
+    ikeys = jax.random.split(ki, cfg.n_item_fields)
+    return {
+        "user_tables": [init_table(k, s, cfg.feat_dim) for k, s in zip(ukeys, cfg.u_sizes())],
+        "item_tables": [init_table(k, s, cfg.feat_dim) for k, s in zip(ikeys, cfg.i_sizes())],
+        "user_mlp": init_mlp(kmu, (cfg.n_user_fields * cfg.feat_dim,) + cfg.tower_mlp),
+        "item_mlp": init_mlp(kmi, (cfg.n_item_fields * cfg.feat_dim,) + cfg.tower_mlp),
+    }
+
+
+def _tower(tables, mlp, ids):
+    embs = [embedding_lookup(t, ids[:, i]) for i, t in enumerate(tables)]
+    x = jnp.concatenate(embs, axis=-1)
+    x = apply_mlp(mlp, x)
+    return x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), 1e-9)
+
+
+def user_embedding(params, user_ids: Array) -> Array:
+    return _tower(params["user_tables"], params["user_mlp"], user_ids)
+
+
+def item_embedding(params, item_ids: Array) -> Array:
+    return _tower(params["item_tables"], params["item_mlp"], item_ids)
+
+
+def two_tower_loss(params, batch, cfg: TwoTowerConfig):
+    """In-batch sampled softmax with logQ correction.
+
+    batch: user [B, n_user_fields], item [B, n_item_fields],
+    optional logq [B] (sampling log-probability of each in-batch item).
+    """
+    u = user_embedding(params, batch["user"])  # [B, E]
+    v = item_embedding(params, batch["item"])  # [B, E]
+    u = constrain(u, ("batch", None))
+    logits = (u @ v.T) / cfg.temperature  # [B, B]
+    if batch.get("logq") is not None:
+        logits = logits - batch["logq"][None, :]
+    labels = jnp.arange(u.shape[0])
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    loss = jnp.mean(nll)
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return loss, {"loss": loss, "in_batch_acc": acc}
+
+
+# ---------------------------------------------------------------------------
+# Pointwise CTR loss shared by dlrm / xdeepfm / bst.
+# ---------------------------------------------------------------------------
+
+
+def bce_loss(logits: Array, labels: Array):
+    """Numerically-stable binary cross entropy from logits."""
+    ls = jax.nn.log_sigmoid(logits.astype(jnp.float32))
+    l1 = jax.nn.log_sigmoid(-logits.astype(jnp.float32))
+    nll = -(labels * ls + (1.0 - labels) * l1)
+    loss = jnp.mean(nll)
+    return loss, {"loss": loss}
+
+
+LOGIT_FNS = {
+    "dlrm-rm2": dlrm_logits,
+    "xdeepfm": xdeepfm_logits,
+    "bst": bst_logits,
+}

@@ -1,0 +1,439 @@
+"""Decoder-only transformer LM (dense + MoE), scan-over-layers, TPU-sharded.
+
+Covers the five assigned LM architectures: llama-style GQA (yi), GQA+SWA
+(h2o-danube3), MQA/GeGLU/huge-vocab (gemma), SWA+MoE 8e top-2 (mixtral
+8x22b), GQA+QK-norm+MoE 128e top-8 (qwen3-30b-a3b).
+
+Design choices that matter at 512 chips:
+  * homogeneous layers stacked on a leading [L] axis and executed with
+    ``jax.lax.scan`` — one layer's HLO compiled once (compile time and HLO
+    size are O(1) in depth, the MaxText pattern);
+  * ``jax.checkpoint`` around the layer body with a configurable remat
+    policy (activation recompute is what makes 1M-token steps fit HBM);
+  * all weights carry logical axes ("fsdp" on the d_model-like dim, "tensor"
+    on heads/ffn/vocab) resolved by repro.distributed.sharding;
+  * attention is chunked online-softmax (models/attention.py), MoE is
+    GShard dispatch/combine (models/moe.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models import attention as A
+from repro.models import moe as M
+from repro.models.nn import (Param, apply_rmsnorm, is_param, lecun_init,
+                             model_scan, normal_init)
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int  # dense FFN hidden (ignored when moe is set)
+    vocab: int
+    act: str = "silu"  # silu (llama) | gelu (gemma GeGLU)
+    moe: M.MoEConfig | None = None
+    sliding_window: int | None = None
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+    use_qk_norm: bool = False
+    tied_embeddings: bool = False
+    embed_scale: bool = False  # gemma: scale embeddings by sqrt(d_model)
+    logits_soft_cap: float | None = None
+    dtype: Any = jnp.bfloat16  # weight/activation dtype (master fp32 in optim)
+    kv_chunk: int = 1024
+    remat_policy: str = "nothing_saveable"  # none|dots|nothing_saveable
+
+    @property
+    def n_params(self) -> int:
+        D, Hq, Hkv, hd = self.d_model, self.n_heads, self.n_kv_heads, self.head_dim
+        attn = D * (Hq + 2 * Hkv) * hd + Hq * hd * D
+        if self.moe is not None:
+            ffn = self.moe.n_experts * 3 * D * self.moe.d_ff + D * self.moe.n_experts
+        else:
+            ffn = 3 * D * self.d_ff
+        per_layer = attn + ffn + 2 * D
+        embed = self.vocab * D * (1 if self.tied_embeddings else 2)
+        return self.n_layers * per_layer + embed + D
+
+    @property
+    def n_active_params(self) -> int:
+        """Per-token active parameters (MoE counts only top_k experts)."""
+        if self.moe is None:
+            return self.n_params
+        D = self.d_model
+        dense = self.n_params - self.n_layers * self.moe.n_experts * 3 * D * self.moe.d_ff
+        return dense + self.n_layers * self.moe.top_k * 3 * D * self.moe.d_ff
+
+
+ACTS = {"silu": jax.nn.silu, "gelu": functools.partial(jax.nn.gelu, approximate=True)}
+
+
+# ---------------------------------------------------------------------------
+# Init.
+# ---------------------------------------------------------------------------
+
+
+def init_layer(key, cfg: TransformerConfig):
+    D, Hq, Hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 8)
+    p = {
+        "ln1": Param(jnp.zeros((D,), jnp.float32), ("fsdp",)),
+        "ln2": Param(jnp.zeros((D,), jnp.float32), ("fsdp",)),
+        "wq": Param(lecun_init(ks[0], (D, Hq, hd), D, cfg.dtype), ("fsdp", "tensor", None)),
+        "wk": Param(lecun_init(ks[1], (D, Hkv, hd), D, cfg.dtype), ("fsdp", "kv_heads", None)),
+        "wv": Param(lecun_init(ks[2], (D, Hkv, hd), D, cfg.dtype), ("fsdp", "kv_heads", None)),
+        "wo": Param(lecun_init(ks[3], (Hq, hd, D), Hq * hd, cfg.dtype), ("tensor", None, "fsdp")),
+    }
+    if cfg.use_qk_norm:
+        p["q_norm"] = Param(jnp.zeros((hd,), jnp.float32), (None,))
+        p["k_norm"] = Param(jnp.zeros((hd,), jnp.float32), (None,))
+    if cfg.moe is not None:
+        p["moe"] = M.init_moe(ks[4], D, cfg.moe, cfg.dtype)
+    else:
+        F = cfg.d_ff
+        p["wi_gate"] = Param(lecun_init(ks[5], (D, F), D, cfg.dtype), ("fsdp", "tensor"))
+        p["wi_up"] = Param(lecun_init(ks[6], (D, F), D, cfg.dtype), ("fsdp", "tensor"))
+        p["wff_o"] = Param(lecun_init(ks[7], (F, D), F, cfg.dtype), ("tensor", "fsdp"))
+    return p
+
+
+def init_params(key, cfg: TransformerConfig):
+    ke, kl, ku = jax.random.split(key, 3)
+    # Stacked layer params: init one layer per leading index via vmap-of-init
+    # (identical structure => scan-compatible).
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+
+    def stack(*leaves):
+        return jnp.stack(leaves, axis=0)
+
+    layers = [init_layer(k, cfg) for k in layer_keys]
+    stacked = jax.tree.map(
+        lambda *ps: Param(stack(*[p.value for p in ps]), (None,) + ps[0].axes),
+        *layers,
+        is_leaf=is_param,
+    )
+    p = {
+        "embed": Param(
+            normal_init(ke, (cfg.vocab, cfg.d_model), 0.02, cfg.dtype),
+            ("vocab", "fsdp"),
+        ),
+        "layers": stacked,
+        "final_norm": Param(jnp.zeros((cfg.d_model,), jnp.float32), ("fsdp",)),
+    }
+    if not cfg.tied_embeddings:
+        p["unembed"] = Param(
+            normal_init(ku, (cfg.d_model, cfg.vocab), 0.02, cfg.dtype),
+            ("fsdp", "vocab"),
+        )
+    return p
+
+
+def abstract_params(cfg: TransformerConfig):
+    """Param pytree of ShapeDtypeStructs — no allocation (dry-run path)."""
+    return jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+# ---------------------------------------------------------------------------
+# Layer body (shared by train forward / prefill / decode).
+# ---------------------------------------------------------------------------
+
+
+def _rms(x, scale_param, eps):
+    return apply_rmsnorm({"scale": scale_param}, x, eps=eps)
+
+
+def _qkv(lp, x, cfg: TransformerConfig, positions):
+    q = jnp.einsum("bsd,dhk->bshk", x, lp["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, lp["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, lp["wv"].astype(x.dtype))
+    if cfg.use_qk_norm:
+        q = apply_rmsnorm({"scale": lp["q_norm"]}, q, eps=cfg.norm_eps)
+        k = apply_rmsnorm({"scale": lp["k_norm"]}, k, eps=cfg.norm_eps)
+    q = A.apply_rope(q, positions, cfg.rope_theta)
+    k = A.apply_rope(k, positions, cfg.rope_theta)
+    q = constrain(q, ("batch", None, "tensor", None))
+    k = constrain(k, ("batch", None, "kv_heads", None))
+    v = constrain(v, ("batch", None, "kv_heads", None))
+    return q, k, v
+
+
+def layer_forward(lp, x, positions, cfg: TransformerConfig):
+    """Full-sequence layer (training / prefill).  Returns (y, aux_loss, k, v)."""
+    h = _rms(x, lp["ln1"], cfg.norm_eps)
+    q, k, v = _qkv(lp, h, cfg, positions)
+    attn = A.gqa_attention(
+        q,
+        k,
+        v,
+        q_pos=positions,
+        k_pos=positions,
+        window=cfg.sliding_window,
+        kv_chunk=cfg.kv_chunk,
+        logits_soft_cap=cfg.logits_soft_cap,
+    )
+    attn = jnp.einsum("bshk,hkd->bsd", attn, lp["wo"].astype(x.dtype))
+    x = x + constrain(attn, ("batch", None, "fsdp"))
+
+    h = _rms(x, lp["ln2"], cfg.norm_eps)
+    if cfg.moe is not None:
+        y, metrics = M.apply_moe(lp["moe"], h, cfg.moe, act=ACTS[cfg.act])
+        aux = metrics["aux_loss"]
+    else:
+        act = ACTS[cfg.act]
+        gate = jnp.einsum("bsd,df->bsf", h, lp["wi_gate"].astype(h.dtype))
+        up = jnp.einsum("bsd,df->bsf", h, lp["wi_up"].astype(h.dtype))
+        ff = constrain(act(gate) * up, ("batch", None, "tensor"))
+        y = jnp.einsum("bsf,fd->bsd", ff, lp["wff_o"].astype(h.dtype))
+        aux = jnp.zeros((), jnp.float32)
+    x = x + constrain(y, ("batch", None, "fsdp"))
+    return x, aux, k, v
+
+
+_REMAT_POLICIES = {
+    "none": None,
+    "dots": lambda: jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+    "nothing_saveable": lambda: jax.checkpoint_policies.nothing_saveable,
+    "everything_saveable": lambda: jax.checkpoint_policies.everything_saveable,
+}
+
+
+def _maybe_remat(fn, cfg: TransformerConfig):
+    if cfg.remat_policy == "none":
+        return fn
+    policy = _REMAT_POLICIES[cfg.remat_policy]()
+    return jax.checkpoint(fn, policy=policy, prevent_cse=True)
+
+
+# ---------------------------------------------------------------------------
+# Training forward + loss.
+# ---------------------------------------------------------------------------
+
+
+def _embed_tokens(params, tokens, cfg: TransformerConfig):
+    emb = params["embed"].value if is_param(params["embed"]) else params["embed"]
+    x = jnp.take(emb, tokens, axis=0).astype(cfg.dtype)
+    if cfg.embed_scale:
+        x = x * jnp.sqrt(jnp.float32(cfg.d_model)).astype(cfg.dtype)
+    return constrain(x, ("batch", None, "fsdp"))
+
+
+def _unembed(params, x, cfg: TransformerConfig):
+    if cfg.tied_embeddings:
+        emb = params["embed"].value if is_param(params["embed"]) else params["embed"]
+        w = emb.T
+    else:
+        w = params["unembed"].value if is_param(params["unembed"]) else params["unembed"]
+    logits = jnp.einsum("bsd,dv->bsv", x, w.astype(x.dtype))
+    if cfg.logits_soft_cap is not None:
+        logits = cfg.logits_soft_cap * jnp.tanh(logits / cfg.logits_soft_cap)
+    return constrain(logits, ("batch", None, "vocab"))
+
+
+def backbone(params_values, tokens: Array, cfg: TransformerConfig):
+    """tokens [B, S] -> (final hidden [B, S, D] post-norm, total_aux_loss)."""
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    x = _embed_tokens(params_values, tokens, cfg)
+
+    def body(carry, lp):
+        x, aux = carry
+        x, a, _, _ = layer_forward(lp, x, positions, cfg)
+        return (x, aux + a), None
+
+    body = _maybe_remat(body, cfg)
+    (x, aux), _ = model_scan(
+        body, (x, jnp.zeros((), jnp.float32)), params_values["layers"]
+    )
+    x = _rms(x, params_values["final_norm"], cfg.norm_eps)
+    return x, aux
+
+
+def forward(params, tokens: Array, cfg: TransformerConfig) -> tuple[Array, Array]:
+    """tokens [B, S] -> (logits [B, S, V], total_aux_loss)."""
+    values = jax.tree.map(lambda p: p.value if is_param(p) else p, params, is_leaf=is_param)
+    x, aux = backbone(values, tokens, cfg)
+    return _unembed(values, x, cfg), aux
+
+
+def _unembed_weight(values, cfg: TransformerConfig):
+    if cfg.tied_embeddings:
+        return values["embed"].T
+    return values["unembed"]
+
+
+def chunked_softmax_xent(
+    x: Array,  # [B, S, D] final hidden
+    w: Array,  # [D, V] unembed
+    labels: Array,  # [B, S]
+    loss_mask: Array | None,
+    cfg: TransformerConfig,
+    chunk: int = 512,
+) -> tuple[Array, Array]:
+    """Sum of per-token NLL + token count, computed in sequence chunks.
+
+    The [B, S, V] logits tensor is never materialized (a gemma-sized vocab at
+    32k tokens/device would not fit); each chunk's logits are produced,
+    reduced to NLL, and rematerialized in the backward pass.
+    """
+    B, S, D = x.shape
+    chunk = min(chunk, S)
+    n_chunks = (S + chunk - 1) // chunk
+    pad = n_chunks * chunk - S
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        lm = loss_mask if loss_mask is not None else jnp.ones((B, S), jnp.float32)
+        loss_mask = jnp.pad(lm, ((0, 0), (0, pad)))
+    elif loss_mask is None:
+        loss_mask = jnp.ones((B, S), jnp.float32)
+
+    xc = jnp.moveaxis(x.reshape(B, n_chunks, chunk, D), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(B, n_chunks, chunk), 1, 0)
+    mc = jnp.moveaxis(loss_mask.reshape(B, n_chunks, chunk), 1, 0)
+
+    @functools.partial(jax.checkpoint, policy=jax.checkpoint_policies.nothing_saveable)
+    def chunk_nll(carry, inp):
+        total, count = carry
+        xi, li, mi = inp
+        logits = jnp.einsum("bsd,dv->bsv", xi, w.astype(xi.dtype))
+        if cfg.logits_soft_cap is not None:
+            logits = cfg.logits_soft_cap * jnp.tanh(logits / cfg.logits_soft_cap)
+        logits = constrain(logits, ("batch", None, "vocab")).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, li[..., None], axis=-1)[..., 0]
+        nll = (logz - gold) * mi
+        return (total + jnp.sum(nll), count + jnp.sum(mi)), None
+
+    (total, count), _ = model_scan(
+        chunk_nll, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)), (xc, lc, mc)
+    )
+    return total, count
+
+
+def loss_fn(params, batch: dict, cfg: TransformerConfig) -> tuple[Array, dict]:
+    """Next-token cross entropy (fp32 logsumexp, vocab-chunked), + MoE aux."""
+    values = jax.tree.map(lambda p: p.value if is_param(p) else p, params, is_leaf=is_param)
+    x, aux = backbone(values, batch["tokens"], cfg)
+    total, count = chunked_softmax_xent(
+        x, _unembed_weight(values, cfg), batch["labels"], batch.get("loss_mask"), cfg
+    )
+    loss = total / jnp.maximum(count, 1.0)
+    return loss + aux, {"loss": loss, "aux_loss": aux, "denom": count}
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + single-token decode with KV cache.
+# ---------------------------------------------------------------------------
+
+
+def cache_capacity(cfg: TransformerConfig, seq_len: int) -> int:
+    if cfg.sliding_window is not None:
+        return min(seq_len, cfg.sliding_window)
+    return seq_len
+
+
+def init_cache(cfg: TransformerConfig, batch: int, seq_len: int) -> A.KVCache:
+    return A.init_cache(
+        cfg.n_layers,
+        batch,
+        cache_capacity(cfg, seq_len),
+        cfg.n_kv_heads,
+        cfg.head_dim,
+        dtype=jnp.bfloat16,
+    )
+
+
+def prefill(params, tokens: Array, cfg: TransformerConfig, cache: A.KVCache):
+    """Run the prompt, fill the cache; returns (last-token logits, cache)."""
+    values = jax.tree.map(lambda p: p.value if is_param(p) else p, params, is_leaf=is_param)
+    B, S = tokens.shape
+    C = cache.k.shape[2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    x = _embed_tokens(values, tokens, cfg)
+
+    def body(carry, scanned):
+        x = carry
+        lp, _ = scanned
+        x, _, k, v = layer_forward(lp, x, positions, cfg)
+        # Keep the last C positions in the (ring) cache, ring-aligned so that
+        # slot s holds absolute position p with p % C == s.
+        if S >= C:
+            start = S - C
+            k_keep = jax.lax.dynamic_slice_in_dim(k, start, C, 1)
+            v_keep = jax.lax.dynamic_slice_in_dim(v, start, C, 1)
+            shift = start % C
+            k_keep = jnp.roll(k_keep, shift, axis=1)
+            v_keep = jnp.roll(v_keep, shift, axis=1)
+        else:
+            k_keep = jnp.pad(k, ((0, 0), (0, C - S), (0, 0), (0, 0)))
+            v_keep = jnp.pad(v, ((0, 0), (0, C - S), (0, 0), (0, 0)))
+        return x, (k_keep.astype(jnp.bfloat16), v_keep.astype(jnp.bfloat16))
+
+    body = _maybe_remat(body, cfg)
+    x, (ck, cv) = model_scan(
+        body, x, (values["layers"], jnp.arange(cfg.n_layers))
+    )
+    x = _rms(x, values["final_norm"], cfg.norm_eps)
+    logits = _unembed(values, x[:, -1:, :], cfg)[:, 0]
+    new_cache = A.KVCache(k=ck, v=cv, pos=jnp.full((B,), S, jnp.int32))
+    return logits, new_cache
+
+
+def decode_step(params, cache: A.KVCache, tokens: Array, cfg: TransformerConfig,
+                attn_fn=None):
+    """One decode step.  tokens: [B] int32.  Returns (logits [B, V], cache).
+
+    ``attn_fn(q, ck, cv, pos)``: optional attention override — the
+    sequence-parallel (flash-decoding) path installs a shard_map here
+    (repro.distributed.steps.make_lm_decode_step(seq_parallel=True)).
+    """
+    values = jax.tree.map(lambda p: p.value if is_param(p) else p, params, is_leaf=is_param)
+    B = tokens.shape[0]
+    pos = cache.pos  # [B] position being written
+    positions = pos[:, None]
+    x = _embed_tokens(values, tokens[:, None], cfg)
+
+    def body(x, scanned):
+        lp, ck, cv = scanned
+        h = _rms(x, lp["ln1"], cfg.norm_eps)
+        q, k, v = _qkv(lp, h, cfg, positions)
+        ck, cv = A.cache_update_layer(ck, cv, k, v, pos)
+        if attn_fn is not None:
+            attn = attn_fn(q, ck, cv, pos)
+        else:
+            attn = A.decode_attention_layer(
+                q,
+                ck,
+                cv,
+                pos,
+                window=cfg.sliding_window,
+                kv_chunk=cfg.kv_chunk,
+                logits_soft_cap=cfg.logits_soft_cap,
+            )
+        attn = jnp.einsum("bshk,hkd->bsd", attn, lp["wo"].astype(x.dtype))
+        x = x + attn
+        h = _rms(x, lp["ln2"], cfg.norm_eps)
+        if cfg.moe is not None:
+            y, _ = M.apply_moe(lp["moe"], h, cfg.moe, act=ACTS[cfg.act])
+        else:
+            act = ACTS[cfg.act]
+            ff = act(h @ lp["wi_gate"].astype(h.dtype)) * (h @ lp["wi_up"].astype(h.dtype))
+            y = ff @ lp["wff_o"].astype(h.dtype)
+        return x + y, (ck, cv)
+
+    x, (ck, cv) = model_scan(body, x, (values["layers"], cache.k, cache.v))
+    x = _rms(x, values["final_norm"], cfg.norm_eps)
+    logits = _unembed(values, x, cfg)[:, 0]
+    return logits, A.KVCache(k=ck, v=cv, pos=pos + 1)

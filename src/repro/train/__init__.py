@@ -1,0 +1,15 @@
+"""Training substrate: optimizers, schedules, checkpointing, the loop."""
+from repro.train.optim import (  # noqa: F401
+    OptState,
+    adamw,
+    clip_by_global_norm,
+    sgdm,
+    warmup_cosine,
+)
+from repro.train.checkpoint import (  # noqa: F401
+    CheckpointManager,
+    latest_step,
+    restore,
+    save,
+)
+from repro.train.loop import TrainLoop, TrainLoopConfig  # noqa: F401

@@ -1,0 +1,127 @@
+"""Registry integrity + every (arch x shape) cell lowers in smoke mode.
+
+The full-scale lowering is the dry-run's job (launch/dryrun.py, 512 devices);
+here we prove the same code path traces on a 1x1 mesh with reduced configs —
+cheap, exhaustive, runs in CI.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import registry as REG
+
+ALL_CELLS = [(a, s) for a, s, kind, _ in REG.all_cells(include_knn=True)
+             if kind != "skip"]
+SKIPPED = [(a, s, r) for a, s, kind, r in REG.all_cells() if kind == "skip"]
+
+
+def test_registry_contains_all_assigned():
+    assert sorted(REG.ASSIGNED) == sorted([
+        "h2o-danube-3-4b", "yi-6b", "gemma-2b", "mixtral-8x22b",
+        "qwen3-moe-30b-a3b", "nequip", "xdeepfm", "dlrm-rm2", "bst",
+        "two-tower-retrieval",
+    ])
+
+
+def test_cell_count_is_40():
+    """10 archs x 4 shapes; skips are still declared cells."""
+    cells = REG.all_cells()
+    assert len(cells) == 40
+    assert len(SKIPPED) == 3  # yi-6b, gemma-2b, qwen3 long_500k
+
+
+def test_skips_documented():
+    for a, s, r in SKIPPED:
+        assert s == "long_500k"
+        assert "attention" in r
+
+
+def test_unknown_arch_raises():
+    with pytest.raises(KeyError):
+        REG.get("nonexistent")
+
+
+@pytest.mark.parametrize("arch_id,shape", ALL_CELLS)
+def test_cell_lowers_smoke(arch_id, shape, rules):
+    arch = REG.get(arch_id)
+    fn, args = arch.build(rules, shape, smoke=True)
+    lowered = fn.lower(*args)
+    assert lowered is not None
+
+
+@pytest.mark.parametrize("arch_id", REG.ASSIGNED)
+def test_full_input_specs_match_assignment(arch_id):
+    """Spot-check the full-scale shapes against the assignment sheet."""
+    arch = REG.get(arch_id)
+    if arch.family == "lm":
+        specs = arch.input_specs("train_4k")
+        assert specs["tokens"].shape == (256, 4096)
+        specs = arch.input_specs("prefill_32k")
+        assert specs["tokens"].shape == (32, 32768)
+        specs = arch.input_specs("decode_32k")
+        assert specs["tokens"].shape == (128,)
+        cfg = arch.full_config()
+        C = specs["cache"].k.shape[2]
+        if cfg.sliding_window:
+            assert C == min(32768, cfg.sliding_window)
+        else:
+            assert C == 32768
+    elif arch.family == "gnn":
+        cells = {c.name: c for c in arch.shapes}
+        assert cells["full_graph_sm"].params["n_nodes"] == 2708
+        assert cells["ogb_products"].params["n_nodes"] == 2449029
+        assert cells["molecule"].params["batch"] == 128
+        # padded edges stay within 512 of the assigned count
+        assert 0 <= cells["ogb_products"].params["n_edges"] - 61859140 < 512
+    else:
+        specs = arch.input_specs("train_batch")
+        lead = next(iter(specs.values())).shape[0]
+        assert lead == 65536
+        cells = {c.name: c for c in arch.shapes}
+        if arch_id == "two-tower-retrieval":
+            assert cells["retrieval_cand"].params["n_candidates"] == 1_000_000
+        else:
+            assert cells["retrieval_cand"].params["batch"] == 1_000_000
+
+
+def test_lm_full_configs_match_assignment():
+    cfgs = {a: REG.get(a).full_config() for a in
+            ("h2o-danube-3-4b", "yi-6b", "gemma-2b", "mixtral-8x22b",
+             "qwen3-moe-30b-a3b")}
+    c = cfgs["h2o-danube-3-4b"]
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab) == \
+        (24, 3840, 32, 8, 10240, 32000)
+    c = cfgs["yi-6b"]
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab) == \
+        (32, 4096, 32, 4, 11008, 64000)
+    c = cfgs["gemma-2b"]
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab) == \
+        (18, 2048, 8, 1, 16384, 256000)
+    assert c.head_dim == 256
+    c = cfgs["mixtral-8x22b"]
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.vocab) == \
+        (56, 6144, 48, 8, 32768)
+    assert (c.moe.n_experts, c.moe.top_k, c.moe.d_ff) == (8, 2, 16384)
+    c = cfgs["qwen3-moe-30b-a3b"]
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.vocab) == \
+        (48, 2048, 32, 4, 151936)
+    assert (c.moe.n_experts, c.moe.top_k, c.moe.d_ff) == (128, 8, 768)
+
+
+def test_gnn_full_config_matches_assignment():
+    c = REG.get("nequip").full_config()
+    assert (c.n_layers, c.d_hidden, c.l_max, c.n_rbf, c.cutoff) == (5, 32, 2, 8, 5.0)
+
+
+def test_recsys_full_configs_match_assignment():
+    c = REG.get("xdeepfm").full_config()
+    assert (c.n_sparse, c.embed_dim, c.cin_layers, c.mlp) == \
+        (39, 10, (200, 200, 200), (400, 400))
+    c = REG.get("dlrm-rm2").full_config()
+    assert (c.n_dense, c.n_sparse, c.embed_dim) == (13, 26, 64)
+    assert c.bot_mlp == (512, 256, 64) and c.top_mlp == (512, 512, 256, 1)
+    c = REG.get("bst").full_config()
+    assert (c.embed_dim, c.seq_len, c.n_blocks, c.n_heads) == (32, 20, 1, 8)
+    assert c.mlp == (1024, 512, 256)
+    c = REG.get("two-tower-retrieval").full_config()
+    assert c.embed_dim == 256 and c.tower_mlp == (1024, 512, 256)

@@ -1,0 +1,89 @@
+"""Distance registry: cumulative == matmul form, chunking invariance, axioms."""
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.distances import REGISTRY, get_distance, is_symmetric, matmul_finalize
+
+SETTINGS = dict(max_examples=25, deadline=None,
+                suppress_health_check=[hypothesis.HealthCheck.too_slow])
+
+
+def _data(dist, m, n, d, seed):
+    g = np.random.default_rng(seed)
+    if dist.needs_positive:
+        x = g.gamma(1.0, 1.0, (m, d)).astype(np.float32) + 1e-4
+        y = g.gamma(1.0, 1.0, (n, d)).astype(np.float32) + 1e-4
+        x /= x.sum(1, keepdims=True)
+        y /= y.sum(1, keepdims=True)
+    else:
+        x = g.standard_normal((m, d), dtype=np.float32)
+        y = g.standard_normal((n, d), dtype=np.float32)
+    return jnp.asarray(x), jnp.asarray(y)
+
+
+@pytest.mark.parametrize("name", sorted(REGISTRY))
+def test_matmul_form_matches_cumulative(name):
+    dist = get_distance(name)
+    x, y = _data(dist, 37, 53, 96, 0)
+    ref = dist.pairwise(x, y)
+    mx = dist.matmul_form.pairwise(x, y, matmul_finalize(dist))
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(mx), atol=2e-3, rtol=1e-3)
+
+
+@hypothesis.settings(**SETTINGS)
+@hypothesis.given(
+    name=st.sampled_from(sorted(REGISTRY)),
+    m=st.integers(1, 24), n=st.integers(1, 24), d=st.integers(1, 64),
+    chunk=st.integers(1, 64), seed=st.integers(0, 10_000),
+)
+def test_chunking_invariance(name, m, n, d, chunk, seed):
+    """The paper's C2-streaming (Sect. 5) must not change the result."""
+    dist = get_distance(name)
+    x, y = _data(dist, m, n, d, seed)
+    full = dist.pairwise(x, y, chunk=None)
+    chunked = dist.pairwise(x, y, chunk=min(chunk, d))
+    np.testing.assert_allclose(np.asarray(full), np.asarray(chunked),
+                               atol=1e-4, rtol=1e-4)
+
+
+@hypothesis.settings(**SETTINGS)
+@hypothesis.given(
+    name=st.sampled_from([n for n in REGISTRY if is_symmetric(n)]),
+    m=st.integers(1, 16), d=st.integers(1, 32), seed=st.integers(0, 10_000),
+)
+def test_symmetry(name, m, d, seed):
+    """Sect. 3: the half-triangle optimization requires delta(u,v)=delta(v,u)."""
+    dist = get_distance(name)
+    x, _ = _data(dist, m, m, d, seed)
+    D = np.asarray(dist.pairwise(x, x))
+    np.testing.assert_allclose(D, D.T, atol=1e-4)
+
+
+def test_kl_is_asymmetric_and_nonnegative():
+    dist = get_distance("kl")
+    x, y = _data(dist, 8, 8, 32, 3)
+    D = np.asarray(dist.pairwise(x, y))
+    assert (D > -1e-5).all()
+    Dt = np.asarray(dist.pairwise(y, x))
+    assert not np.allclose(D, Dt.T, atol=1e-3)
+
+
+def test_self_distance_zero():
+    for name in ("sqeuclidean", "euclidean", "hellinger", "kl"):
+        dist = get_distance(name)
+        x, _ = _data(dist, 6, 6, 16, 4)
+        D = np.asarray(dist.pairwise(x, x))
+        np.testing.assert_allclose(np.diag(D), 0.0, atol=1e-4)
+
+
+def test_euclidean_triangle_inequality():
+    dist = get_distance("euclidean")
+    x, _ = _data(dist, 10, 10, 8, 5)
+    D = np.asarray(dist.pairwise(x, x))
+    for i in range(10):
+        for j in range(10):
+            for k in range(10):
+                assert D[i, j] <= D[i, k] + D[k, j] + 1e-4

@@ -1,0 +1,65 @@
+"""Paper Sect. 4: zigzag grid schedule — coverage + balance properties."""
+import hypothesis
+import hypothesis.strategies as st
+
+from repro.core import grid as G
+
+SETTINGS = dict(max_examples=50, deadline=None)
+
+
+@hypothesis.settings(**SETTINGS)
+@hypothesis.given(n_grids=st.integers(1, 64), n_dev=st.integers(1, 16))
+def test_every_tile_owned_exactly_once(n_grids, n_dev):
+    seen = {}
+    for j in range(n_dev):
+        for t in G.tiles_for_device(j, n_grids, n_dev):
+            assert t not in seen, f"tile {t} owned by {seen[t]} and {j}"
+            seen[t] = j
+    expect = {(X, Y) for Y in range(n_grids) for X in range(Y, n_grids)}
+    assert set(seen) == expect
+
+
+@hypothesis.settings(**SETTINGS)
+@hypothesis.given(n_dev=st.integers(1, 16), periods=st.integers(1, 8))
+def test_zigzag_exact_balance_on_full_periods(n_dev, periods):
+    """When nGrids is a multiple of 2*nDevices the zigzag balance is EXACT —
+    the paper's Fig. 3 pairing of long and short rows."""
+    n_grids = 2 * n_dev * periods
+    assert G.workload_imbalance(n_grids, n_dev) == 0
+
+
+@hypothesis.settings(**SETTINGS)
+@hypothesis.given(n_grids=st.integers(1, 128), n_dev=st.integers(1, 16))
+def test_zigzag_imbalance_bounded(n_grids, n_dev):
+    """Off full periods, imbalance stays < the longest row (nGrids tiles)."""
+    assert G.workload_imbalance(n_grids, n_dev) <= n_grids
+
+
+@hypothesis.settings(**SETTINGS)
+@hypothesis.given(i=st.integers(0, 1000), n_dev=st.integers(1, 32))
+def test_device_assignment_formula(i, n_dev):
+    """Matches the paper's rule: i mod 2P == j or i mod 2P == 2P - j - 1."""
+    j = G.device_for_grid_row(i, n_dev)
+    r = i % (2 * n_dev)
+    assert r == j or r == 2 * n_dev - j - 1
+    assert 0 <= j < n_dev
+
+
+def test_schedule_padding():
+    s = G.make_schedule(1000, 128, 3)
+    assert s.n_grids == 8
+    assert s.tiles.shape[0] == 3
+    # padded entries are invalid
+    for j in range(3):
+        n_valid = int(s.valid[j].sum())
+        assert n_valid == len(G.tiles_for_device(j, 8, 3))
+
+
+@hypothesis.settings(**SETTINGS)
+@hypothesis.given(n=st.integers(1, 10_000), n_dev=st.sampled_from([1, 2, 4, 8]))
+def test_choose_gsize_gives_enough_tiles(n, n_dev):
+    gsize = G.choose_gsize(n, n_dev)
+    assert gsize % 128 == 0 or gsize == max(128, n)
+    n_grids = -(-n // gsize)
+    total = n_grids * (n_grids + 1) // 2
+    assert total >= min(8 * n_dev, 1)  # at least the target, when feasible

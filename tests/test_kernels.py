@@ -1,0 +1,120 @@
+"""Pallas kernel sweeps: shapes x dtypes x distances vs ref.py oracles.
+
+All kernels run in interpret mode (CPU container); on TPU the same entry
+points lower to Mosaic.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.distances import REGISTRY, get_distance
+from repro.kernels import ops, ref
+
+
+def _data(name, m, n, d, seed, dtype=np.float32):
+    g = np.random.default_rng(seed)
+    dist = get_distance(name)
+    if dist.needs_positive:
+        x = g.gamma(1.0, 1.0, (m, d)).astype(dtype) + 1e-4
+        y = g.gamma(1.0, 1.0, (n, d)).astype(dtype) + 1e-4
+        x /= x.sum(1, keepdims=True)
+        y /= y.sum(1, keepdims=True)
+    else:
+        x = g.standard_normal((m, d)).astype(dtype)
+        y = g.standard_normal((n, d)).astype(dtype)
+    return jnp.asarray(x), jnp.asarray(y)
+
+
+@pytest.mark.parametrize("name", sorted(REGISTRY))
+@pytest.mark.parametrize("shape", [(64, 64, 32), (100, 130, 96), (256, 512, 256)])
+def test_pairwise_distance_mxu_sweep(name, shape):
+    m, n, d = shape
+    x, y = _data(name, m, n, d, 0)
+    out = ops.pairwise_distance(x, y, distance=name, bm=64, bn=64, bd=32)
+    want = ref.pairwise_distance_ref(x, y, distance=name)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=3e-3, rtol=1e-3)
+
+
+@pytest.mark.parametrize("name", ["sqeuclidean", "kl", "hellinger"])
+def test_pairwise_distance_cumulative_path(name):
+    """The faithful per-coordinate dbar kernel (paper Fig. 7) on the VPU."""
+    x, y = _data(name, 64, 64, 64, 1)
+    out = ops.pairwise_distance(x, y, distance=name, bm=64, bn=64, bd=32,
+                                cumulative=True)
+    want = ref.pairwise_distance_ref(x, y, distance=name)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=3e-3, rtol=1e-3)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float16])
+def test_pairwise_distance_dtypes(dtype):
+    x, y = _data("sqeuclidean", 64, 64, 64, 2, dtype=dtype)
+    out = ops.pairwise_distance(x, y, distance="sqeuclidean", bm=64, bn=64, bd=32)
+    want = ref.pairwise_distance_ref(x.astype(jnp.float32), y.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=5e-2 if dtype == np.float16 else 3e-3,
+                               rtol=1e-2 if dtype == np.float16 else 1e-3)
+
+
+def test_pairwise_distance_bf16():
+    x, y = _data("sqeuclidean", 64, 64, 64, 6)
+    out = ops.pairwise_distance(x.astype(jnp.bfloat16), y.astype(jnp.bfloat16),
+                                distance="sqeuclidean", bm=64, bn=64, bd=32)
+    want = ref.pairwise_distance_ref(x, y)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=0.5, rtol=5e-2)
+
+
+@pytest.mark.parametrize("shape,k", [
+    ((32, 128), 1), ((32, 128), 7), ((64, 1000), 16),
+    ((1, 4096), 100), ((128, 512), 32),
+])
+def test_stream_topk_sweep(shape, k):
+    g = np.random.default_rng(3)
+    x = jnp.asarray(g.standard_normal(shape, dtype=np.float32))
+    v, i = ops.stream_topk(x, k)
+    rv, ri = ref.stream_topk_ref(x, k)
+    np.testing.assert_allclose(np.asarray(v), np.asarray(rv), atol=1e-6)
+    got = np.take_along_axis(np.asarray(x), np.asarray(i), axis=1)
+    np.testing.assert_allclose(got, np.asarray(rv), atol=1e-6)
+
+
+def test_stream_topk_with_ties():
+    x = jnp.zeros((4, 256), jnp.float32)
+    v, i = ops.stream_topk(x, 8)
+    assert np.asarray(v).shape == (4, 8)
+    np.testing.assert_allclose(np.asarray(v), 0.0)
+    # indices must be distinct per row
+    ii = np.asarray(i)
+    for r in range(4):
+        assert len(set(ii[r])) == 8
+
+
+@pytest.mark.parametrize("name", ["sqeuclidean", "neg_dot", "neg_cosine", "kl"])
+@pytest.mark.parametrize("mnk", [(64, 128, 4), (130, 1000, 25), (256, 512, 100)])
+def test_fused_knn_sweep(name, mnk):
+    m, n, k = mnk
+    x, y = _data(name, m, n, 64, 4)
+    res = ops.fused_knn(x, y, k, distance=name, tile_m=64, tile_n=128, bd=32)
+    rv, ri = ref.fused_knn_ref(x, y, k, distance=name)
+    np.testing.assert_allclose(np.asarray(res.distances), np.asarray(rv),
+                               atol=3e-3, rtol=1e-3)
+
+
+def test_fused_knn_exclude_self_and_db_valid():
+    x, _ = _data("sqeuclidean", 64, 64, 32, 5)
+    res = ops.fused_knn(x, x, 5, tile_m=64, tile_n=64, bd=32, exclude_self=True)
+    assert not (np.asarray(res.indices) == np.arange(64)[:, None]).any()
+    # db_valid masks trailing rows
+    res = ops.fused_knn(x, x, 5, tile_m=64, tile_n=64, bd=32,
+                        db_valid=jnp.int32(10))
+    assert (np.asarray(res.indices) < 10).all()
+
+
+def test_fused_equals_unfused_pipeline():
+    """Beyond-paper fusion must be bit-consistent with phase1+phase2."""
+    x, y = _data("sqeuclidean", 128, 256, 64, 7)
+    fused = ops.fused_knn(x, y, 20, tile_m=64, tile_n=128, bd=32)
+    tiles = ops.pairwise_distance(x, y, distance="sqeuclidean", bm=64, bn=64, bd=32)
+    v2, i2 = ops.stream_topk(tiles, 20)
+    np.testing.assert_allclose(np.asarray(fused.distances), np.asarray(v2), atol=1e-5)

@@ -1,0 +1,189 @@
+"""LM substrate: per-arch reduced smoke tests + attention/MoE invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry as REG
+from repro.models import attention as A
+from repro.models import transformer as Tr
+from repro.models.moe import MoEConfig, apply_moe, init_moe
+
+LM_ARCHS = ["h2o-danube-3-4b", "yi-6b", "gemma-2b", "mixtral-8x22b",
+            "qwen3-moe-30b-a3b"]
+
+
+@pytest.mark.parametrize("arch_id", LM_ARCHS)
+def test_arch_smoke_forward_and_train(arch_id, rules):
+    """Reduced config: one forward + one train step, shapes + no NaNs."""
+    from repro.distributed import steps as ST
+
+    arch = REG.get(arch_id)
+    cfg = arch.smoke_config()
+    params = arch.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0, cfg.vocab)
+    logits, aux = Tr.forward(params, toks, cfg)
+    assert logits.shape == (2, 32, cfg.vocab)
+    assert not bool(jnp.isnan(logits).any())
+
+    loss, baxes = ST.lm_loss(cfg)
+    _, jitted, _, opt = ST.make_train_step(
+        loss, arch.abstract_params(cfg), rules, baxes,
+        ST.StepConfig(peak_lr=1e-2, warmup_steps=2, total_steps=20))
+    state = ST.init_state(opt, params)
+    batch = {"tokens": toks, "labels": toks}
+    fn = jitted(batch)
+    l0 = None
+    for _ in range(5):
+        state, m = fn(state, batch)
+        if l0 is None:
+            l0 = float(m["loss"])
+    assert np.isfinite(float(m["loss"]))
+    assert float(m["loss"]) < l0, f"loss did not decrease ({l0} -> {m['loss']})"
+
+
+@pytest.mark.parametrize("arch_id", LM_ARCHS)
+def test_arch_decode_consistency(arch_id):
+    """prefill + decode == full forward at the decoded position.
+
+    MoE archs: capacity-factor token dropping depends on the routing-group
+    size, which legitimately differs between full-sequence forward and
+    one-token decode — so the consistency check runs at a capacity factor
+    high enough that nothing drops in either mode.
+    """
+    import dataclasses
+
+    arch = REG.get(arch_id)
+    cfg = arch.smoke_config()
+    if cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    params = arch.init_params(jax.random.PRNGKey(0), cfg)
+    B, S, pref = 2, 24, 16
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+    cache = Tr.init_cache(cfg, B, S)
+    logits, cache = Tr.prefill(params, toks[:, :pref], cfg, cache)
+    for t in range(pref, S - 1):
+        logits, cache = Tr.decode_step(params, cache, toks[:, t], cfg)
+    full, _ = Tr.forward(params, toks[:, : S - 1], cfg)
+    err = float(jnp.max(jnp.abs(logits - full[:, S - 2])))
+    assert err < 5e-2, err  # bf16 cache tolerance
+
+
+def test_swa_ring_cache_matches_window():
+    """Ring cache decode == full-cache decode when window covers history."""
+    cfg = Tr.TransformerConfig(n_layers=1, d_model=32, n_heads=2, n_kv_heads=1,
+                               head_dim=16, d_ff=64, vocab=64,
+                               sliding_window=8, dtype=jnp.float32)
+    params = Tr.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 30), 0, 64)
+    # ring cache capped at the window
+    cache = Tr.init_cache(cfg, 1, 30)
+    assert cache.k.shape[2] == 8  # capacity == window
+    lg, cache = Tr.prefill(params, toks[:, :20], cfg, cache)
+    lg, cache = Tr.decode_step(params, cache, toks[:, 20], cfg)
+    full, _ = Tr.forward(params, toks[:, :21], cfg)
+    err = float(jnp.max(jnp.abs(lg - full[:, 20])))
+    assert err < 5e-2, err
+
+
+def test_rope_rotation_property():
+    """Relative-position property: scores depend on (q_pos - k_pos) only."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 1, 2, 32))
+    p0 = jnp.array([[3]], jnp.int32)
+    p1 = jnp.array([[10]], jnp.int32)
+    q0 = A.apply_rope(x, p0)
+    k0 = A.apply_rope(x, p0)
+    q1 = A.apply_rope(x, p1)
+    k1 = A.apply_rope(x, p1)
+    s0 = jnp.einsum("bshd,bshd->", q0, k0)
+    s1 = jnp.einsum("bshd,bshd->", q1, k1)
+    np.testing.assert_allclose(float(s0), float(s1), rtol=1e-5)
+
+
+def test_attention_chunking_invariance():
+    """Online-softmax chunked attention == unchunked reference."""
+    B, S, Hq, Hkv, D = 2, 37, 4, 2, 16
+    g = jax.random.PRNGKey(0)
+    q = jax.random.normal(g, (B, S, Hq, D))
+    k = jax.random.normal(jax.random.fold_in(g, 1), (B, S, Hkv, D))
+    v = jax.random.normal(jax.random.fold_in(g, 2), (B, S, Hkv, D))
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    outs = [
+        A.gqa_attention(q, k, v, q_pos=pos, k_pos=pos, kv_chunk=c)
+        for c in (5, 16, 64)
+    ]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
+                                   atol=1e-5, rtol=1e-5)
+
+
+def test_sliding_window_masks_past():
+    B, S, H, D = 1, 16, 1, 8
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, S, H, D))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, H, D))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, H, D))
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    full = A.gqa_attention(q, k, v, q_pos=pos, k_pos=pos, window=None)
+    win = A.gqa_attention(q, k, v, q_pos=pos, k_pos=pos, window=4)
+    # last query attends only to the previous 4 positions under the window
+    assert not np.allclose(np.asarray(full[:, -1]), np.asarray(win[:, -1]))
+    # but queries at pos < window see no difference
+    np.testing.assert_allclose(np.asarray(full[:, 3]), np.asarray(win[:, 3]),
+                               atol=1e-5)
+
+
+def test_moe_routing_topk_and_capacity():
+    cfg = MoEConfig(n_experts=8, top_k=2, d_ff=16, group_size=32,
+                    capacity_factor=1.0)
+    params = init_moe(jax.random.PRNGKey(0), 16, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, 16))
+    y, metrics = apply_moe(params, x, cfg)
+    assert y.shape == x.shape
+    assert not bool(jnp.isnan(y).any())
+    assert 0.0 <= float(metrics["drop_frac"]) < 0.8
+    assert float(metrics["aux_loss"]) > 0
+
+
+def test_moe_capacity_one_expert_all_tokens():
+    """If the router collapses, capacity bounds dispatch (no blowup)."""
+    cfg = MoEConfig(n_experts=4, top_k=1, d_ff=8, group_size=16,
+                    capacity_factor=1.0)
+    params = init_moe(jax.random.PRNGKey(0), 8, cfg)
+    # bias router towards expert 0 by overwriting weights; positive inputs
+    # guarantee logits_0 dominates for every token
+    params["router"].value = jnp.zeros_like(params["router"].value).at[:, 0].set(100.0)
+    x = jnp.abs(jax.random.normal(jax.random.PRNGKey(1), (1, 16, 8))) + 0.1
+    y, metrics = apply_moe(params, x, cfg)
+    # capacity = 16*1/4*1.0 = 4 of 16 tokens kept -> 75% dropped
+    assert float(metrics["drop_frac"]) > 0.5
+
+
+def test_chunked_xent_matches_full():
+    cfg = Tr.TransformerConfig(n_layers=1, d_model=32, n_heads=2, n_kv_heads=1,
+                               head_dim=16, d_ff=64, vocab=128,
+                               dtype=jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 33, 32))
+    w = jax.random.normal(jax.random.PRNGKey(1), (32, 128)) * 0.1
+    labels = jax.random.randint(jax.random.PRNGKey(2), (2, 33), 0, 128)
+    total, count = Tr.chunked_softmax_xent(x, w, labels, None, cfg, chunk=8)
+    logits = x @ w
+    logz = jax.nn.logsumexp(logits, -1)
+    gold = jnp.take_along_axis(logits, labels[..., None], -1)[..., 0]
+    np.testing.assert_allclose(float(total), float(jnp.sum(logz - gold)), rtol=1e-5)
+    assert float(count) == 66.0
+
+
+def test_param_count_properties():
+    for aid in LM_ARCHS:
+        cfg = REG.get(aid).full_config()
+        n = cfg.n_params
+        na = cfg.n_active_params
+        assert na <= n
+        if cfg.moe is not None:
+            assert na < n
+    # yi-6b should be ~6B params
+    yi = REG.get("yi-6b").full_config()
+    assert 5.5e9 < yi.n_params < 7e9, yi.n_params
+    mix = REG.get("mixtral-8x22b").full_config()
+    assert 1.2e11 < mix.n_params < 1.5e11, mix.n_params

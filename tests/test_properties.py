@@ -1,0 +1,137 @@
+"""Extra property tests over the newest invariants (hypothesis)."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import attention as A
+from repro.models import gnn as G
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# Irreducible l=2 storage (gnn.pack_t / unpack_t).
+# ---------------------------------------------------------------------------
+
+
+def _sym_traceless(g, shape):
+    a = g.standard_normal(shape + (3, 3, 4), dtype=np.float32)
+    t = 0.5 * (a + np.swapaxes(a, -3, -2))
+    tr = np.trace(t, axis1=-3, axis2=-2)
+    return t - np.eye(3, dtype=np.float32)[..., None] * tr[..., None, None, :] / 3.0
+
+
+@hypothesis.settings(**SETTINGS)
+@hypothesis.given(n=st.integers(1, 16), seed=st.integers(0, 10_000))
+def test_pack_unpack_roundtrip(n, seed):
+    t = _sym_traceless(np.random.default_rng(seed), (n,))
+    rt = np.asarray(G.unpack_t(G.pack_t(jnp.asarray(t))))
+    np.testing.assert_allclose(rt, t, atol=1e-6)
+
+
+@hypothesis.settings(**SETTINGS)
+@hypothesis.given(seed=st.integers(0, 10_000))
+def test_pack_rotation_linearity(seed):
+    """rotate(unpack(x5)) == unpack(R @ x5) for the induced linear action —
+    i.e. the 5-form is a representation (equivariance-preserving storage)."""
+    g = np.random.default_rng(seed)
+    t = jnp.asarray(_sym_traceless(g, (6,)))
+    Q, _ = np.linalg.qr(g.standard_normal((3, 3)))
+    Q = jnp.asarray(Q * np.sign(np.linalg.det(Q)), jnp.float32)
+    rot = jnp.einsum("ai,bj,nijc->nabc", Q, Q, G.unpack_t(G.pack_t(t)))
+    # pack/unpack of the rotated tensor must be the identity on it
+    np.testing.assert_allclose(np.asarray(G.unpack_t(G.pack_t(rot))),
+                               np.asarray(rot), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Flash-accumulator merge (the SP-decode correctness core).
+# ---------------------------------------------------------------------------
+
+
+@hypothesis.settings(**SETTINGS)
+@hypothesis.given(
+    sk=st.integers(2, 40), split=st.integers(1, 39), seed=st.integers(0, 10_000)
+)
+def test_mlo_merge_equals_joint(sk, split, seed):
+    """flash_mlo over [0:split) merged with [split:Sk) == flash_mlo over all."""
+    split = min(split, sk - 1)
+    kg = jax.random.PRNGKey(seed)
+    B, Sq, Hq, Hkv, D = 1, 3, 2, 1, 8
+    q = jax.random.normal(kg, (B, Sq, Hq, D))
+    k = jax.random.normal(jax.random.fold_in(kg, 1), (B, sk, Hkv, D))
+    v = jax.random.normal(jax.random.fold_in(kg, 2), (B, sk, Hkv, D))
+    q_pos = jnp.full((B, Sq), sk, jnp.int32)  # all keys visible
+    k_pos = jnp.broadcast_to(jnp.arange(sk)[None], (B, sk))
+
+    joint = A.flash_mlo(q, k, v, q_pos=q_pos, k_pos=k_pos, kv_chunk=7)
+    left = A.flash_mlo(q, k[:, :split], v[:, :split], q_pos=q_pos,
+                       k_pos=k_pos[:, :split], kv_chunk=7)
+    right = A.flash_mlo(q, k[:, split:], v[:, split:], q_pos=q_pos,
+                        k_pos=k_pos[:, split:], kv_chunk=7)
+    merged = A.mlo_merge([left, right])
+    out_joint = A.mlo_normalize(*joint, jnp.float32)
+    out_merged = A.mlo_normalize(*merged, jnp.float32)
+    np.testing.assert_allclose(np.asarray(out_joint), np.asarray(out_merged),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_cache_positions_range_consistency():
+    """Sharded slot ranges tile the full cache_positions result."""
+    pos = jnp.array([0, 3, 9, 17], jnp.int32)
+    C, P = 16, 4
+    full_p, full_v = A.cache_positions(pos, C)
+    parts_p, parts_v = [], []
+    for r in range(P):
+        pp, vv = A.cache_positions_range(pos, C, r * (C // P), C // P)
+        parts_p.append(pp)
+        parts_v.append(vv)
+    np.testing.assert_array_equal(np.asarray(full_p),
+                                  np.concatenate([np.asarray(x) for x in parts_p], 1))
+    np.testing.assert_array_equal(np.asarray(full_v),
+                                  np.concatenate([np.asarray(x) for x in parts_v], 1))
+
+
+# ---------------------------------------------------------------------------
+# Rowwise-adagrad invariants.
+# ---------------------------------------------------------------------------
+
+
+@hypothesis.settings(**SETTINGS)
+@hypothesis.given(seed=st.integers(0, 10_000), rows=st.integers(2, 32))
+def test_rowwise_adagrad_zero_rows_frozen(seed, rows):
+    from repro.train.optim import mixed_table_adamw
+
+    g = np.random.default_rng(seed)
+    p = {"tab": jnp.asarray(g.standard_normal((rows, 4), np.float32))}
+    is_table = {"tab": True}
+    opt = mixed_table_adamw(is_table)
+    state = opt.init(p)
+    grad = np.zeros((rows, 4), np.float32)
+    hot = g.integers(0, rows)
+    grad[hot] = 1.0
+    newp, state = opt.update({"tab": jnp.asarray(grad)}, state, p, jnp.float32(0.1))
+    moved = ~np.all(np.asarray(newp["tab"]) == np.asarray(p["tab"]), axis=1)
+    assert moved[hot]
+    assert moved.sum() == 1  # every other row bit-identical
+
+
+# ---------------------------------------------------------------------------
+# HLO stats edge cases.
+# ---------------------------------------------------------------------------
+
+
+def test_hlo_stats_reduce_scatter_and_groups():
+    from repro.launch.hlo_stats import collect_stats
+
+    hlo = """
+  %rs = f32[8]{0} reduce-scatter(f32[64] %x), replica_groups=[32,8], dimensions={0}
+  %aa = bf16[128]{0} all-to-all(bf16[128] %y), replica_groups={{0,1,2,3,4,5,6,7}}
+"""
+    st_ = collect_stats(hlo, 256)
+    assert st_.counts == {"reduce-scatter": 1, "all-to-all": 1}
+    # RS wire = (P-1) x result bytes with P=8 from replica_groups
+    expect = 7 * 8 * 4 + (7 / 8) * 128 * 2
+    assert abs(st_.wire_bytes_per_device - expect) < 1e-6

@@ -1,0 +1,92 @@
+"""Train-loop fault tolerance: resume, NaN guard, straggler detection."""
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train.loop import TrainLoop, TrainLoopConfig
+
+
+def _counting_step(state, batch):
+    return state + 1, {"loss": jnp.float32(1.0 / (float(state) + 1.0))}
+
+
+def test_runs_to_total_and_checkpoints(tmp_path):
+    loop = TrainLoop(_counting_step, lambda s: None,
+                     TrainLoopConfig(total_steps=17, checkpoint_dir=str(tmp_path),
+                                     checkpoint_every=5, log_every=5))
+    st, end = loop.run(jnp.int32(0))
+    assert end == 17 and int(st) == 17
+    from repro.train.checkpoint import latest_step
+    assert latest_step(str(tmp_path)) == 17
+
+
+def test_auto_resume_continues(tmp_path):
+    cfg = TrainLoopConfig(total_steps=10, checkpoint_dir=str(tmp_path),
+                          checkpoint_every=5)
+    TrainLoop(_counting_step, lambda s: None, cfg).run(jnp.int32(0))
+    # "crash" happened; new process resumes from step 10 and trains to 20
+    cfg2 = TrainLoopConfig(total_steps=20, checkpoint_dir=str(tmp_path),
+                           checkpoint_every=5)
+    loop2 = TrainLoop(_counting_step, lambda s: None, cfg2)
+    st, end = loop2.run(jnp.int32(0))
+    assert end == 20 and int(st) == 20
+    # it did NOT replay steps 0-9
+    assert len([h for h in loop2.history]) <= 4
+
+
+def test_nan_guard_skips_then_aborts(tmp_path):
+    calls = {"n": 0}
+
+    def sometimes_nan(state, batch):
+        calls["n"] += 1
+        bad = calls["n"] in (3, 4)  # two isolated bad steps -> recovered
+        return state + 1, {"loss": jnp.float32(float("nan") if bad else 1.0)}
+
+    loop = TrainLoop(sometimes_nan, lambda s: None,
+                     TrainLoopConfig(total_steps=10, max_bad_steps=3))
+    st, end = loop.run(jnp.int32(0))
+    assert end == 10
+    assert int(st) == 8  # two updates skipped
+
+    def always_nan(state, batch):
+        return state, {"loss": jnp.float32(float("nan"))}
+
+    loop2 = TrainLoop(always_nan, lambda s: None,
+                      TrainLoopConfig(total_steps=100, max_bad_steps=4,
+                                      checkpoint_dir=str(tmp_path)))
+    with pytest.raises(FloatingPointError):
+        loop2.run(jnp.int32(0))
+    # a rescue checkpoint was written before aborting
+    from repro.train.checkpoint import latest_step
+    assert latest_step(str(tmp_path)) is not None
+
+
+def test_straggler_detection():
+    def slow_every_7(state, batch):
+        if int(state) % 7 == 6:
+            time.sleep(0.08)
+        else:
+            time.sleep(0.002)
+        return state + 1, {"loss": jnp.float32(1.0)}
+
+    loop = TrainLoop(slow_every_7, lambda s: None,
+                     TrainLoopConfig(total_steps=21, straggler_factor=5.0,
+                                     straggler_warmup=3))
+    loop.run(jnp.int32(0))
+    assert len(loop.quarantine) >= 1
+    assert all(q["dt"] > 5.0 * q["ewma"] for q in loop.quarantine)
+
+
+def test_metrics_jsonl(tmp_path):
+    import json
+
+    path = str(tmp_path / "metrics.jsonl")
+    loop = TrainLoop(_counting_step, lambda s: None,
+                     TrainLoopConfig(total_steps=10, log_every=2,
+                                     metrics_path=path))
+    loop.run(jnp.int32(0))
+    recs = [json.loads(l) for l in open(path)]
+    assert len(recs) >= 5
+    assert all("loss" in r and "step" in r for r in recs)
