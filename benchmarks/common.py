@@ -32,6 +32,8 @@ def run_with_devices(code: str, n_devices: int, timeout: int = 1200) -> str:
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
     env["PYTHONPATH"] = os.path.join(REPO, "src")
+    # Toolchain gates first: snippets use jax.shard_map / AxisType directly.
+    code = "import repro  # noqa: F401 (jax API compat shims)\n" + code
     proc = subprocess.run([sys.executable, "-c", code], capture_output=True,
                           text=True, timeout=timeout, env=env)
     if proc.returncode != 0:

@@ -12,7 +12,7 @@ import sys
 import time
 
 
-SUITES = ("table1", "scaling", "kernels", "selection")
+SUITES = ("table1", "scaling", "kernels", "selection", "serving")
 
 
 def main() -> None:
@@ -32,6 +32,9 @@ def main() -> None:
         elif name == "selection":
             from benchmarks import selection
             selection.main()
+        elif name == "serving":
+            from benchmarks import serving
+            serving.main()
         else:
             raise SystemExit(f"unknown suite {name!r}; have {SUITES}")
     print(f"# total_wall_s,{time.time() - t0:.1f},")

@@ -1,0 +1,71 @@
+"""Serving benchmark: queries/sec + latency percentiles for repro.serving.
+
+Not a paper table — the serving subsystem is beyond-paper (EXPERIMENTS.md
+maps it as the "online retrieval" row).  Reports, in the standard
+``name,us_per_call,derived`` CSV format:
+
+  * steady-state batch latency (p50/p99) + queries/sec per batch size,
+    packed main segment only;
+  * the same with a live delta segment + tombstones (the two-segment merge
+    tax: one extra small scorer + one bitonic merge);
+  * index mutation throughput: upsert rows/sec into the delta, and
+    compact() wall time back to a packed main.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+
+
+def main(corpus: int = 8192, d: int = 64, k: int = 10,
+         batch_sizes=(8, 64, 256), batches: int = 12, churn: int = 512):
+    from repro.accounting import ServingMeter
+    from repro.data.synthetic import clustered_vectors
+    from repro.serving import EngineConfig, QueryEngine, RetrievalIndex
+
+    rng = np.random.default_rng(0)
+    vecs = clustered_vectors(corpus, d, seed=1)
+    index = RetrievalIndex.build(np.arange(corpus), vecs)
+
+    def sweep(tag: str, idx: RetrievalIndex):
+        for b in batch_sizes:
+            meter = ServingMeter()
+            eng = QueryEngine(idx, EngineConfig(k=k, min_batch=8, max_batch=1024),
+                              meter=meter)
+            for _ in range(batches):
+                q = clustered_vectors(b, d, seed=int(rng.integers(1 << 30)))
+                eng.search(q)
+            s = meter.summary()
+            emit(f"serving_{tag}_b{b}",
+                 (s["mean_ms"] / 1e3) if s["batches"] else 0.0,
+                 f"qps={s['qps']:.0f};p50_ms={s['p50_ms']:.2f};"
+                 f"p99_ms={s['p99_ms']:.2f};batches={s['batches']}")
+
+    # Packed main segment only.
+    sweep("main", index)
+
+    # With a live delta + tombstones: the two-segment merge tax.
+    index.delete(np.arange(churn))
+    index.upsert(np.arange(corpus, corpus + churn),
+                 clustered_vectors(churn, d, seed=3))
+    sweep("delta", index)
+
+    # Mutation throughput: delta upsert and compaction.
+    t0 = time.perf_counter()
+    index.upsert(np.arange(2 * corpus, 2 * corpus + churn),
+                 clustered_vectors(churn, d, seed=4))
+    t_up = time.perf_counter() - t0
+    emit("serving_upsert", t_up, f"rows_per_s={churn / t_up:.0f}")
+
+    t0 = time.perf_counter()
+    index.compact()
+    t_c = time.perf_counter() - t0
+    emit("serving_compact", t_c, f"rows={len(index)}")
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    main()

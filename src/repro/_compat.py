@@ -1,0 +1,121 @@
+"""Toolchain gating: adapt the pinned JAX to the API surface this repo targets.
+
+The repo is written against the current jax API (``jax.shard_map`` with vma
+tracking, ``jax.sharding.AxisType``, ``jax.lax.pvary``,
+``pltpu.CompilerParams``).  The container pins an older jax_pallas toolchain
+where those names either do not exist yet or carry their previous spelling.
+Everything here is a *gate*, not a behavior change: when the installed jax
+already has a name, it is left untouched, so the same tree runs unmodified on
+newer toolchains.
+
+Imported for its side effects from ``repro/__init__.py`` — any
+``import repro.<anything>`` (including the subprocess snippets the tests and
+benchmarks spawn) applies the shims before model/kernel modules load.
+"""
+from __future__ import annotations
+
+import enum
+import functools
+import inspect
+
+import jax
+
+
+def _shim_axis_type() -> None:
+    """``jax.sharding.AxisType`` + ``jax.make_mesh(..., axis_types=...)``.
+
+    Older jax has neither the enum nor the kwarg; every mesh there is the
+    implicit (auto) kind, which is exactly what ``AxisType.Auto`` asks for —
+    so the gate just swallows the request.
+    """
+    if not hasattr(jax.sharding, "AxisType"):
+
+        class AxisType(enum.Enum):
+            Auto = "auto"
+            Explicit = "explicit"
+            Manual = "manual"
+
+        jax.sharding.AxisType = AxisType
+
+    if "axis_types" not in inspect.signature(jax.make_mesh).parameters:
+        _make_mesh = jax.make_mesh
+
+        @functools.wraps(_make_mesh)
+        def make_mesh(axis_shapes, axis_names, *args, axis_types=None, **kw):
+            del axis_types  # pre-AxisType jax: every mesh is the auto kind
+            return _make_mesh(axis_shapes, axis_names, *args, **kw)
+
+        jax.make_mesh = make_mesh
+
+
+def _shim_shard_map() -> None:
+    """``jax.shard_map(f, ..., check_vma=...)`` over the experimental API.
+
+    The old entry point is ``jax.experimental.shard_map.shard_map`` and its
+    replication checker is called ``check_rep``; vma tracking does not exist,
+    so ``check_vma`` maps onto ``check_rep`` (both gate the same class of
+    out-spec soundness checks around ppermute chains).
+    """
+    if hasattr(jax, "shard_map"):
+        return
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f=None, *, mesh, in_specs, out_specs, check_vma=True, **kw):
+        kw.setdefault("check_rep", check_vma)
+        if f is None:
+            return functools.partial(
+                shard_map, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                check_vma=kw.pop("check_rep"), **kw)
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, **kw)
+
+    jax.shard_map = shard_map
+
+
+def _shim_axis_size() -> None:
+    """``jax.lax.axis_size`` — pre-rename spelling is ``psum(1, axis)``.
+
+    Inside shard_map ``psum`` of a Python literal folds to a static int
+    (verified on the pinned toolchain), so callers can keep using the result
+    for Python-level schedule construction (ring perms, butterfly rounds).
+    """
+    if hasattr(jax.lax, "axis_size"):
+        return
+
+    def axis_size(axis_name):
+        return jax.lax.psum(1, axis_name)
+
+    jax.lax.axis_size = axis_size
+
+
+def _shim_pvary() -> None:
+    """``jax.lax.pvary`` — a no-op where vma tracking does not exist."""
+    if hasattr(jax.lax, "pvary"):
+        return
+
+    def pvary(x, axis_names):
+        del axis_names
+        return x
+
+    jax.lax.pvary = pvary
+
+
+def _shim_pallas_params() -> None:
+    """``pltpu.CompilerParams`` under its pre-rename ``TPUCompilerParams``."""
+    try:
+        import jax.experimental.pallas.tpu as pltpu
+    except ImportError:  # pragma: no cover - pallas always ships in the image
+        return
+    if not hasattr(pltpu, "CompilerParams") and hasattr(pltpu, "TPUCompilerParams"):
+        pltpu.CompilerParams = pltpu.TPUCompilerParams
+
+
+def apply() -> None:
+    _shim_axis_type()
+    _shim_shard_map()
+    _shim_axis_size()
+    _shim_pvary()
+    _shim_pallas_params()
+
+
+apply()

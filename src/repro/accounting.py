@@ -1,10 +1,18 @@
-"""Global accounting-mode flag.
+"""Global accounting-mode flag + serving-side latency/throughput metering.
 
-XLA's cost_analysis counts while-loop bodies ONCE regardless of trip count;
-under this flag every repro loop (model scans, the kNN ring) compiles fully
-unrolled so FLOPs / bytes / collective counts are trip-count-true.  Set only
-by the dry-run's accounting pass (launch/dryrun.py --unroll).
+Unroll flag: XLA's cost_analysis counts while-loop bodies ONCE regardless of
+trip count; under this flag every repro loop (model scans, the kNN ring)
+compiles fully unrolled so FLOPs / bytes / collective counts are
+trip-count-true.  Set only by the dry-run's accounting pass
+(launch/dryrun.py --unroll).
+
+ServingMeter: the per-batch latency/throughput account the query engine
+(repro.serving.engine) reports — wall-clock per flushed batch, blocking on
+device results, aggregated into p50/p99/mean latency and queries/sec.  The
+first recorded batch after a (re)compile is tagged separately so steady-state
+numbers are not polluted by compilation (EXPERIMENTS.md §Serving).
 """
+from __future__ import annotations
 
 _UNROLL = [False]
 
@@ -15,3 +23,57 @@ def set_unroll(value: bool) -> None:
 
 def unrolled() -> bool:
     return _UNROLL[0]
+
+
+class ServingMeter:
+    """Accumulates (batch_size, wall_seconds) samples from the query engine."""
+
+    def __init__(self) -> None:
+        self.reset()
+
+    def reset(self) -> None:
+        self._sizes: list[int] = []
+        self._secs: list[float] = []
+        self._compile_secs: list[float] = []
+
+    def record(self, batch_size: int, seconds: float, *, compile_batch: bool = False) -> None:
+        if compile_batch:
+            self._compile_secs.append(float(seconds))
+            return
+        self._sizes.append(int(batch_size))
+        self._secs.append(float(seconds))
+
+    @property
+    def n_batches(self) -> int:
+        return len(self._secs)
+
+    @property
+    def n_queries(self) -> int:
+        return sum(self._sizes)
+
+    def latency_ms(self, pct: float) -> float:
+        """Percentile (0-100) of per-batch wall latency, in milliseconds."""
+        if not self._secs:
+            return float("nan")
+        xs = sorted(self._secs)
+        # nearest-rank percentile: unambiguous at the tiny sample counts a
+        # smoke run produces (no interpolation between two compile regimes)
+        rank = min(len(xs) - 1, max(0, int(round(pct / 100.0 * (len(xs) - 1)))))
+        return xs[rank] * 1e3
+
+    def qps(self) -> float:
+        total = sum(self._secs)
+        return self.n_queries / total if total > 0 else float("nan")
+
+    def summary(self) -> dict:
+        return {
+            "batches": self.n_batches,
+            "queries": self.n_queries,
+            "qps": self.qps(),
+            "p50_ms": self.latency_ms(50),
+            "p99_ms": self.latency_ms(99),
+            "mean_ms": (sum(self._secs) / len(self._secs) * 1e3
+                        if self._secs else float("nan")),
+            "compile_batches": len(self._compile_secs),
+            "compile_s": sum(self._compile_secs),
+        }

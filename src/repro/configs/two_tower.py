@@ -28,4 +28,15 @@ def smoke_config() -> TwoTowerConfig:
     )
 
 
+def serving_defaults() -> dict:
+    """Default ``repro.serving.ServiceConfig`` fields for this arch.
+
+    ``neg_dot``: the towers L2-normalize, so negative dot is cosine ranking —
+    the ``retrieval_cand`` cell's scoring.  ``embed_batch`` is the fixed item
+    tower shape (one executable covers any corpus size).
+    """
+    return dict(k=10, distance="neg_dot", embed_batch=1024,
+                cache_capacity=4096, min_batch=8, max_batch=1024)
+
+
 ARCH = RecsysArch("two-tower-retrieval", full_config, smoke_config)

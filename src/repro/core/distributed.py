@@ -305,6 +305,7 @@ def triangle_allpairs_shard(
 def query_sharded_shard(
     q_local: Array,
     db_local: Array,
+    db_live_local: Array | None = None,
     *,
     db_axis,
     k: int,
@@ -317,6 +318,10 @@ def query_sharded_shard(
     Each device solves its query block against its database shard, then the
     per-shard K-buffers are tree-merged across ``db_axis``.  Index space is
     global database rows.
+
+    ``db_live_local``: optional bool [n_loc] mask of this shard (serving
+    tombstones) — dead rows score +inf BEFORE the butterfly merge, so the
+    merge wire payload stays K per row instead of an over-fetch width.
     """
     P = jax.lax.axis_size(db_axis)
     p = jax.lax.axis_index(db_axis)
@@ -336,6 +341,7 @@ def query_sharded_shard(
             distance=distance,
             tile_m=bm,
             db_valid=local_valid,
+            db_live=db_live_local,
         )
         vals = jnp.pad(vals, ((0, 0), (0, K - vals.shape[1])), constant_values=T.POS_INF)
         idx = jnp.pad(idx, ((0, 0), (0, K - idx.shape[1])), constant_values=-1)
@@ -344,6 +350,8 @@ def query_sharded_shard(
         tile = pairwise_tile(q_local, db_local, dist)
         col_ids = p * n_loc + jnp.arange(n_loc)[None, :]
         tile = jnp.where(col_ids >= n_db_real, T.POS_INF, tile)
+        if db_live_local is not None:
+            tile = jnp.where(db_live_local[None, :], tile, T.POS_INF)
         vals, idx0 = T.tile_topk(tile, K, 0)
         idx = idx0
 
@@ -488,34 +496,35 @@ def make_query_sharded(
 ):
     """Serving-path kNN: queries over ``query_axis``, database over ``db_axis``.
 
-    fn(q [m, d], db [n, d], n_db_real) -> KNNResult; m % size(query_axis) == 0,
-    n % size(db_axis) == 0.
+    fn(q [m, d], db [n, d], n_db_real, db_live=None) -> KNNResult;
+    m % size(query_axis) == 0, n % size(db_axis) == 0.  ``db_live`` (optional
+    bool [n]) is sharded over ``db_axis`` alongside the database — the serving
+    index's tombstone mask.
     """
     q_axes = (query_axis,) if isinstance(query_axis, str) else tuple(query_axis)
     assert db_axis not in q_axes, (
         "queries must be replicated over db_axis (the butterfly merge runs "
         f"across it); got query_axis={query_axis!r} == db_axis={db_axis!r}")
 
-    def fn(q: Array, db: Array, n_db_real: int) -> KNNResult:
+    def fn(q: Array, db: Array, n_db_real: int, db_live: Array | None = None) -> KNNResult:
+        q_spec = jax.sharding.PartitionSpec(query_axis)
+        db_spec = jax.sharding.PartitionSpec(db_axis)
+        in_specs = (q_spec, db_spec) + ((db_spec,) if db_live is not None else ())
+
         @functools.partial(
             jax.shard_map,
             mesh=mesh,
-            in_specs=(
-                jax.sharding.PartitionSpec(query_axis),
-                jax.sharding.PartitionSpec(db_axis),
-            ),
-            out_specs=(
-                jax.sharding.PartitionSpec(query_axis),
-                jax.sharding.PartitionSpec(query_axis),
-            ),
+            in_specs=in_specs,
+            out_specs=(q_spec, q_spec),
             # The butterfly merge leaves results replicated over db_axis; vma
             # tracking cannot infer replication through ppermute chains.
             check_vma=False,
         )
-        def body(q_local, db_local):
+        def body(q_local, db_local, *live_local):
             return query_sharded_shard(
                 q_local,
                 db_local,
+                live_local[0] if live_local else None,
                 db_axis=db_axis,
                 k=k,
                 distance=distance,
@@ -523,7 +532,8 @@ def make_query_sharded(
                 impl=impl,
             )
 
-        v, i = body(q, db)
+        args = (q, db) + ((db_live,) if db_live is not None else ())
+        v, i = body(*args)
         return KNNResult(v, i)
 
     return jax.jit(fn, static_argnames=("n_db_real",))

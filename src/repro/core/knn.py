@@ -94,11 +94,17 @@ def knn_query(
     impl: str = "jnp",
     exclude_self: bool = False,
     threshold_skip: bool = False,
+    db_live: Array | None = None,
 ) -> KNNResult:
     """k nearest database rows for each query row (asymmetric problem).
 
     ``impl``: "jnp" (XLA einsum tiles), "pallas" (Pallas distance kernel +
     jnp selection) or "fused" (single Pallas distance+select kernel).
+
+    ``db_live``: optional traced bool [n] row mask — False rows score +inf
+    and are never selected (the serving index's tombstones).  A mask keeps
+    the compiled shapes independent of how many rows are dead, unlike
+    over-fetch-and-filter schemes.
     """
     dist = get_distance(distance)
     m_real, d = queries.shape
@@ -117,12 +123,17 @@ def knn_query(
             tile_m=tile_m,
             tile_n=tile_n,
             exclude_self=exclude_self,
+            db_live=db_live,
         )
 
     q = _pad_rows(queries, tile_m)
     db = _pad_rows(database, tile_n)
     n_row_tiles = q.shape[0] // tile_m
     n_col_tiles = db.shape[0] // tile_n
+    live = None
+    if db_live is not None:
+        pad = db.shape[0] - n_real
+        live = jnp.concatenate([db_live, jnp.zeros((pad,), bool)])
 
     def tile_fn(qt, dbt):
         if impl == "pallas":
@@ -141,6 +152,9 @@ def knn_query(
             dbt = jax.lax.dynamic_slice(db, (col_off, 0), (tile_n, d))
             tile = tile_fn(qt, dbt)
             tile = _mask_tile(tile, row_off, col_off, m_real, n_real, exclude_self)
+            if live is not None:
+                live_sl = jax.lax.dynamic_slice(live, (col_off,), (tile_n,))
+                tile = jnp.where(live_sl[None, :], tile, T.POS_INF)
             return T.update_running(*run, tile, col_off, threshold_skip=threshold_skip)
 
         run = jax.lax.fori_loop(0, n_col_tiles, col_step, run)

@@ -187,6 +187,22 @@ def topk_smallest(x: Array, k: int):
     return -neg_vals, idx.astype(jnp.int32)
 
 
+def pad_topk(vals: Array, idx: Array, K: int):
+    """Pad ascending top-k sets [..., k] out to width ``K`` (+inf values, -1 ids).
+
+    The padded set is still ascending-sorted, so it composes directly with
+    ``merge_topk_sorted`` — this is how the serving engine aligns candidate
+    sets of different widths (main vs delta segment) before the bitonic merge.
+    """
+    k = vals.shape[-1]
+    if k == K:
+        return vals, idx
+    assert K > k, (K, k)
+    pv = jnp.full(vals.shape[:-1] + (K - k,), POS_INF, vals.dtype)
+    pi = jnp.full(idx.shape[:-1] + (K - k,), -1, idx.dtype)
+    return jnp.concatenate([vals, pv], axis=-1), jnp.concatenate([idx, pi], axis=-1)
+
+
 def merge_many_sorted(vals: Array, idx: Array, k: int):
     """Merge ``[S, m, K]`` stacked ascending partial top-K sets → ``[m, K]``.
 

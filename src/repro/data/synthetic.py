@@ -84,8 +84,13 @@ def recsys_batch(arch: str, batch: int, cfg, seed: int = 0, step: int = 0) -> di
 
     def planted_labels(ids: np.ndarray) -> np.ndarray:
         w = ((ids.astype(np.int64) * 2654435761) % 97 < 33).astype(np.float32)  # hidden pattern
-        logit = w.mean(axis=1) * 4.0 - 2.0
-        p = 1.0 / (1.0 + np.exp(-logit))
+        # Standardize the field average: its raw std shrinks as 1/sqrt(n_fields),
+        # so without this the per-example logit collapses to a constant for
+        # wide models (39 fields => std ~0.075) and the "planted" signal is
+        # unlearnable noise.  z is ~N(0,1) regardless of field count.
+        q = 33.0 / 97.0
+        z = (w.mean(axis=1) - q) / np.sqrt(q * (1.0 - q) / ids.shape[1])
+        p = 1.0 / (1.0 + np.exp(-1.5 * z))
         return (g.random(len(p)) < p).astype(np.float32)
 
     if arch == "dlrm-rm2":

@@ -146,6 +146,7 @@ def fused_knn(
     bd: int = 128,
     exclude_self: bool = False,
     db_valid=None,
+    db_live=None,
     interpret: bool | None = None,
 ):
     """kNN of q against db with the fused Pallas kernel; returns KNNResult.
@@ -153,6 +154,8 @@ def fused_knn(
     ``db_valid``: optional traced count of valid database rows — rows at index
     >= db_valid get +inf distance (via the rank-1 ``hy`` epilogue term), which
     lets SPMD callers mask ragged shards without a per-device static shape.
+    ``db_live``: optional traced bool [n] mask — False rows get +inf the same
+    way (the serving index's tombstones; arbitrary pattern, same epilogue).
     """
     from repro.core.knn import KNNResult
 
@@ -164,6 +167,8 @@ def fused_knn(
     fx, gy, hx, hy, _ = _mxu_operands(q, db, distance)
     if db_valid is not None:
         hy = jnp.where(jnp.arange(n)[None, :] < db_valid, hy, T.POS_INF)
+    if db_live is not None:
+        hy = jnp.where(db_live[None, :], hy, T.POS_INF)
     fx = _pad_axis(_pad_axis(fx, tile_m, 0), bd, 1)
     gy = _pad_axis(_pad_axis(gy, tile_n, 0), bd, 1)
     hx = _pad_axis(hx, tile_m, 0)

@@ -1,15 +1,30 @@
-"""Retrieval serving driver — the paper's recommender workload end-to-end.
+"""Retrieval serving driver — thin CLI over ``repro.serving``.
 
-Builds a two-tower model, embeds an item corpus, then serves batched queries
-through the kNN engine (query-sharded fused scoring + butterfly top-k merge):
+Builds a two-tower model, embeds an item corpus into a RetrievalIndex, then
+serves batched user queries through the QueryEngine, optionally exercising the
+online index lifecycle (ingest into the delta segment, deletes, compaction)
+while traffic flows:
 
   PYTHONPATH=src python -m repro.launch.serve --corpus 16384 --queries 64 \
-      --batches 20 --k 10
+      --batches 20 --k 10 --churn 256 --repeat-frac 0.5
+
+Flags (see README.md "CLI reference"):
+  --corpus N        item corpus size (embedded offline, packed main segment)
+  --queries M       users per served batch
+  --batches B       number of online batches (first is compile, excluded)
+  --k K             neighbors per query
+  --impl {jnp,fused}  segment scorer (fused = Pallas distance+select kernel)
+  --churn C         items upserted into the delta segment per batch (0 = off)
+  --compact-every E compact() after every E batches (0 = never)
+  --repeat-frac F   fraction of each batch drawn from repeat users (cache hits)
+  --cache N         user embedding cache capacity (0 disables)
+  --mesh            shard the main segment over the host mesh (query-sharded
+                    butterfly scoring — the paper's multi-device serving path)
+  --seed S
 """
 from __future__ import annotations
 
 import argparse
-import time
 
 
 def main():
@@ -19,53 +34,96 @@ def main():
     ap.add_argument("--batches", type=int, default=20)
     ap.add_argument("--k", type=int, default=10)
     ap.add_argument("--impl", choices=("jnp", "fused"), default="jnp")
+    ap.add_argument("--churn", type=int, default=0,
+                    help="items upserted into the delta per batch")
+    ap.add_argument("--compact-every", type=int, default=0)
+    ap.add_argument("--repeat-frac", type=float, default=0.0,
+                    help="fraction of repeat users per batch (cache hits)")
+    ap.add_argument("--cache", type=int, default=4096)
+    ap.add_argument("--mesh", action="store_true",
+                    help="shard the main segment over the host mesh and score "
+                         "it with the query-sharded butterfly path")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     import jax
-    import jax.numpy as jnp
     import numpy as np
 
     from repro.configs import registry as REG
-    from repro.distributed import steps as ST
-    from repro.distributed.sharding import make_rules
-    from repro.launch.mesh import make_host_mesh
-    from repro.models import recsys as R
+    from repro.configs.two_tower import serving_defaults
     from repro.models.nn import split_params
+    from repro.serving import ServiceConfig, TwoTowerRetrievalService
 
-    mesh = make_host_mesh()
-    rules = make_rules(mesh)
     arch = REG.get("two-tower-retrieval")
     cfg = arch.smoke_config()
     params = arch.init_params(jax.random.PRNGKey(args.seed), cfg)
     values, _ = split_params(params)
 
-    # Offline: embed the item corpus (batched through the item tower).
+    from repro.core.topk import next_pow2
+
+    defaults = serving_defaults()
+    defaults.update(k=args.k, impl=args.impl, cache_capacity=args.cache,
+                    max_batch=next_pow2(max(64, args.queries)))
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_host_mesh
+
+        mesh = make_host_mesh()
+        print(f"[serve] query-sharded over mesh {dict(mesh.shape)}")
+    svc = TwoTowerRetrievalService(values, cfg, ServiceConfig(**defaults),
+                                   mesh=mesh)
+
+    # Offline: embed + pack the corpus.
     rng = np.random.default_rng(args.seed)
-    corpus_ids = rng.integers(0, min(cfg.i_sizes()), size=(args.corpus, cfg.n_item_fields)).astype(np.int32)
-    embed = jax.jit(lambda v, ids: R.item_embedding(v, ids))
-    db = np.asarray(embed(values, jnp.asarray(corpus_ids)))
-    print(f"[serve] corpus embedded: {db.shape}")
+    item_lim = min(cfg.i_sizes())
+    user_lim = min(cfg.u_sizes())
+    corpus_fields = rng.integers(
+        0, item_lim, size=(args.corpus, cfg.n_item_fields)).astype(np.int32)
+    svc.build_corpus(np.arange(args.corpus), corpus_fields)
+    print(f"[serve] corpus embedded + indexed: {len(svc.index)} x {svc.index.dim}")
 
-    # Online: query-sharded kNN serving.
-    _, shard_for, _ = ST.make_retrieval_step(cfg, rules, arch.abstract_params(cfg),
-                                             k=args.k, impl=args.impl)
-    user_ids = rng.integers(0, min(cfg.u_sizes()),
-                            size=(args.queries, cfg.n_user_fields)).astype(np.int32)
-    fn = shard_for(jnp.asarray(user_ids), jnp.asarray(db))
-
-    lat = []
+    # Online: batches of user queries with optional churn/compaction.
+    n_users = 4 * args.queries
+    user_pool = rng.integers(
+        0, user_lim, size=(n_users, cfg.n_user_fields)).astype(np.int32)
+    next_item = args.corpus
     for b in range(args.batches):
-        u = rng.integers(0, min(cfg.u_sizes()),
-                         size=(args.queries, cfg.n_user_fields)).astype(np.int32)
-        t0 = time.perf_counter()
-        scores, idx = jax.block_until_ready(fn(values, jnp.asarray(u), jnp.asarray(db)))
-        lat.append((time.perf_counter() - t0) * 1e3)
-    lat = np.asarray(lat[1:])  # drop compile
-    print(f"[serve] {args.batches - 1} batches of {args.queries} queries, k={args.k}")
-    print(f"[serve] latency ms: p50={np.percentile(lat, 50):.2f} "
-          f"p99={np.percentile(lat, 99):.2f} mean={lat.mean():.2f}")
-    print(f"[serve] top-1 sample: idx={np.asarray(idx)[0, :5]} score={np.asarray(scores)[0, :5]}")
+        n_rep = int(args.queries * args.repeat_frac)
+        keys = np.concatenate([
+            rng.integers(0, n_users, size=n_rep),  # repeat visitors
+            np.arange(args.queries - n_rep) + n_users + b * args.queries,
+        ])
+        fields = np.concatenate([
+            user_pool[keys[:n_rep]],
+            rng.integers(0, user_lim,
+                         size=(args.queries - n_rep, cfg.n_user_fields)),
+        ]).astype(np.int32)
+        ids, scores = svc.recommend(keys, fields)
+
+        if args.churn:
+            churn_ids = np.arange(next_item, next_item + args.churn)
+            next_item += args.churn
+            svc.ingest_items(
+                churn_ids,
+                rng.integers(0, item_lim,
+                             size=(args.churn, cfg.n_item_fields)).astype(np.int32))
+        if args.compact_every and (b + 1) % args.compact_every == 0:
+            svc.compact()
+
+    st = svc.stats()
+    s, e = st["serving"], st["engine"]
+    print(f"[serve] {s['batches']} steady-state batches of {args.queries} "
+          f"queries, k={args.k} (+{s['compile_batches']} compile batches, "
+          f"{s['compile_s']:.2f}s)")
+    print(f"[serve] end-to-end ms (embed+scan): p50={s['p50_ms']:.2f} "
+          f"p99={s['p99_ms']:.2f} mean={s['mean_ms']:.2f}  "
+          f"throughput={s['qps']:.0f} qps")
+    print(f"[serve] kNN scan only ms: p50={e['p50_ms']:.2f} "
+          f"p99={e['p99_ms']:.2f}")
+    print(f"[serve] index: {st['index_rows']} rows, {st['index_dead']} dead; "
+          f"cache hit-rate={st['cache']['hit_rate']:.2f} "
+          f"({st['cache']['hits']}/{st['cache']['hits'] + st['cache']['misses']})")
+    print(f"[serve] top-1 sample: ids={ids[0, :5]} score={scores[0, :5].round(3)}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,26 @@
+"""Online retrieval serving over the exact-kNN engines (see DESIGN.md §Serving).
+
+Layering (each importable on its own):
+
+  index.py    RetrievalIndex — packed main + append-only delta segments,
+              tombstone deletes, exact search, compact().
+  engine.py   QueryEngine — pow2 batch padding, micro-batch queue,
+              latency/throughput metering (accounting.ServingMeter).
+  cache.py    EmbeddingCache — LRU for repeat-query embeddings.
+  service.py  TwoTowerRetrievalService — towers + index + engine + cache,
+              the end-to-end recommender flow.
+"""
+from repro.serving.cache import EmbeddingCache
+from repro.serving.engine import EngineConfig, QueryEngine
+from repro.serving.index import RetrievalIndex, SearchResult
+from repro.serving.service import ServiceConfig, TwoTowerRetrievalService
+
+__all__ = [
+    "EmbeddingCache",
+    "EngineConfig",
+    "QueryEngine",
+    "RetrievalIndex",
+    "SearchResult",
+    "ServiceConfig",
+    "TwoTowerRetrievalService",
+]

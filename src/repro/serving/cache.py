@@ -1,0 +1,83 @@
+"""Embedding cache for repeat queries (id -> embedding LRU).
+
+Tower inference dominates the serving cost for repeat visitors: the user
+embedding only changes when the model (or the user's features) changes, while
+real traffic is heavily skewed toward returning users.  A small LRU keyed on
+the caller's request id short-circuits the user tower for hits; the kNN scan
+itself always runs (the corpus is the thing that changes between visits).
+
+Capacity is a row count; eviction is least-recently-used.  ``get_many`` /
+``put_many`` are the batch interface the service layer uses so a flush with
+mixed hits and misses embeds only the miss rows.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+
+import numpy as np
+
+
+class EmbeddingCache:
+    def __init__(self, capacity: int = 4096):
+        assert capacity >= 0
+        self.capacity = int(capacity)
+        self._rows: OrderedDict[int, np.ndarray] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._rows)
+
+    def __contains__(self, key) -> bool:
+        return int(key) in self._rows
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else float("nan")
+
+    def get(self, key) -> np.ndarray | None:
+        row = self._rows.get(int(key))
+        if row is None:
+            self.misses += 1
+            return None
+        self.hits += 1
+        self._rows.move_to_end(int(key))
+        return row
+
+    def put(self, key, row: np.ndarray) -> None:
+        if self.capacity == 0:
+            return
+        k = int(key)
+        self._rows[k] = np.asarray(row)
+        self._rows.move_to_end(k)
+        while len(self._rows) > self.capacity:
+            self._rows.popitem(last=False)
+
+    def invalidate(self, key=None) -> None:
+        """Drop one key, or everything (model push / feature refresh)."""
+        if key is None:
+            self._rows.clear()
+        else:
+            self._rows.pop(int(key), None)
+
+    def get_many(self, keys) -> tuple[dict[int, np.ndarray], list[int]]:
+        """Split keys into ({key: cached row}, [missing keys]) in one pass."""
+        found: dict[int, np.ndarray] = {}
+        missing: list[int] = []
+        for key in keys:
+            row = self.get(key)
+            if row is None:
+                missing.append(int(key))
+            else:
+                found[int(key)] = row
+        return found, missing
+
+    def put_many(self, keys, rows) -> None:
+        for key, row in zip(keys, rows):
+            self.put(key, row)
+
+    def stats(self) -> dict:
+        return {"size": len(self), "capacity": self.capacity,
+                "hits": self.hits, "misses": self.misses,
+                "hit_rate": self.hit_rate}

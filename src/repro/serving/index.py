@@ -1,0 +1,349 @@
+"""RetrievalIndex: an exact-kNN index with an online update path.
+
+The kNN solvers in ``repro.core`` answer "k nearest of THIS array" — a batch
+primitive.  Serving needs an *index*: a corpus that changes while queries are
+in flight.  The classic design (faiss's IndexIVF add/remove, LSM trees) is a
+two-segment split, adapted here to the constraint that XLA recompiles on any
+shape change:
+
+* **main segment** — an immutable packed ``[n, d]`` array scored with the
+  existing engines (``core.knn.knn_query`` locally, the query-sharded
+  butterfly path on a mesh).  Deletes tombstone rows instead of repacking, so
+  the device array and every compiled executable stay valid.
+* **delta segment** — an append-only array with power-of-two capacity
+  doubling, so inserts hit at most log2(n) distinct shapes.  Rows past the
+  write head are dead by construction.
+* **tombstones as a live-row mask** — dead rows (deleted, superseded, or past
+  the delta write head) are masked to +inf *inside* the scorers
+  (``db_live`` on ``knn_query`` / the fused kernel's rank-1 epilogue /
+  the query-sharded path), so selection never sees them.  Exact by
+  construction, and the compiled shapes are independent of how many rows are
+  dead — mutations never change the fetch width.
+* **compact()** — re-packs live main+delta rows into a fresh immutable main
+  segment (re-sharding it over the mesh when one is configured) and clears
+  the delta.  This is the LSM merge; serving continues across it because
+  search never mutates.
+
+External ids are caller-chosen int32 keys; searches return (distances, ids)
+with ``-1`` id padding when fewer than k live rows exist.  Exactness after any
+interleaving of insert/upsert/delete/compact — equality with a brute-force
+rebuild — is the contract ``tests/test_serving.py`` checks.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import topk as T
+from repro.core.knn import knn_query
+
+Array = jnp.ndarray
+
+_MIN_DELTA_CAP = 64
+
+
+class SearchResult(NamedTuple):
+    distances: Array  # [m, k] ascending
+    ids: Array  # [m, k] int32 external ids, -1 past the live count
+
+
+@functools.partial(jax.jit, static_argnames=("k_out", "distance", "impl"))
+def _segment_candidates(q, vecs, live, ids, *, k_out, distance, impl):
+    """Top-``k_out`` LIVE candidates of one segment, ascending, padded.
+
+    Dead rows are masked to +inf inside the scorer (``db_live``), so the
+    result is exact at fetch width ``k_out`` no matter how many rows are
+    tombstoned.  Returns ([m, k_out] vals, [m, k_out] external ids).
+    """
+    vals, idx = knn_query(q, vecs, k_out, distance=distance, impl=impl,
+                          db_live=live)
+    safe = jnp.clip(idx, 0, vecs.shape[0] - 1)
+    ok = idx >= 0  # -1 where masked/padded (val == +inf)
+    ext = jnp.where(ok, jnp.take(ids, safe, axis=0), jnp.int32(-1))
+    if vals.shape[-1] < k_out:  # knn_query clamps k to the row count
+        vals, ext = T.pad_topk(vals, ext, k_out)
+    return vals, ext
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _merge_candidates(av, ai, bv, bi, *, k):
+    """Merge two ascending equal-width candidate sets, keep k smallest."""
+    mv, mi = T.merge_topk_sorted(av, ai, bv, bi)
+    return T.finalize_topk(mv, mi, k)
+
+
+class RetrievalIndex:
+    """Mutable exact-kNN index over (id, vector) rows.  See module docstring.
+
+    ``impl``: "jnp" or "fused" — forwarded to the per-segment scorer.
+    ``mesh``/``db_axis``: optional — shard the main segment over ``db_axis``
+    and score it with the butterfly-merge serving path
+    (``core.distributed.make_query_sharded``); the delta segment always
+    scores locally (it is small by construction).
+    """
+
+    def __init__(self, dim: int, *, distance: str = "sqeuclidean",
+                 impl: str = "jnp", mesh=None, db_axis: str = "model",
+                 query_axis: str = "data"):
+        self.dim = int(dim)
+        self.distance = distance
+        self.impl = impl
+        self.mesh = mesh
+        self.db_axis = db_axis
+        self.query_axis = query_axis
+        self._main_vecs = np.zeros((0, dim), np.float32)
+        self._main_ids = np.zeros((0,), np.int32)
+        self._main_live = np.zeros((0,), bool)
+        self._delta_vecs = np.zeros((0, dim), np.float32)
+        self._delta_ids = np.zeros((0,), np.int32)
+        self._delta_live = np.zeros((0,), bool)
+        self._delta_n = 0  # write head; rows past it are dead capacity
+        self._loc: dict[int, tuple[str, int]] = {}  # id -> (segment, row)
+        # Per-segment versions: a delta append must not re-upload the
+        # (possibly huge) unchanged main segment to the device.
+        self._version = {"main": 0, "delta": 0}
+        self._dev_version = {"main": -1, "delta": -1}
+        self._dev: dict = {}
+        self._sharded_cache: dict = {}
+
+    # -- construction -------------------------------------------------------
+
+    @classmethod
+    def build(cls, ids, vectors, **kw) -> "RetrievalIndex":
+        """Pack (ids, vectors) straight into the main segment."""
+        vectors = np.asarray(vectors, np.float32)
+        idx = cls(vectors.shape[1], **kw)
+        ids = idx._check_ids(ids, vectors)
+        idx._main_vecs = np.ascontiguousarray(vectors)
+        idx._main_ids = ids.copy()
+        idx._main_live = np.ones(len(ids), bool)
+        idx._loc = {int(i): ("main", r) for r, i in enumerate(ids)}
+        idx._bump("main")
+        return idx
+
+    def _check_ids(self, ids, vectors) -> np.ndarray:
+        ids = np.asarray(ids, np.int64)
+        assert vectors.shape == (len(ids), self.dim), (vectors.shape, len(ids))
+        assert (ids >= 0).all() and (ids < 2**31).all(), "ids must fit int32"
+        assert len(np.unique(ids)) == len(ids), "duplicate ids in one call"
+        return ids.astype(np.int32)
+
+    # -- introspection ------------------------------------------------------
+
+    def __len__(self) -> int:
+        return len(self._loc)
+
+    def __contains__(self, item_id: int) -> bool:
+        return int(item_id) in self._loc
+
+    @property
+    def n_dead(self) -> int:
+        """Tombstoned + unfilled-capacity rows (wasted score work until compact)."""
+        return self._dead_main() + self._dead_delta()
+
+    def _dead_main(self) -> int:
+        return int(len(self._main_live) - self._main_live.sum())
+
+    def _dead_delta(self) -> int:
+        return int(len(self._delta_live) - self._delta_live.sum())
+
+    # -- mutation -----------------------------------------------------------
+
+    def insert(self, ids, vectors) -> None:
+        """Append new rows; error on an id that already exists (use upsert)."""
+        vectors = np.asarray(vectors, np.float32)
+        ids = self._check_ids(ids, vectors)
+        for i in ids:
+            if int(i) in self._loc:
+                raise KeyError(f"id {int(i)} already indexed (use upsert)")
+        self._append_delta(ids, vectors)
+
+    def upsert(self, ids, vectors) -> None:
+        """Insert-or-replace: an existing id is tombstoned, then re-appended."""
+        vectors = np.asarray(vectors, np.float32)
+        ids = self._check_ids(ids, vectors)
+        for i in ids:
+            self._tombstone(int(i), missing_ok=True)
+        self._append_delta(ids, vectors)
+
+    def delete(self, ids) -> int:
+        """Tombstone ids; returns how many existed."""
+        n = 0
+        for i in np.asarray(ids).ravel():
+            n += self._tombstone(int(i), missing_ok=True)
+        return n
+
+    def _tombstone(self, item_id: int, *, missing_ok: bool) -> int:
+        loc = self._loc.pop(item_id, None)
+        if loc is None:
+            if missing_ok:
+                return 0
+            raise KeyError(item_id)
+        seg, row = loc
+        (self._main_live if seg == "main" else self._delta_live)[row] = False
+        self._bump(seg)
+        return 1
+
+    def _append_delta(self, ids: np.ndarray, vectors: np.ndarray) -> None:
+        need = self._delta_n + len(ids)
+        if need > len(self._delta_vecs):
+            cap = max(_MIN_DELTA_CAP, T.next_pow2(need))
+            grown = np.zeros((cap, self.dim), np.float32)
+            grown[: self._delta_n] = self._delta_vecs[: self._delta_n]
+            self._delta_vecs = grown
+            for name in ("_delta_ids", "_delta_live"):
+                old = getattr(self, name)
+                fresh = np.zeros((cap,), old.dtype)
+                fresh[: self._delta_n] = old[: self._delta_n]
+                setattr(self, name, fresh)
+        r0 = self._delta_n
+        self._delta_vecs[r0 : r0 + len(ids)] = vectors
+        self._delta_ids[r0 : r0 + len(ids)] = ids
+        self._delta_live[r0 : r0 + len(ids)] = True
+        for off, i in enumerate(ids):
+            self._loc[int(i)] = ("delta", r0 + off)
+        self._delta_n = r0 + len(ids)
+        self._bump("delta")
+
+    def compact(self) -> None:
+        """Re-pack live rows into a fresh immutable main segment.
+
+        Clears every tombstone and the delta; on a mesh this is also the
+        re-shard point (the new main is re-split over ``db_axis``).
+        """
+        segs = [
+            (self._main_vecs, self._main_ids, self._main_live),
+            (self._delta_vecs[: self._delta_n], self._delta_ids[: self._delta_n],
+             self._delta_live[: self._delta_n]),
+        ]
+        vecs = np.concatenate([v[m] for v, _, m in segs], axis=0)
+        ids = np.concatenate([i[m] for _, i, m in segs], axis=0)
+        self._main_vecs = np.ascontiguousarray(vecs)
+        self._main_ids = ids
+        self._main_live = np.ones(len(ids), bool)
+        self._delta_vecs = np.zeros((0, self.dim), np.float32)
+        self._delta_ids = np.zeros((0,), np.int32)
+        self._delta_live = np.zeros((0,), bool)
+        self._delta_n = 0
+        self._loc = {int(i): ("main", r) for r, i in enumerate(ids)}
+        self._bump("main")
+        self._bump("delta")
+
+    def _bump(self, seg: str) -> None:
+        self._version[seg] += 1
+
+    # -- search -------------------------------------------------------------
+
+    def _device_state(self) -> dict:
+        for seg in ("main", "delta"):
+            if self._dev_version[seg] != self._version[seg]:
+                vecs, live, ids = {
+                    "main": (self._main_vecs, self._main_live, self._main_ids),
+                    "delta": (self._delta_vecs, self._delta_live, self._delta_ids),
+                }[seg]
+                self._dev[seg] = (jnp.asarray(vecs), jnp.asarray(live),
+                                  jnp.asarray(ids))
+                self._dev_version[seg] = self._version[seg]
+        return self._dev
+
+    def shape_signature(self, k: int) -> tuple:
+        """Everything that determines the compiled shapes of a k-search.
+
+        Two searches with equal signatures (and equal padded batch) hit the
+        same executables — the engine uses this to tell compile batches from
+        steady-state ones.  Because tombstones are a mask, only the segment
+        ROW COUNTS matter: main size (changes at compact) and delta capacity
+        (pow2 doubling), never the number of dead rows.
+        """
+        del k  # fetch width is next_pow2(k), already part of the batch key
+        return (len(self._main_vecs),
+                len(self._delta_vecs) if self._delta_n else 0)
+
+    def search(self, queries, k: int) -> SearchResult:
+        """Exact k nearest live rows for each query row.
+
+        Result width is exactly ``k``; rows beyond the live count carry
+        +inf distance and id -1 (same convention as ``core.knn``).
+        """
+        q = jnp.asarray(queries, jnp.float32)
+        assert q.ndim == 2 and q.shape[1] == self.dim, q.shape
+        k = int(k)
+        assert k >= 1
+        k_out = T.next_pow2(k)
+        dev = self._device_state()
+
+        sets = []
+        if len(self._main_vecs):
+            sets.append(self._main_candidates(q, k_out, dev))
+        if self._delta_n:
+            vecs, live, ids = dev["delta"]
+            sets.append(_segment_candidates(
+                q, vecs, live, ids, k_out=k_out,
+                distance=self.distance, impl=self.impl))
+        if not sets:
+            m = q.shape[0]
+            return SearchResult(jnp.full((m, k), T.POS_INF, jnp.float32),
+                                jnp.full((m, k), -1, jnp.int32))
+        if len(sets) == 1:
+            vals, ids = T.finalize_topk(*sets[0], k)
+            return SearchResult(vals, ids)
+        (av, ai), (bv, bi) = sets
+        vals, ids = _merge_candidates(av, ai, bv, bi, k=k)
+        return SearchResult(vals, ids)
+
+    # -- main-segment scoring (local or query-sharded) ----------------------
+
+    def _main_candidates(self, q, k_out, dev):
+        vecs, live, ids = dev["main"]
+        if self.mesh is None:
+            return _segment_candidates(
+                q, vecs, live, ids, k_out=k_out,
+                distance=self.distance, impl=self.impl)
+        return self._main_candidates_sharded(q, k_out, dev)
+
+    def _main_candidates_sharded(self, q, k_out, dev):
+        """Score main over the mesh: the paper's serving path + tombstones.
+
+        The tombstone mask shards over ``db_axis`` next to the database, so
+        dead rows are +inf BEFORE the butterfly merge — wire payload stays
+        k per row, identical to a tombstone-free index.
+        """
+        from repro.core import distributed as KD
+
+        _, _, ids = dev["main"]
+        P_db = int(self.mesh.shape[self.db_axis])
+        P_q = int(self.mesh.shape[self.query_axis])
+        n = len(self._main_vecs)
+        n_pad = n + (-n) % P_db
+        key = (k_out, n_pad, self.mesh)
+        fn = self._sharded_cache.get(key)
+        if fn is None:
+            fn = KD.make_query_sharded(
+                self.mesh, query_axis=self.query_axis, db_axis=self.db_axis,
+                k=k_out, distance=self.distance, impl=self.impl)
+            self._sharded_cache[key] = fn
+        # Padded main + mask are cached per main-segment version: re-padding
+        # the whole corpus per query batch would be an O(n d) copy on the hot
+        # path (the main segment only changes at build/compact/tombstone).
+        if self._dev_version.get("main_padded") != self._version["main"]:
+            self._dev["main_padded"] = (
+                jnp.asarray(np.pad(self._main_vecs, ((0, n_pad - n), (0, 0)))),
+                jnp.asarray(np.pad(self._main_live, (0, n_pad - n))),
+            )
+            self._dev_version["main_padded"] = self._version["main"]
+        db, live_p = self._dev["main_padded"]  # pad rows are dead
+        m = q.shape[0]
+        m_pad = m + (-m) % P_q
+        qp = jnp.pad(q, ((0, m_pad - m), (0, 0)))
+        vals, idx = fn(qp, db, n, live_p)
+        vals, idx = vals[:m], idx[:m]
+        safe = jnp.clip(idx, 0, n - 1)
+        ok = idx >= 0
+        ext = jnp.where(ok, jnp.take(ids, safe, axis=0), jnp.int32(-1))
+        if vals.shape[-1] < k_out:
+            vals, ext = T.pad_topk(vals, ext, k_out)
+        return vals, ext

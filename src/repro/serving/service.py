@@ -1,0 +1,160 @@
+"""End-to-end two-tower retrieval service (the paper's recommender workload).
+
+Offline: embed the item corpus with the item tower (fixed-shape batches so one
+executable covers the whole sweep) and pack it into a RetrievalIndex.
+Online: embed users (through the LRU embedding cache), run the batched query
+engine, return item ids + similarity scores.  Item ingest/update/delete flow
+through the index's delta segment; ``compact()`` folds them into the packed
+main segment.
+
+This is the subsystem behind ``python -m repro.launch.serve`` and
+``benchmarks/serving.py``; examples/recommender.py drives it directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.accounting import ServingMeter
+from repro.core.topk import next_pow2
+from repro.serving.cache import EmbeddingCache
+from repro.serving.engine import EngineConfig, QueryEngine
+from repro.serving.index import RetrievalIndex
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    k: int = 10
+    impl: str = "jnp"  # "jnp" | "fused" segment scorer
+    distance: str = "neg_dot"  # towers L2-normalize, so -dot == cosine ranking
+    embed_batch: int = 1024  # fixed item-tower batch (one executable)
+    cache_capacity: int = 4096
+    min_batch: int = 8
+    max_batch: int = 1024
+
+
+class TwoTowerRetrievalService:
+    """Binds tower params + RetrievalIndex + QueryEngine + EmbeddingCache."""
+
+    def __init__(self, values, model_cfg, svc: ServiceConfig = ServiceConfig(),
+                 *, mesh=None):
+        from repro.models import recsys as R
+
+        self.values = values
+        self.model_cfg = model_cfg
+        self.svc = svc
+        self.meter = ServingMeter()  # engine-only: the kNN scan
+        # End-to-end: embedding (cache hits/misses) + scan + merge — the
+        # number a caller actually waits for, and the one --repeat-frac /
+        # --cache visibly move.
+        self.e2e_meter = ServingMeter()
+        self.user_cache = EmbeddingCache(svc.cache_capacity)
+        self._user_tower = jax.jit(R.user_embedding)
+        self._item_tower = jax.jit(R.item_embedding)
+        self._seen_embed_shapes: set = set()
+        self._last_embed_cold = False
+        self.index = RetrievalIndex(
+            model_cfg.tower_mlp[-1], distance=svc.distance, impl=svc.impl,
+            mesh=mesh)
+        self.engine = QueryEngine(
+            self.index,
+            EngineConfig(k=svc.k, min_batch=svc.min_batch,
+                         max_batch=svc.max_batch),
+            meter=self.meter)
+
+    # -- offline: corpus embedding + index build ----------------------------
+
+    def _embed(self, tower, fields: np.ndarray, *, online: bool = False) -> np.ndarray:
+        """Run a tower over [n, f] id-features in fixed-shape batches.
+
+        Offline (corpus sweeps) uses the full ``embed_batch`` shape so one
+        executable covers any corpus size.  ``online`` buckets to
+        ``next_pow2`` of the request count instead — a 2-row cache-miss fill
+        must not pay for a 1024-row tower pass.
+        """
+        n = len(fields)
+        b = (min(self.svc.embed_batch, next_pow2(max(n, self.svc.min_batch)))
+             if online else self.svc.embed_batch)
+        # A never-seen (tower, bucket) shape means the jit below compiles —
+        # recommend() uses this to keep tower compiles out of the
+        # steady-state e2e latency samples.
+        shape_key = (id(tower), b)
+        self._last_embed_cold = shape_key not in self._seen_embed_shapes
+        self._seen_embed_shapes.add(shape_key)
+        out = np.empty((n, self.index.dim), np.float32)
+        for s in range(0, n, b):
+            chunk = fields[s : s + b]
+            padded = np.zeros((b, fields.shape[1]), fields.dtype)
+            padded[: len(chunk)] = chunk
+            emb = tower(self.values, jnp.asarray(padded))
+            out[s : s + len(chunk)] = np.asarray(emb)[: len(chunk)]
+        return out
+
+    def build_corpus(self, item_ids, item_fields) -> np.ndarray:
+        """Embed the corpus and (re)build the packed main segment.
+
+        Returns the [n, dim] corpus embeddings (callers wanting them — e.g.
+        an all-pairs item-to-item pass — should use this instead of reaching
+        into the index's segment storage).
+        """
+        vecs = self._embed(self._item_tower, np.asarray(item_fields, np.int32))
+        self.index = RetrievalIndex.build(
+            item_ids, vecs, distance=self.svc.distance, impl=self.svc.impl,
+            mesh=self.index.mesh)
+        self.engine.index = self.index
+        return vecs
+
+    # -- online: item ingest (delta segment) --------------------------------
+
+    def ingest_items(self, item_ids, item_fields) -> None:
+        vecs = self._embed(self._item_tower, np.asarray(item_fields, np.int32))
+        self.index.upsert(item_ids, vecs)
+
+    def delete_items(self, item_ids) -> int:
+        return self.index.delete(item_ids)
+
+    def compact(self) -> None:
+        self.index.compact()
+
+    # -- online: user retrieval ---------------------------------------------
+
+    def embed_users(self, user_keys, user_fields) -> np.ndarray:
+        """User-tower embeddings, LRU-cached on ``user_keys``."""
+        user_fields = np.asarray(user_fields, np.int32)
+        cached, missing = self.user_cache.get_many(user_keys)
+        if missing:
+            miss = set(missing)
+            sel = [i for i, key in enumerate(user_keys) if int(key) in miss]
+            fresh = self._embed(self._user_tower, user_fields[sel], online=True)
+            self.user_cache.put_many([int(user_keys[i]) for i in sel], fresh)
+            for row, i in zip(fresh, sel):
+                cached[int(user_keys[i])] = row
+        return np.stack([cached[int(key)] for key in user_keys])
+
+    def recommend(self, user_keys, user_fields, k: int | None = None):
+        """Top-k items per user: (item_ids [m,k], scores [m,k] descending)."""
+        import time
+
+        t0 = time.perf_counter()
+        n_cold0 = self.meter.summary()["compile_batches"]
+        self._last_embed_cold = False  # set by _embed iff misses were embedded
+        u = self.embed_users(user_keys, user_fields)
+        res = self.engine.search(u, k)
+        cold = (self.meter.summary()["compile_batches"] > n_cold0
+                or self._last_embed_cold)
+        self.e2e_meter.record(len(u), time.perf_counter() - t0,
+                              compile_batch=cold)
+        scores = -np.asarray(res.distances)  # neg_dot -> similarity
+        return np.asarray(res.ids), scores
+
+    def stats(self) -> dict:
+        return {
+            "index_rows": len(self.index),
+            "index_dead": self.index.n_dead,
+            "cache": self.user_cache.stats(),
+            "serving": self.e2e_meter.summary(),
+            "engine": self.meter.summary(),
+        }

@@ -1,0 +1,143 @@
+"""Minimal in-tree stand-in for ``hypothesis`` (used only when it is absent).
+
+The property-test modules are written against real hypothesis (declared in the
+``test`` extra of pyproject.toml — CI installs it).  The pinned container image
+cannot install new packages, so ``conftest.install_hypothesis_fallback()``
+registers this module under ``sys.modules["hypothesis"]`` when the import
+fails.  It implements exactly the API surface the test-suite uses:
+
+  * ``@hypothesis.settings(max_examples=..., deadline=..., suppress_health_check=...)``
+  * ``@hypothesis.given(name=strategy, ...)`` (keyword strategies only)
+  * ``hypothesis.HealthCheck.*``, ``hypothesis.assume``
+  * ``strategies.integers / booleans / sampled_from``
+
+Examples are drawn pseudo-randomly but deterministically (seeded per test
+name), so failures reproduce run-to-run.  No shrinking, no database — this is
+a sampler, not a replacement; CI still runs the real engine.
+"""
+from __future__ import annotations
+
+import enum
+import random
+import sys
+import types
+import zlib
+
+__version__ = "0.0-fallback"
+
+_DEFAULT_MAX_EXAMPLES = 25
+
+
+class HealthCheck(enum.Enum):
+    too_slow = "too_slow"
+    data_too_large = "data_too_large"
+    filter_too_much = "filter_too_much"
+    function_scoped_fixture = "function_scoped_fixture"
+
+
+class _Unsatisfied(Exception):
+    pass
+
+
+def assume(condition) -> bool:
+    if not condition:
+        raise _Unsatisfied()
+    return True
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng: random.Random):
+        return self._draw(rng)
+
+
+def integers(min_value=None, max_value=None) -> _Strategy:
+    lo = -(2**31) if min_value is None else min_value
+    hi = 2**31 - 1 if max_value is None else max_value
+    return _Strategy(lambda rng: rng.randint(lo, hi))
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: rng.random() < 0.5)
+
+
+def sampled_from(elements) -> _Strategy:
+    elements = list(elements)
+    return _Strategy(lambda rng: elements[rng.randrange(len(elements))])
+
+
+def settings(*args, max_examples=_DEFAULT_MAX_EXAMPLES, **kwargs):
+    """Decorator form only (the suite never uses settings profiles)."""
+    del args, kwargs  # deadline / suppress_health_check: meaningless here
+
+    def wrap(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+
+    return wrap
+
+
+def given(**strategy_kwargs):
+    def wrap(fn):
+        import functools
+        import inspect
+
+        @functools.wraps(fn)
+        def runner(*args, **fixture_kwargs):
+            n = getattr(runner, "_fallback_max_examples", _DEFAULT_MAX_EXAMPLES)
+            rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+            ran = 0
+            for _ in range(max(4 * n, n + 8)):
+                if ran >= n:
+                    break
+                drawn = {k: s.draw(rng) for k, s in strategy_kwargs.items()}
+                try:
+                    fn(*args, **fixture_kwargs, **drawn)
+                except _Unsatisfied:
+                    continue
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example ({fn.__qualname__}): {drawn!r}"
+                    ) from e
+                ran += 1
+
+        # Hide the drawn parameters from pytest (they are not fixtures).
+        sig = inspect.signature(fn)
+        runner.__signature__ = sig.replace(parameters=[
+            p for name, p in sig.parameters.items()
+            if name not in strategy_kwargs
+        ])
+        return runner
+
+    return wrap
+
+
+def _as_modules():
+    """Build (hypothesis, hypothesis.strategies) module objects."""
+    hyp = types.ModuleType("hypothesis")
+    hyp.__version__ = __version__
+    hyp.given = given
+    hyp.settings = settings
+    hyp.assume = assume
+    hyp.HealthCheck = HealthCheck
+    st = types.ModuleType("hypothesis.strategies")
+    st.integers = integers
+    st.booleans = booleans
+    st.sampled_from = sampled_from
+    hyp.strategies = st
+    return hyp, st
+
+
+def install() -> None:
+    """Register the fallback under 'hypothesis' if the real one is missing."""
+    try:
+        import hypothesis  # noqa: F401  (the real engine wins when present)
+
+        return
+    except ImportError:
+        pass
+    hyp, st = _as_modules()
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st

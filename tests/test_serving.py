@@ -1,0 +1,237 @@
+"""repro.serving: index lifecycle exactness, segment merge, batch padding.
+
+The contract under test (DESIGN.md §Serving): a RetrievalIndex is EXACT after
+any interleaving of insert/upsert/delete/compact — equal to brute-force
+re-running ``core.knn`` on the live rows — and the engine's pow2 batch
+padding never changes any row's results.
+"""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.knn import knn_query
+from repro.serving import (
+    EmbeddingCache,
+    EngineConfig,
+    QueryEngine,
+    RetrievalIndex,
+)
+
+SETTINGS = dict(max_examples=15, deadline=None)
+
+
+def _brute(live_ids, live_vecs, q, k, distance="sqeuclidean"):
+    """Reference: rebuild from scratch and solve with core.knn."""
+    r = knn_query(jnp.asarray(q), jnp.asarray(live_vecs), k, distance=distance)
+    ids = np.asarray(live_ids)[np.asarray(r.indices)]
+    ids = np.where(np.asarray(r.indices) >= 0, ids, -1)
+    return ids, np.asarray(r.distances)
+
+
+def _assert_matches_brute(res, live_ids, live_vecs, q, k, distance="sqeuclidean"):
+    bi, bv = _brute(live_ids, live_vecs, q, k, distance)
+    np.testing.assert_array_equal(np.asarray(res.ids), bi)
+    np.testing.assert_allclose(np.asarray(res.distances), bv, rtol=1e-5, atol=1e-6)
+
+
+class _Mirror:
+    """Host-side mirror of the live set (insertion-ordered like the index)."""
+
+    def __init__(self):
+        self.rows: dict[int, np.ndarray] = {}
+
+    def upsert(self, ids, vecs):
+        for i, v in zip(ids, vecs):
+            self.rows.pop(int(i), None)
+            self.rows[int(i)] = v
+
+    def delete(self, ids):
+        for i in ids:
+            self.rows.pop(int(i), None)
+
+    def live(self):
+        ids = np.fromiter(self.rows.keys(), np.int64, len(self.rows))
+        return ids, np.stack(list(self.rows.values()))
+
+
+def test_build_search_matches_brute():
+    rng = np.random.default_rng(0)
+    vecs = rng.standard_normal((300, 24)).astype(np.float32)
+    ids = np.arange(100, 400)
+    idx = RetrievalIndex.build(ids, vecs)
+    q = rng.standard_normal((9, 24)).astype(np.float32)
+    _assert_matches_brute(idx.search(q, 11), ids, vecs, q, 11)
+
+
+@hypothesis.settings(**SETTINGS)
+@hypothesis.given(seed=st.integers(0, 10_000), k=st.integers(1, 17),
+                  impl=st.sampled_from(["jnp", "fused"]))
+def test_interleaved_lifecycle_matches_brute_rebuild(seed, k, impl):
+    """insert/upsert/delete/compact in random interleavings == brute rebuild."""
+    rng = np.random.default_rng(seed)
+    d = 8
+    n0 = int(rng.integers(20, 120))
+    vecs = rng.standard_normal((n0, d)).astype(np.float32)
+    ids = rng.permutation(10_000)[:n0]
+    idx = RetrievalIndex.build(ids, vecs, impl=impl)
+    mirror = _Mirror()
+    mirror.upsert(ids, vecs)
+    next_id = 20_000
+
+    q = rng.standard_normal((5, d)).astype(np.float32)
+    for _ in range(4):
+        op = rng.integers(0, 4)
+        if op == 0:  # insert fresh ids
+            n = int(rng.integers(1, 40))
+            new_ids = np.arange(next_id, next_id + n)
+            next_id += n
+            new_vecs = rng.standard_normal((n, d)).astype(np.float32)
+            idx.insert(new_ids, new_vecs)
+            mirror.upsert(new_ids, new_vecs)
+        elif op == 1:  # upsert over random existing + some fresh
+            live_ids, _ = mirror.live()
+            n = int(rng.integers(1, 1 + min(20, len(live_ids))))
+            up = rng.choice(live_ids, size=n, replace=False)
+            up_vecs = rng.standard_normal((n, d)).astype(np.float32)
+            idx.upsert(up, up_vecs)
+            mirror.upsert(up, up_vecs)
+        elif op == 2:  # delete some (plus a non-existent id: must be a no-op)
+            live_ids, _ = mirror.live()
+            avail = min(20, len(live_ids) - k)  # keep >= k rows live
+            n = int(rng.integers(1, 1 + avail)) if avail >= 1 else 0
+            dead = rng.choice(live_ids, size=n, replace=False)
+            idx.delete(np.concatenate([dead, [99_999_999]]))
+            mirror.delete(dead)
+        else:
+            idx.compact()
+            assert idx.n_dead == 0
+        live_ids, live_vecs = mirror.live()
+        assert len(idx) == len(live_ids)
+        _assert_matches_brute(idx.search(q, k), live_ids, live_vecs, q, k)
+
+
+def test_delta_plus_main_merge_equals_single_segment():
+    """Same rows split main/delta vs packed in one segment: identical search."""
+    rng = np.random.default_rng(3)
+    d, k = 16, 9
+    a = rng.standard_normal((150, d)).astype(np.float32)
+    b = rng.standard_normal((70, d)).astype(np.float32)
+    ids_a = np.arange(150)
+    ids_b = np.arange(1000, 1070)
+    q = rng.standard_normal((6, d)).astype(np.float32)
+
+    split = RetrievalIndex.build(ids_a, a)  # main
+    split.insert(ids_b, b)  # delta
+    assert split._delta_n == 70  # really exercising the two-segment path
+
+    packed = RetrievalIndex.build(
+        np.concatenate([ids_a, ids_b]), np.concatenate([a, b]))
+    rs, rp = split.search(q, k), packed.search(q, k)
+    np.testing.assert_array_equal(np.asarray(rs.ids), np.asarray(rp.ids))
+    np.testing.assert_allclose(np.asarray(rs.distances),
+                               np.asarray(rp.distances), rtol=1e-5, atol=1e-6)
+
+
+def test_batch_padding_invariance():
+    """Engine pow2 padding returns bit-identical rows to the unpadded index."""
+    rng = np.random.default_rng(4)
+    d, k = 12, 5
+    idx = RetrievalIndex.build(
+        np.arange(256), rng.standard_normal((256, d)).astype(np.float32))
+    eng = QueryEngine(idx, EngineConfig(k=k, min_batch=8, max_batch=32))
+    for m in (1, 3, 8, 13, 33, 70):  # below/at/above bucket + chunking
+        q = rng.standard_normal((m, d)).astype(np.float32)
+        r_eng = eng.search(q)
+        r_idx = idx.search(jnp.asarray(q), k)
+        np.testing.assert_array_equal(np.asarray(r_eng.ids),
+                                      np.asarray(r_idx.ids))
+        np.testing.assert_array_equal(np.asarray(r_eng.distances),
+                                      np.asarray(r_idx.distances))
+    s = eng.meter.summary()
+    assert s["batches"] + s["compile_batches"] == 1 + 1 + 1 + 1 + 2 + 3
+
+
+def test_fewer_live_rows_than_k_pads_with_minus_one():
+    rng = np.random.default_rng(5)
+    idx = RetrievalIndex.build(
+        np.arange(6), rng.standard_normal((6, 4)).astype(np.float32))
+    idx.delete([0, 1])
+    res = idx.search(rng.standard_normal((2, 4)).astype(np.float32), 6)
+    ids = np.asarray(res.ids)
+    assert (ids[:, :4] >= 0).all() and (ids[:, 4:] == -1).all()
+    assert np.isposinf(np.asarray(res.distances)[:, 4:]).all()
+
+
+def test_insert_existing_id_raises_and_upsert_replaces():
+    rng = np.random.default_rng(6)
+    v = rng.standard_normal((4, 4)).astype(np.float32)
+    idx = RetrievalIndex.build([1, 2, 3, 4], v)
+    with pytest.raises(KeyError):
+        idx.insert([2], v[:1])
+    new_row = np.zeros((1, 4), np.float32)
+    idx.upsert([2], new_row)
+    assert len(idx) == 4
+    res = idx.search(np.zeros((1, 4), np.float32), 1)
+    assert int(np.asarray(res.ids)[0, 0]) == 2  # the replaced row wins at 0
+
+
+def test_engine_queue_roundtrip():
+    rng = np.random.default_rng(7)
+    idx = RetrievalIndex.build(
+        np.arange(64), rng.standard_normal((64, 8)).astype(np.float32))
+    eng = QueryEngine(idx, EngineConfig(k=3))
+    q = rng.standard_normal((5, 8)).astype(np.float32)
+    for i, row in enumerate(q):
+        eng.submit(("req", i), row)
+    assert eng.pending == 5
+    out = eng.flush()
+    assert eng.pending == 0 and len(out) == 5
+    ref = idx.search(jnp.asarray(q), 3)
+    for i in range(5):
+        np.testing.assert_array_equal(out[("req", i)][1], np.asarray(ref.ids)[i])
+
+
+def test_embedding_cache_lru_and_stats():
+    c = EmbeddingCache(capacity=2)
+    c.put(1, np.ones(3))
+    c.put(2, np.full(3, 2.0))
+    assert c.get(1) is not None  # 1 now most-recent
+    c.put(3, np.full(3, 3.0))  # evicts 2
+    assert c.get(2) is None and c.get(3) is not None
+    found, missing = c.get_many([1, 2, 3])
+    assert set(found) == {1, 3} and missing == [2]
+    assert c.hits == 4 and c.misses == 2
+
+
+def test_sharded_main_segment_matches_local_8dev():
+    """Query-sharded main scoring (mesh) == local path, tombstones included."""
+    from conftest import run_with_devices
+
+    run_with_devices("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.serving import RetrievalIndex
+
+        rng = np.random.default_rng(0)
+        d, k = 16, 9
+        vecs = rng.standard_normal((512, d)).astype(np.float32)
+        ids = np.arange(512)
+        mesh = jax.make_mesh((2, 4), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        sharded = RetrievalIndex.build(ids, vecs, mesh=mesh)
+        local = RetrievalIndex.build(ids, vecs)
+        fresh = rng.standard_normal((40, d)).astype(np.float32)
+        for idx in (sharded, local):
+            idx.delete(np.arange(0, 512, 7))
+            idx.insert(np.arange(9000, 9040), fresh)
+        rng2 = np.random.default_rng(1)
+        q = rng2.standard_normal((10, d)).astype(np.float32)
+        rs = sharded.search(jnp.asarray(q), k)
+        rl = local.search(jnp.asarray(q), k)
+        assert np.array_equal(np.asarray(rs.ids), np.asarray(rl.ids))
+        np.testing.assert_allclose(np.asarray(rs.distances),
+                                   np.asarray(rl.distances), rtol=1e-5)
+        print("OK")
+    """)
