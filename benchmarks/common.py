@@ -24,8 +24,15 @@ def timeit(fn, *args, warmup: int = 1, iters: int = 3) -> float:
     return ts[len(ts) // 2]
 
 
+# Every emitted row is also collected here so drivers (benchmarks.run) can
+# write a machine-readable BENCH json next to the human CSV stream.
+ROWS: list[dict] = []
+
+
 def emit(name: str, seconds: float, derived: str = ""):
     print(f"{name},{seconds * 1e6:.1f},{derived}")
+    ROWS.append({"name": name, "us_per_call": round(seconds * 1e6, 1),
+                 "derived": derived})
 
 
 def run_with_devices(code: str, n_devices: int, timeout: int = 1200) -> str:

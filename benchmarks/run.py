@@ -3,11 +3,19 @@
 Prints ``name,us_per_call,derived`` CSV rows.  Sizes are scaled to the CPU
 container; EXPERIMENTS.md maps each section back to the paper's table.
 
-  PYTHONPATH=src python -m benchmarks.run            # everything
-  PYTHONPATH=src python -m benchmarks.run table1     # one suite
+  PYTHONPATH=src python -m benchmarks.run                    # everything
+  PYTHONPATH=src python -m benchmarks.run table1             # one suite
+  PYTHONPATH=src python -m benchmarks.run --smoke --json out.json serving
+
+``--smoke`` shrinks every suite to CI-sized shapes (~seconds per suite);
+``--json PATH`` additionally writes the collected rows as a BENCH json
+artifact (the CI bench-smoke job uploads it so the perf trajectory
+accumulates run over run).
 """
 from __future__ import annotations
 
+import argparse
+import json
 import sys
 import time
 
@@ -15,29 +23,69 @@ import time
 SUITES = ("table1", "scaling", "kernels", "selection", "serving")
 
 
+def run_suite(name: str, smoke: bool) -> None:
+    if name == "table1":
+        from benchmarks import table1
+        if smoke:
+            table1.main(sizes=(512,), d=64, k=20)
+        else:
+            table1.main(sizes=(1000, 2000, 4000), d=256, k=100)
+    elif name == "scaling":
+        from benchmarks import scaling
+        if smoke:
+            scaling.main(n=1024, d=32, k=16, devices=(1, 2))
+        else:
+            scaling.main(n=4096, d=128, k=64, devices=(1, 2, 4))
+    elif name == "kernels":
+        from benchmarks import kernels
+        if smoke:
+            kernels.main(m=256, n=512, d=64, k=16)
+        else:
+            kernels.main()
+    elif name == "selection":
+        from benchmarks import selection
+        if smoke:
+            selection.main(n=1024, d=64)
+        else:
+            selection.main()
+    elif name == "serving":
+        from benchmarks import serving
+        if smoke:
+            serving.main(corpus=2048, d=32, k=10, batch_sizes=(8, 64),
+                         batches=4, churn=128)
+        else:
+            serving.main()
+    else:
+        raise SystemExit(f"unknown suite {name!r}; have {SUITES}")
+
+
 def main() -> None:
-    which = sys.argv[1:] or list(SUITES)
+    ap = argparse.ArgumentParser(description="repro benchmark driver")
+    ap.add_argument("suites", nargs="*", default=[], metavar="suite",
+                    help=f"subset of {SUITES} (default: all)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized shapes: seconds per suite, same code paths")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write collected rows as a BENCH json artifact")
+    args = ap.parse_args()
+    which = args.suites or list(SUITES)
     print("name,us_per_call,derived")
     t0 = time.time()
     for name in which:
-        if name == "table1":
-            from benchmarks import table1
-            table1.main(sizes=(1000, 2000, 4000), d=256, k=100)
-        elif name == "scaling":
-            from benchmarks import scaling
-            scaling.main(n=4096, d=128, k=64, devices=(1, 2, 4))
-        elif name == "kernels":
-            from benchmarks import kernels
-            kernels.main()
-        elif name == "selection":
-            from benchmarks import selection
-            selection.main()
-        elif name == "serving":
-            from benchmarks import serving
-            serving.main()
-        else:
-            raise SystemExit(f"unknown suite {name!r}; have {SUITES}")
-    print(f"# total_wall_s,{time.time() - t0:.1f},")
+        run_suite(name, args.smoke)
+    wall = time.time() - t0
+    print(f"# total_wall_s,{wall:.1f},")
+    if args.json:
+        from benchmarks import common
+        payload = {
+            "suites": which,
+            "smoke": bool(args.smoke),
+            "total_wall_s": round(wall, 1),
+            "rows": common.ROWS,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"# wrote {args.json} ({len(common.ROWS)} rows)", file=sys.stderr)
 
 
 if __name__ == '__main__':

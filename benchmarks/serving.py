@@ -9,10 +9,18 @@ maps it as the "online retrieval" row).  Reports, in the standard
   * the same with a live delta segment + tombstones (the two-segment merge
     tax: one extra small scorer + one bitonic merge);
   * index mutation throughput: upsert rows/sec into the delta, and
-    compact() wall time back to a packed main.
+    compact() wall time back to a packed main;
+  * the precision sweep (DESIGN.md §Quantized): for each scan dtype, qps +
+    p50/p99 AND recall@k against the fp32 exact baseline, next to the
+    analytic HBM bytes-per-query model (``accounting.scan_bytes_per_query``)
+    so the bandwidth claim travels with the recall it buys.
+
+CLI: ``python -m benchmarks.serving --scan-dtype {float32,bf16,int8}`` runs
+one dtype end-to-end (plus the fp32 baseline it needs for recall).
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 import numpy as np
@@ -20,38 +28,95 @@ import numpy as np
 from benchmarks.common import emit
 
 
-def main(corpus: int = 8192, d: int = 64, k: int = 10,
-         batch_sizes=(8, 64, 256), batches: int = 12, churn: int = 512):
+def _recall_at_k(got_ids: np.ndarray, want_ids: np.ndarray) -> float:
+    """Mean |topk ∩ exact topk| / k over queries (id -1 never matches)."""
+    hits = 0
+    m, k = want_ids.shape
+    for g, w in zip(got_ids, want_ids):
+        hits += len(set(int(i) for i in g if i >= 0)
+                    & set(int(i) for i in w if i >= 0))
+    return hits / float(m * k)
+
+
+def sweep(tag: str, idx, k: int, d: int, batch_sizes, batches: int, rng,
+          recall_vs: np.ndarray | None = None, queries=None,
+          extra: str = ""):
+    """One qps/latency sweep; optionally scores recall vs a baseline."""
     from repro.accounting import ServingMeter
     from repro.data.synthetic import clustered_vectors
-    from repro.serving import EngineConfig, QueryEngine, RetrievalIndex
+    from repro.serving import EngineConfig, QueryEngine
+
+    for b in batch_sizes:
+        meter = ServingMeter()
+        eng = QueryEngine(idx, EngineConfig(k=k, min_batch=8, max_batch=1024),
+                          meter=meter)
+        got = None
+        for t in range(batches):
+            q = (queries if queries is not None else
+                 clustered_vectors(b, d, seed=int(rng.integers(1 << 30))))
+            r = eng.search(q[:b] if queries is not None else q)
+            got = np.asarray(r.ids)
+        s = meter.summary()
+        derived = (f"qps={s['qps']:.0f};p50_ms={s['p50_ms']:.2f};"
+                   f"p99_ms={s['p99_ms']:.2f};batches={s['batches']}")
+        if recall_vs is not None and got is not None:
+            derived += f";recall@{k}={_recall_at_k(got, recall_vs[:len(got)]):.4f}"
+        if extra:
+            derived += ";" + extra
+        emit(f"serving_{tag}_b{b}",
+             (s["mean_ms"] / 1e3) if s["batches"] else 0.0, derived)
+
+
+def precision_sweep(corpus: int, d: int, k: int, batch_sizes, batches: int,
+                    scan_dtypes, overfetch: int = 4):
+    """qps / latency / recall@k / bytes-model, one row per scan dtype."""
+    from repro import accounting
+    from repro.core.distances import canonical_scan_dtype
+    from repro.data.synthetic import clustered_vectors
+    from repro.serving import RetrievalIndex
+
+    rng = np.random.default_rng(7)
+    vecs = clustered_vectors(corpus, d, seed=11)
+    # One fixed query set so recall compares identical work across dtypes.
+    q = clustered_vectors(max(batch_sizes), d, seed=12)
+
+    base = RetrievalIndex.build(np.arange(corpus), vecs, impl="fused")
+    exact_ids = np.asarray(base.search(q, k).ids)
+    fp32_bytes = accounting.scan_bytes_per_query(
+        corpus, d, scan_dtype="float32", k=k, overfetch=overfetch)["total"]
+
+    for sd in scan_dtypes:
+        sd_c = canonical_scan_dtype(sd)
+        # float32 IS the baseline index — don't pack/upload the corpus twice.
+        idx = base if sd_c == "float32" else RetrievalIndex.build(
+            np.arange(corpus), vecs, impl="fused", scan_dtype=sd,
+            overfetch=overfetch)
+        bpq = accounting.scan_bytes_per_query(
+            corpus, d, scan_dtype=sd_c, k=k, overfetch=overfetch)["total"]
+        extra = (f"hbm_bytes_per_q={bpq};x_fp32={fp32_bytes / bpq:.2f};"
+                 f"overfetch={overfetch}")
+        sweep(f"scan_{sd_c}", idx, k, d, batch_sizes, batches, rng,
+              recall_vs=exact_ids, queries=q, extra=extra)
+
+
+def main(corpus: int = 8192, d: int = 64, k: int = 10,
+         batch_sizes=(8, 64, 256), batches: int = 12, churn: int = 512,
+         scan_dtypes=("float32", "bfloat16", "int8"), overfetch: int = 4):
+    from repro.data.synthetic import clustered_vectors
+    from repro.serving import RetrievalIndex
 
     rng = np.random.default_rng(0)
     vecs = clustered_vectors(corpus, d, seed=1)
     index = RetrievalIndex.build(np.arange(corpus), vecs)
 
-    def sweep(tag: str, idx: RetrievalIndex):
-        for b in batch_sizes:
-            meter = ServingMeter()
-            eng = QueryEngine(idx, EngineConfig(k=k, min_batch=8, max_batch=1024),
-                              meter=meter)
-            for _ in range(batches):
-                q = clustered_vectors(b, d, seed=int(rng.integers(1 << 30)))
-                eng.search(q)
-            s = meter.summary()
-            emit(f"serving_{tag}_b{b}",
-                 (s["mean_ms"] / 1e3) if s["batches"] else 0.0,
-                 f"qps={s['qps']:.0f};p50_ms={s['p50_ms']:.2f};"
-                 f"p99_ms={s['p99_ms']:.2f};batches={s['batches']}")
-
     # Packed main segment only.
-    sweep("main", index)
+    sweep("main", index, k, d, batch_sizes, batches, rng)
 
     # With a live delta + tombstones: the two-segment merge tax.
     index.delete(np.arange(churn))
     index.upsert(np.arange(corpus, corpus + churn),
                  clustered_vectors(churn, d, seed=3))
-    sweep("delta", index)
+    sweep("delta", index, k, d, batch_sizes, batches, rng)
 
     # Mutation throughput: delta upsert and compaction.
     t0 = time.perf_counter()
@@ -65,7 +130,27 @@ def main(corpus: int = 8192, d: int = 64, k: int = 10,
     t_c = time.perf_counter() - t0
     emit("serving_compact", t_c, f"rows={len(index)}")
 
+    # Precision sweep: the quantized two-stage path vs the fp32 baseline.
+    precision_sweep(corpus, d, k, batch_sizes, batches, scan_dtypes,
+                    overfetch=overfetch)
+
 
 if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--scan-dtype", default=None,
+                    choices=["float32", "fp32", "bf16", "bfloat16", "int8"],
+                    help="run the precision sweep for ONE dtype "
+                         "(default: the full serving suite, all dtypes)")
+    ap.add_argument("--corpus", type=int, default=8192)
+    ap.add_argument("--d", type=int, default=64)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--batches", type=int, default=12)
+    ap.add_argument("--overfetch", type=int, default=4)
+    a = ap.parse_args()
     print("name,us_per_call,derived")
-    main()
+    if a.scan_dtype is not None:
+        precision_sweep(a.corpus, a.d, a.k, (8, 64, 256), a.batches,
+                        (a.scan_dtype,), overfetch=a.overfetch)
+    else:
+        main(corpus=a.corpus, d=a.d, k=a.k, batches=a.batches,
+             overfetch=a.overfetch)

@@ -11,10 +11,47 @@ ServingMeter: the per-batch latency/throughput account the query engine
 device results, aggregated into p50/p99/mean latency and queries/sec.  The
 first recorded batch after a (re)compile is tagged separately so steady-state
 numbers are not polluted by compilation (EXPERIMENTS.md §Serving).
+
+scan_bytes_per_query: the analytic HBM-traffic model of the two-stage
+quantized scan (DESIGN.md §Quantized) — what the precision-sweep benchmark
+reports next to measured qps so the bandwidth claim is auditable.
 """
 from __future__ import annotations
 
 _UNROLL = [False]
+
+# itemsize of the database stream per scan dtype (core.distances.SCAN_DTYPES).
+_SCAN_ITEMSIZE = {"float32": 4, "bfloat16": 2, "int8": 1}
+
+
+def scan_bytes_per_query(n_rows: int, d: int, *, scan_dtype: str = "float32",
+                         k: int = 10, overfetch: int = 4) -> dict:
+    """Analytic HBM bytes one query's corpus scan moves (model, not a probe).
+
+    The scan is bandwidth-bound in the database stream (the paper's whole
+    premise); per query it reads
+      * ``scan``    — the [n, d] replica at the scan dtype's width,
+      * ``epilogue``— the rank-1 terms: ``hy`` [n] fp32 always, plus the
+                      per-row int8 scales [n] fp32 when quantized to int8,
+      * ``rescore`` — stage 2's gather of K' = overfetch * next_pow2(k)
+                      fp32 corpus rows (zero when the scan is fp32: there is
+                      no second stage).
+    Query-side operands and the [*, K] outputs are O(d + k) per query —
+    noise next to O(n d) — and are omitted, identically for every dtype.
+    """
+    from repro.core.topk import next_pow2
+
+    itemsize = _SCAN_ITEMSIZE[scan_dtype]
+    scan = n_rows * d * itemsize
+    epilogue = n_rows * 4 + (n_rows * 4 if scan_dtype == "int8" else 0)
+    rescore = 0 if scan_dtype == "float32" else min(
+        n_rows, overfetch * next_pow2(k)) * d * 4
+    return {
+        "scan": scan,
+        "epilogue": epilogue,
+        "rescore": rescore,
+        "total": scan + epilogue + rescore,
+    }
 
 
 def set_unroll(value: bool) -> None:

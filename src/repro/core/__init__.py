@@ -2,10 +2,24 @@
 
 Public API:
   knn_allpairs / knn_query      — single-device tiled solvers
+  two_stage_query / rescore     — quantized scan + exact rescore (§Quantized)
   distributed.knn_allpairs_*    — multi-device (shard_map) solvers
   distances.get_distance        — cumulative distance registry
+  distances.quantize_rows       — bf16/int8 scan replicas (QuantizedRows)
   grid.make_schedule            — paper's zigzag grid scheduler
   topk                          — vectorized selection-network primitives
 """
-from repro.core.distances import get_distance, is_symmetric  # noqa: F401
-from repro.core.knn import KNNResult, knn_allpairs, knn_query  # noqa: F401
+from repro.core.distances import (  # noqa: F401
+    QuantizedRows,
+    dequantize_rows,
+    get_distance,
+    is_symmetric,
+    quantize_rows,
+)
+from repro.core.knn import (  # noqa: F401
+    KNNResult,
+    knn_allpairs,
+    knn_query,
+    rescore,
+    two_stage_query,
+)

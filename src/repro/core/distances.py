@@ -22,7 +22,7 @@ All distances are *smaller-is-nearer*; similarities (dot, cosine) are negated.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+from typing import Callable, NamedTuple
 
 import jax.numpy as jnp
 
@@ -244,3 +244,85 @@ def get_distance(name: str) -> Distance:
 def is_symmetric(name: str) -> bool:
     """Paper Sect. 3: symmetric distances admit the half-triangle optimization."""
     return name != "kl"
+
+
+# ---------------------------------------------------------------------------
+# Row quantization for the two-stage scan (DESIGN.md §Quantized).
+# ---------------------------------------------------------------------------
+
+# Canonical scan dtypes, plus the short spellings the CLIs accept.
+SCAN_DTYPES = ("float32", "bfloat16", "int8")
+_SCAN_DTYPE_ALIASES = {"fp32": "float32", "f32": "float32", "bf16": "bfloat16"}
+
+# Distances whose ``gy`` map is row-local and invertible enough that the
+# rank-1 ``hy`` term of the DEQUANTIZED rows equals ``mf.hy`` applied to them
+# directly (identity for sqeuclidean/euclidean/neg_dot, row-normalization for
+# neg_cosine — where hy is zero anyway).  KL / Hellinger quantize their
+# log/sqrt-space rows nonlinearly; extending them means deriving hy in that
+# space, which no serving config needs yet.
+QUANTIZABLE = ("sqeuclidean", "euclidean", "neg_dot", "neg_cosine")
+
+
+def canonical_scan_dtype(name: str) -> str:
+    name = _SCAN_DTYPE_ALIASES.get(str(name), str(name))
+    if name not in SCAN_DTYPES:
+        raise ValueError(f"unknown scan dtype {name!r}; have {SCAN_DTYPES}")
+    return name
+
+
+class QuantizedRows(NamedTuple):
+    """A low-precision replica of a database, pre-mapped to MXU ``gy`` space.
+
+    The scan kernel computes ``finalize(alpha * (fx @ data^T) * scale + hx +
+    hy)`` — the per-row symmetric scale folds into the same rank-1 epilogue
+    that already carries ``hy``, so dequantization costs zero extra HBM
+    traffic over the fp32 kernel (DESIGN.md §Quantized).
+
+    data:  [n, d] rows in ``float32`` / ``bfloat16`` / ``int8``.
+    scale: [n] fp32 per-row symmetric scales (int8 only, else None).
+    hy:    [n] fp32 rank-1 term of the DEQUANTIZED rows — the scanned
+           distance is exactly the distance to the dequantized corpus, so
+           the only retrieval error is candidate ordering, which the exact
+           rescore stage repairs.
+    """
+
+    data: Array
+    scale: Array | None
+    hy: Array
+
+
+def quantize_rows(y: Array, scan_dtype: str, *,
+                  distance: str = "sqeuclidean") -> QuantizedRows:
+    """Build the quantized scan replica of database rows ``y`` [n, d].
+
+    int8 uses per-row symmetric scales ``max|row| / 127`` with deterministic
+    round-to-nearest (a scan replica must be reproducible across rebuilds;
+    stochastic rounding buys nothing without a gradient to unbias).
+    """
+    scan_dtype = canonical_scan_dtype(scan_dtype)
+    dist = get_distance(distance)
+    if distance not in QUANTIZABLE:
+        raise ValueError(
+            f"distance {distance!r} has no quantized scan form; have {QUANTIZABLE}")
+    g = dist.matmul_form.gy(jnp.asarray(y, jnp.float32)).astype(jnp.float32)
+    if scan_dtype == "float32":
+        data, scale = g, None
+    elif scan_dtype == "bfloat16":
+        data, scale = g.astype(jnp.bfloat16), None
+    else:  # int8
+        amax = jnp.max(jnp.abs(g), axis=-1)
+        scale = jnp.maximum(amax, _EPS) / 127.0
+        q = jnp.round(g / scale[:, None])
+        data = jnp.clip(q, -127, 127).astype(jnp.int8)
+    deq = _dequantize(data, scale)
+    return QuantizedRows(data, scale, dist.matmul_form.hy(deq).astype(jnp.float32))
+
+
+def _dequantize(data: Array, scale: Array | None) -> Array:
+    deq = data.astype(jnp.float32)
+    return deq if scale is None else deq * scale[:, None]
+
+
+def dequantize_rows(q: QuantizedRows) -> Array:
+    """fp32 rows the quantized scan effectively scores against."""
+    return _dequantize(q.data, q.scale)

@@ -42,8 +42,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import topk as T
-from repro.core.distances import get_distance, is_symmetric
-from repro.core.knn import KNNResult, pairwise_tile
+from repro.core.distances import QuantizedRows, get_distance, is_symmetric, quantize_rows
+from repro.core.knn import KNNResult, pairwise_tile, rescore, scan_width
 
 Array = jnp.ndarray
 
@@ -61,23 +61,43 @@ def _pvary(x, axis_name):
     return jax.lax.pcast(x, names, to="varying")  # pragma: no cover
 
 
-def tree_merge_topk(run_v: Array, run_i: Array, axis_name) -> tuple[Array, Array]:
+def tree_merge_topk(run_v: Array, run_i: Array, axis_name,
+                    *, wire_dtype=None) -> tuple[Array, Array]:
     """All-reduce-style top-k merge: XOR-butterfly of bitonic merges.
 
     After log2(P) rounds every device holds the K smallest of the union of all
     devices' sorted K-buffers.  Communication: log2(P) x [rows, K] pairs —
     exponentially less than the paper's gather-everything-to-CPU merge.
+
+    ``wire_dtype`` (e.g. bf16): ship each round's value payload compressed,
+    via the same stored-dtype + integer-bitcast trick as the ring's boomerang
+    heap (``_permute_bits``) — the local buffer is STORED in the wire dtype
+    between rounds so every device compares identically-rounded values and
+    the merged (values, indices) stay consistent across the axis.  Merges
+    still compute in fp32; indices stay int32 (exact).  Reported distances
+    then carry one bf16 rounding — callers reserve this for the quantized
+    scan path, where the benchmark measures end-to-end recall anyway
+    (DESIGN.md §Quantized).
     """
     P = jax.lax.axis_size(axis_name)
     assert P & (P - 1) == 0, f"butterfly merge needs pow2 axis, got {P}"
+    wd = wire_dtype
+    if wd is not None:
+        run_v = run_v.astype(wd)
     d = 1
     while d < P:
         perm = [(i, i ^ d) for i in range(P)]
-        ov = jax.lax.ppermute(run_v, axis_name, perm)
+        if wd is None:
+            ov = jax.lax.ppermute(run_v, axis_name, perm)
+        else:
+            ov = _permute_bits(run_v, axis_name, perm)
         oi = jax.lax.ppermute(run_i, axis_name, perm)
-        run_v, run_i = T.merge_topk_sorted(run_v, run_i, ov, oi)
+        mv, mi = T.merge_topk_sorted(
+            run_v.astype(jnp.float32), run_i, ov.astype(jnp.float32), oi)
+        run_v = mv if wd is None else mv.astype(wd)
+        run_i = mi
         d *= 2
-    return run_v, run_i
+    return run_v.astype(jnp.float32), run_i
 
 
 def _rotate(x, axis_name, shift: int):
@@ -87,17 +107,26 @@ def _rotate(x, axis_name, shift: int):
     return jax.lax.ppermute(x, axis_name, perm)
 
 
-def _rotate_bits(x, axis_name, shift: int):
-    """Ring permute with the payload laundered through an integer bitcast.
+def _permute_bits(x, axis_name, perm):
+    """ppermute with the payload laundered through an integer bitcast.
 
     XLA's algebraic simplifier commutes fp converts across collectives and
     re-widens a bf16 payload back to f32 on the wire (measured — §Perf).  A
     bitcast to u16 is opaque to that rewrite, so the permute genuinely
-    carries 2 bytes/element.
+    carries 2 bytes/element.  Shared by the ring's boomerang heap and the
+    butterfly merge's compressed wire.
     """
+    assert jnp.dtype(x.dtype).itemsize == 2, x.dtype
     bits = jax.lax.bitcast_convert_type(x, jnp.uint16)
-    out = _rotate(bits, axis_name, shift)
+    out = jax.lax.ppermute(bits, axis_name, perm)
     return jax.lax.bitcast_convert_type(out, x.dtype)
+
+
+def _rotate_bits(x, axis_name, shift: int):
+    """Ring permute of a 16-bit payload (see ``_permute_bits``)."""
+    P = jax.lax.axis_size(axis_name)
+    perm = [(i, (i + shift) % P) for i in range(P)]
+    return _permute_bits(x, axis_name, perm)
 
 
 # ---------------------------------------------------------------------------
@@ -121,7 +150,7 @@ def ring_allpairs_shard(
     distance: str = "sqeuclidean",
     n_real: int,
     impl: str = "jnp",
-    threshold_skip: bool = False,
+    threshold_skip: bool | None = None,
     wire_dtype=None,
 ) -> tuple[Array, Array]:
     """Per-shard body of the half-ring symmetric all-pairs kNN.
@@ -130,6 +159,7 @@ def ring_allpairs_shard(
     ``n_real`` globally).  Returns this block's ascending (values, indices)
     [n_loc, K].  Runs inside shard_map.
     """
+    threshold_skip = T.resolve_threshold_skip(threshold_skip, pallas=False)
     dist = get_distance(distance)
     sym = is_symmetric(distance)
     P = jax.lax.axis_size(axis_name)
@@ -243,7 +273,7 @@ def triangle_allpairs_shard(
     gsize: int,
     n_real: int,
     impl: str = "jnp",
-    threshold_skip: bool = False,
+    threshold_skip: bool | None = None,
 ) -> tuple[Array, Array]:
     """Paper Fig. 5: zigzag-assigned upper-triangle grids, per-device heaps.
 
@@ -252,6 +282,7 @@ def triangle_allpairs_shard(
     Returns per-device PARTIAL heaps for ALL rows [n_pad, K]; callers merge
     across devices (tree_merge_topk) exactly as the paper merges per-GPU heaps.
     """
+    threshold_skip = T.resolve_threshold_skip(threshold_skip, pallas=False)
     dist = get_distance(distance)
     # One all-gather: the paper ships the whole dataset to every GPU up front.
     x = jax.lax.all_gather(x_local, axis_name, tiled=True)
@@ -306,12 +337,17 @@ def query_sharded_shard(
     q_local: Array,
     db_local: Array,
     db_live_local: Array | None = None,
+    db_q_local: QuantizedRows | None = None,
     *,
     db_axis,
     k: int,
     distance: str = "sqeuclidean",
     n_db_real: int,
     impl: str = "fused",
+    scan_dtype: str = "float32",
+    overfetch: int = 4,
+    wire_dtype=None,
+    threshold_skip: bool | None = None,
 ) -> tuple[Array, Array]:
     """Queries sharded on one axis, database on ``db_axis``; butterfly merge.
 
@@ -322,18 +358,57 @@ def query_sharded_shard(
     ``db_live_local``: optional bool [n_loc] mask of this shard (serving
     tombstones) — dead rows score +inf BEFORE the butterfly merge, so the
     merge wire payload stays K per row instead of an over-fetch width.
+
+    ``scan_dtype`` != "float32" runs the two-stage pipeline PER SHARD
+    (DESIGN.md §Quantized): scan the bf16/int8 replica for K' = scan_width
+    candidates, rescore them exactly against the local fp32 shard, and only
+    then merge — the butterfly payload stays K exact values per row, never
+    the over-fetch width.  ``db_q_local`` supplies a prebuilt replica shard
+    (the serving index caches one per main-segment epoch); when None the
+    shard quantizes on the fly.  ``wire_dtype`` (bf16) additionally
+    compresses the merge wire (``tree_merge_topk``).
     """
     P = jax.lax.axis_size(db_axis)
     p = jax.lax.axis_index(db_axis)
     n_loc = db_local.shape[0]
     K = T.next_pow2(k)
+    scan_q = scan_dtype != "float32"
 
-    if impl == "fused":
+    m = q_local.shape[0]
+    bm = min(256, T.next_pow2(max(m, 8)))
+    local_valid = jnp.clip(n_db_real - p * n_loc, 0, n_loc)
+
+    if scan_q:
+        # Stage 1: compressed scan of this shard's replica for K' candidates.
+        if db_q_local is None:
+            db_q_local = quantize_rows(db_local, scan_dtype, distance=distance)
         from repro.kernels import ops as kops
 
-        m = q_local.shape[0]
-        bm = min(256, T.next_pow2(max(m, 8)))
-        local_valid = jnp.clip(n_db_real - p * n_loc, 0, n_loc)
+        k_scan = scan_width(n_loc, min(k, n_loc), overfetch)
+        if impl == "fused":
+            cand = kops.fused_knn(
+                q_local, db_q_local, k_scan, distance=distance, tile_m=bm,
+                db_valid=local_valid, db_live=db_live_local,
+                threshold_skip=threshold_skip).indices
+        else:
+            from repro.core.distances import dequantize_rows
+
+            deq = dequantize_rows(db_q_local)
+            tile = pairwise_tile(q_local, deq, get_distance(distance))
+            col_ids = jnp.arange(n_loc)[None, :]
+            tile = jnp.where(col_ids >= local_valid, T.POS_INF, tile)
+            if db_live_local is not None:
+                tile = jnp.where(db_live_local[None, :], tile, T.POS_INF)
+            _, cand = T.tile_topk(tile, T.next_pow2(k_scan), 0)
+        # Stage 2: exact fp32 rescore, still shard-local.
+        vals, idx = rescore(q_local, db_local, cand, min(k, n_loc),
+                            distance=distance,
+                            impl=impl if impl == "fused" else "jnp")
+        if vals.shape[1] < K:
+            vals, idx = T.pad_topk(vals, idx, K)
+    elif impl == "fused":
+        from repro.kernels import ops as kops
+
         vals, idx = kops.fused_knn(
             q_local,
             db_local,
@@ -342,6 +417,7 @@ def query_sharded_shard(
             tile_m=bm,
             db_valid=local_valid,
             db_live=db_live_local,
+            threshold_skip=threshold_skip,
         )
         vals = jnp.pad(vals, ((0, 0), (0, K - vals.shape[1])), constant_values=T.POS_INF)
         idx = jnp.pad(idx, ((0, 0), (0, K - idx.shape[1])), constant_values=-1)
@@ -357,7 +433,7 @@ def query_sharded_shard(
 
     # local -> global database indices
     idx = jnp.where(idx >= 0, idx + p * n_loc, -1)
-    vals, idx = tree_merge_topk(vals, idx, db_axis)
+    vals, idx = tree_merge_topk(vals, idx, db_axis, wire_dtype=wire_dtype)
     return vals[:, :k], idx[:, :k]
 
 
@@ -384,7 +460,7 @@ def make_ring_allpairs(
     k: int,
     distance: str = "sqeuclidean",
     impl: str = "jnp",
-    threshold_skip: bool = False,
+    threshold_skip: bool | None = None,
     wire_dtype=None,
 ):
     """Build a jitted all-pairs kNN over ``mesh`` (ring over flattened axes).
@@ -433,7 +509,7 @@ def make_triangle_allpairs(
     gsize: int,
     distance: str = "sqeuclidean",
     impl: str = "jnp",
-    threshold_skip: bool = False,
+    threshold_skip: bool | None = None,
 ):
     """Paper-faithful zigzag/triangle kNN over ``mesh``; final tree merge."""
     from repro.core import grid as G
@@ -493,47 +569,68 @@ def make_query_sharded(
     k: int,
     distance: str = "sqeuclidean",
     impl: str = "fused",
+    scan_dtype: str = "float32",
+    overfetch: int = 4,
+    wire_dtype=None,
+    threshold_skip: bool | None = None,
 ):
     """Serving-path kNN: queries over ``query_axis``, database over ``db_axis``.
 
-    fn(q [m, d], db [n, d], n_db_real, db_live=None) -> KNNResult;
+    fn(q [m, d], db [n, d], n_db_real, db_live=None, db_q=None) -> KNNResult;
     m % size(query_axis) == 0, n % size(db_axis) == 0.  ``db_live`` (optional
     bool [n]) is sharded over ``db_axis`` alongside the database — the serving
     index's tombstone mask.
+
+    ``scan_dtype``/``overfetch``/``wire_dtype``: the quantized two-stage
+    per-shard pipeline (see ``query_sharded_shard``).  ``db_q`` (optional
+    ``QuantizedRows`` over the FULL padded database, sharded over ``db_axis``
+    like the fp32 rows) avoids re-quantizing per call.  ``threshold_skip``
+    threads down to the scan kernel (None = backend policy,
+    ``topk.resolve_threshold_skip``).
     """
     q_axes = (query_axis,) if isinstance(query_axis, str) else tuple(query_axis)
     assert db_axis not in q_axes, (
         "queries must be replicated over db_axis (the butterfly merge runs "
         f"across it); got query_axis={query_axis!r} == db_axis={db_axis!r}")
 
-    def fn(q: Array, db: Array, n_db_real: int, db_live: Array | None = None) -> KNNResult:
+    def fn(q: Array, db: Array, n_db_real: int, db_live: Array | None = None,
+           db_q: QuantizedRows | None = None) -> KNNResult:
         q_spec = jax.sharding.PartitionSpec(query_axis)
         db_spec = jax.sharding.PartitionSpec(db_axis)
-        in_specs = (q_spec, db_spec) + ((db_spec,) if db_live is not None else ())
+        row_spec = jax.sharding.PartitionSpec(db_axis)  # 1-D per-row arrays
+        # None args are empty pytrees: a matching None spec threads them
+        # through shard_map with zero per-call transfer (no fabricated masks).
+        live_spec = None if db_live is None else row_spec
+        dbq_spec = None if db_q is None else QuantizedRows(
+            db_spec, None if db_q.scale is None else row_spec, row_spec)
 
         @functools.partial(
             jax.shard_map,
             mesh=mesh,
-            in_specs=in_specs,
+            in_specs=(q_spec, db_spec, live_spec, dbq_spec),
             out_specs=(q_spec, q_spec),
             # The butterfly merge leaves results replicated over db_axis; vma
             # tracking cannot infer replication through ppermute chains.
             check_vma=False,
         )
-        def body(q_local, db_local, *live_local):
+        def body(q_local, db_local, live_local, db_q_local):
             return query_sharded_shard(
                 q_local,
                 db_local,
-                live_local[0] if live_local else None,
+                live_local,
+                db_q_local,
                 db_axis=db_axis,
                 k=k,
                 distance=distance,
                 n_db_real=n_db_real,
                 impl=impl,
+                scan_dtype=scan_dtype,
+                overfetch=overfetch,
+                wire_dtype=wire_dtype,
+                threshold_skip=threshold_skip,
             )
 
-        args = (q, db) + ((db_live,) if db_live is not None else ())
-        v, i = body(*args)
+        v, i = body(q, db, db_live, db_q)
         return KNNResult(v, i)
 
     return jax.jit(fn, static_argnames=("n_db_real",))

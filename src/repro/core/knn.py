@@ -29,7 +29,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import topk as T
-from repro.core.distances import Distance, get_distance, matmul_finalize
+from repro.core.distances import (
+    Distance,
+    QuantizedRows,
+    dequantize_rows,
+    get_distance,
+    matmul_finalize,
+)
 
 Array = jnp.ndarray
 
@@ -93,13 +99,16 @@ def knn_query(
     tile_n: int = 1024,
     impl: str = "jnp",
     exclude_self: bool = False,
-    threshold_skip: bool = False,
+    threshold_skip: bool | None = None,
     db_live: Array | None = None,
 ) -> KNNResult:
     """k nearest database rows for each query row (asymmetric problem).
 
     ``impl``: "jnp" (XLA einsum tiles), "pallas" (Pallas distance kernel +
     jnp selection) or "fused" (single Pallas distance+select kernel).
+
+    ``threshold_skip=None`` resolves per substrate (off here on the jnp
+    selection, on inside the fused kernel) — ``topk.resolve_threshold_skip``.
 
     ``db_live``: optional traced bool [n] row mask — False rows score +inf
     and are never selected (the serving index's tombstones).  A mask keeps
@@ -124,7 +133,9 @@ def knn_query(
             tile_n=tile_n,
             exclude_self=exclude_self,
             db_live=db_live,
+            threshold_skip=threshold_skip,
         )
+    threshold_skip = T.resolve_threshold_skip(threshold_skip, pallas=False)
 
     q = _pad_rows(queries, tile_m)
     db = _pad_rows(database, tile_n)
@@ -187,7 +198,7 @@ def knn_allpairs(
     impl: str = "jnp",
     symmetric: bool = True,
     exclude_self: bool = True,
-    threshold_skip: bool = False,
+    threshold_skip: bool | None = None,
 ) -> KNNResult:
     """k nearest vectors to each vector (the paper's problem, nDevices = 1).
 
@@ -212,6 +223,7 @@ def knn_allpairs(
             threshold_skip=threshold_skip,
         )
 
+    threshold_skip = T.resolve_threshold_skip(threshold_skip, pallas=False)
     n_real, d = x.shape
     k = min(k, max(n_real - 1, 1) if exclude_self else n_real)
     xp = _pad_rows(x, gsize)
@@ -265,3 +277,114 @@ def knn_allpairs(
     (run_v, run_i), _ = jax.lax.scan(step, (run_v, run_i), jnp.asarray(tile_list))
     vals, idx = T.finalize_topk(run_v, run_i, k)
     return KNNResult(vals[:n_real], idx[:n_real])
+
+
+# ---------------------------------------------------------------------------
+# Two-stage quantized retrieval: compressed scan + exact rescore
+# (DESIGN.md §Quantized).
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("k", "distance", "impl"))
+def rescore(
+    queries: Array,
+    database: Array,
+    cand_idx: Array,
+    k: int,
+    *,
+    distance: str = "sqeuclidean",
+    impl: str = "jnp",
+) -> KNNResult:
+    """Exact top-k re-rank of per-query candidate rows [m, Kp] (-1 = empty).
+
+    The repair stage of the quantized scan: gather the fp32 rows the scan
+    nominated, score them exactly, keep the k best.  ``impl="fused"`` uses
+    the Pallas rescore kernel (kernels/rescore.py); "jnp" is the XLA
+    reference (gather + batched MXU-form scoring + ``lax.top_k``).
+    Candidate slots must be distinct within a row (scan output is).
+    """
+    if impl == "fused":
+        from repro.kernels import ops as kops
+
+        return kops.rescore_topk(queries, database, cand_idx, k,
+                                 distance=distance)
+    m, d = queries.shape
+    n = database.shape[0]
+    Kp = cand_idx.shape[1]
+    dist = get_distance(distance)
+    mf = dist.matmul_form
+    assert mf is not None, f"{distance} has no MXU form"
+    safe = jnp.clip(cand_idx, 0, n - 1)
+    rows = jnp.take(database, safe.reshape(-1), axis=0)  # [m * Kp, d]
+    gy = mf.gy(rows).astype(jnp.float32).reshape(m, Kp, d)
+    hy = mf.hy(rows).astype(jnp.float32).reshape(m, Kp)
+    fx = mf.fx(queries).astype(jnp.float32)
+    hx = mf.hx(queries).astype(jnp.float32)[:, None]
+    dots = jnp.einsum("md,mcd->mc", fx, gy)
+    tile = matmul_finalize(dist)(mf.alpha * dots + hx + hy)
+    tile = jnp.where(cand_idx >= 0, tile, T.POS_INF)
+    kk = min(k, Kp)
+    vals, pos = T.topk_smallest(tile, kk)
+    idx = jnp.take_along_axis(cand_idx, pos, axis=1)
+    idx = jnp.where(jnp.isfinite(vals), idx, -1)
+    if kk < k:
+        vals, idx = T.pad_topk(vals, idx, k)
+    return KNNResult(vals, idx)
+
+
+def scan_width(n: int, k: int, overfetch: int) -> int:
+    """Candidate fetch width K' of the quantized scan (overfetch math).
+
+    K' = min(n, overfetch * next_pow2(k)): the scan's only failure mode is a
+    true top-k row ranked below K' by the quantization error, so recall@k is
+    the probability that the corpus holds > (overfetch-1) * K impostors whose
+    DEQUANTIZED distance beats a true neighbor's — driven to ~0 exponentially
+    in ``overfetch`` (measured: EXPERIMENTS.md §Quantized).  At K' = n the
+    two-stage pipeline is exhaustive and exact by construction.
+    """
+    assert overfetch >= 1, overfetch
+    return min(n, overfetch * T.next_pow2(k))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "distance", "impl", "overfetch", "threshold_skip"),
+)
+def two_stage_query(
+    queries: Array,
+    database: Array,
+    db_q: QuantizedRows,
+    k: int,
+    *,
+    distance: str = "sqeuclidean",
+    impl: str = "jnp",
+    overfetch: int = 4,
+    threshold_skip: bool | None = None,
+    db_live: Array | None = None,
+) -> KNNResult:
+    """Quantized scan of ``db_q`` + exact fp32 rescore against ``database``.
+
+    Stage 1 scans the low-precision replica for K' = scan_width(n, k,
+    overfetch) candidates (tombstones masked inside the scan); stage 2
+    re-scores the candidates against the fp32 corpus and returns the exact
+    top-k OF THE CANDIDATE SET.  With a float32 replica the candidate set
+    provably contains the true top-k, so the result is exact; quantized
+    replicas trade recall for a 2x/4x smaller database stream
+    (DESIGN.md §Quantized).
+    """
+    n = database.shape[0]
+    k_scan = scan_width(n, k, overfetch)
+    if impl == "fused":
+        from repro.kernels import ops as kops
+
+        m = queries.shape[0]
+        bm = min(256, T.next_pow2(max(m, 8)))
+        cand = kops.fused_knn(
+            queries, db_q, k_scan, distance=distance, tile_m=bm,
+            db_live=db_live, threshold_skip=threshold_skip).indices
+    else:
+        cand = knn_query(
+            queries, dequantize_rows(db_q), k_scan, distance=distance,
+            impl=impl, db_live=db_live, threshold_skip=threshold_skip).indices
+    return rescore(queries, database, cand, min(k, n), distance=distance,
+                   impl=impl)

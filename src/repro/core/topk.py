@@ -43,6 +43,22 @@ def next_pow2(n: int) -> int:
     return p
 
 
+def resolve_threshold_skip(flag: bool | None, *, pallas: bool) -> bool:
+    """One repo-wide default policy for the paper's heap-top filter.
+
+    ``None`` (every public entry point's default) resolves per execution
+    substrate: ON inside Pallas kernels, where ``pl.when`` predication is
+    near-free, and OFF on the jnp/XLA paths, where the ``lax.cond`` guard
+    measurably costs more than the merges it skips (EXPERIMENTS.md §Perf,
+    refuted-hypothesis log; tradeoff documented in DESIGN.md §Quantized,
+    "threshold-skip policy").  An explicit bool always wins — that is how
+    ``benchmarks/selection.py`` A/Bs the two settings.
+    """
+    if flag is None:
+        return pallas
+    return bool(flag)
+
+
 # ---------------------------------------------------------------------------
 # Bitonic compare-exchange stage via reshape/flip (partner index = i XOR j).
 # ---------------------------------------------------------------------------

@@ -12,6 +12,16 @@ Grid: (m/bm, n/bn, d/bd); the d-axis accumulates the MXU-form distance into a
 VMEM accumulator; at the last d-chunk the finished tile is masked (column
 padding + self-exclusion) and bitonic-merged into the per-row top-K scratch;
 at the last column tile the K-buffer is emitted.
+
+Quantized scan (DESIGN.md §Quantized): ``gy`` may be stored bf16 or int8 —
+the DMA from HBM moves 2x/4x fewer database bytes, and the operand is
+upcast to fp32 in VMEM right before the MXU dot.  int8 rows carry a per-row
+symmetric scale folded into the same rank-1 epilogue as ``hy``:
+
+    tile = finalize(alpha * (fx @ gy^T) * gy_scale + hx + hy)
+
+so dequantization costs one extra [1, bn] VMEM multiply, never a second pass
+over the database.
 """
 from __future__ import annotations
 
@@ -23,12 +33,20 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import topk as T
+from repro.kernels._backend import resolve_interpret
 from repro.core.distances import get_distance, matmul_finalize
 from repro.kernels.stream_topk import _tile_reduce_topk
 
 
-def _kernel(K, nj, nk, bm, bn, alpha, finalize, n_real, exclude_self, threshold_skip):
-    def kernel(fx_ref, gy_ref, hx_ref, hy_ref, out_v_ref, out_i_ref, acc, run_v, run_i):
+def _kernel(K, nj, nk, bm, bn, alpha, finalize, n_real, exclude_self,
+            threshold_skip, scaled):
+    def kernel(fx_ref, gy_ref, *refs):
+        if scaled:
+            gs_ref, hx_ref, hy_ref = refs[:3]
+        else:
+            gs_ref = None
+            hx_ref, hy_ref = refs[:2]
+        out_v_ref, out_i_ref, acc, run_v, run_i = refs[-5:]
         i, j, kd = pl.program_id(0), pl.program_id(1), pl.program_id(2)
 
         @pl.when(jnp.logical_and(j == 0, kd == 0))
@@ -40,16 +58,20 @@ def _kernel(K, nj, nk, bm, bn, alpha, finalize, n_real, exclude_self, threshold_
         def _init_acc():
             acc[...] = jnp.zeros_like(acc)
 
+        # bf16/int8 gy upcasts in VMEM, AFTER the (compressed) HBM->VMEM DMA.
         acc[...] += jax.lax.dot_general(
             fx_ref[...],
-            gy_ref[...],
+            gy_ref[...].astype(jnp.float32),
             (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32,
         )
 
         @pl.when(kd == nk - 1)
         def _select():
-            tile = finalize(alpha * acc[...] + hx_ref[...] + hy_ref[...])
+            t = alpha * acc[...]
+            if scaled:
+                t = t * gs_ref[...]  # per-row int8 scale, rank-1 epilogue
+            tile = finalize(t + hx_ref[...] + hy_ref[...])
             col = jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 1) + j * bn
             tile = jnp.where(col >= n_real, T.POS_INF, tile)
             if exclude_self:
@@ -101,21 +123,30 @@ def fused_knn_pallas(
     hy: jnp.ndarray,
     k: int,
     *,
+    gy_scale: jnp.ndarray | None = None,
     distance: str = "sqeuclidean",
     bm: int = 256,
     bn: int = 512,
     bd: int = 128,
     n_real: int,
     exclude_self: bool = False,
-    threshold_skip: bool = True,
-    interpret: bool = True,
+    threshold_skip: bool | None = None,
+    interpret: bool | None = None,
 ):
     """Fused kNN over pre-mapped MXU-form operands (see ops.fused_knn).
 
+    ``gy`` may be fp32, bf16, or int8 (then pass ``gy_scale`` [1, n] fp32 —
+    the per-row symmetric scales, see module docstring).  ``threshold_skip``
+    and ``interpret`` default to the backend policy (``None`` → skip on, and
+    interpret off exactly on real TPUs) — see ``topk.resolve_threshold_skip``.
+
     Returns (values [m, K], indices [m, K]) ascending, K = next_pow2(k).
     """
+    interpret = resolve_interpret(interpret)
+    threshold_skip = T.resolve_threshold_skip(threshold_skip, pallas=True)
     dist = get_distance(distance)
     assert dist.matmul_form is not None, f"{distance} has no MXU form"
+    assert gy.dtype in (jnp.float32, jnp.bfloat16, jnp.int8), gy.dtype
     m, d = fx.shape
     n = gy.shape[0]
     K = T.next_pow2(k)
@@ -123,6 +154,20 @@ def fused_knn_pallas(
     assert bn % K == 0 and (bn // K) & (bn // K - 1) == 0, (bn, K)
     nj, nk = n // bn, d // bd
     grid = (m // bm, nj, nk)
+    scaled = gy_scale is not None
+    in_specs = [
+        pl.BlockSpec((bm, bd), lambda i, j, kd: (i, kd)),
+        pl.BlockSpec((bn, bd), lambda i, j, kd: (j, kd)),
+    ]
+    operands = [fx, gy]
+    if scaled:
+        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, kd: (0, j)))
+        operands.append(gy_scale)
+    in_specs += [
+        pl.BlockSpec((bm, 1), lambda i, j, kd: (i, 0)),
+        pl.BlockSpec((1, bn), lambda i, j, kd: (0, j)),
+    ]
+    operands += [hx, hy]
     return pl.pallas_call(
         _kernel(
             K,
@@ -135,14 +180,10 @@ def fused_knn_pallas(
             n_real,
             exclude_self,
             threshold_skip,
+            scaled,
         ),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, bd), lambda i, j, kd: (i, kd)),
-            pl.BlockSpec((bn, bd), lambda i, j, kd: (j, kd)),
-            pl.BlockSpec((bm, 1), lambda i, j, kd: (i, 0)),
-            pl.BlockSpec((1, bn), lambda i, j, kd: (0, j)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((bm, K), lambda i, j, kd: (i, 0)),
             pl.BlockSpec((bm, K), lambda i, j, kd: (i, 0)),
@@ -161,4 +202,4 @@ def fused_knn_pallas(
         ),
         interpret=interpret,
         name="fused_knn",
-    )(fx, gy, hx, hy)
+    )(*operands)

@@ -3,7 +3,9 @@
 Handles operand padding to block multiples, MXU-form pre-mapping (f/g/h), and
 the interpret-mode switch: on the CPU container every kernel runs with
 ``interpret=True`` (the Pallas interpreter executes the kernel body exactly);
-on a real TPU backend the same calls lower to Mosaic.
+on a real TPU backend the same calls lower to Mosaic.  The kernel entry
+points themselves (``fused_knn_pallas`` & co.) resolve ``interpret=None`` the
+same backend-aware way, so direct callers are safe on real TPUs too.
 """
 from __future__ import annotations
 
@@ -13,14 +15,16 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import topk as T
-from repro.core.distances import get_distance, matmul_finalize
+from repro.core.distances import (
+    QuantizedRows,
+    get_distance,
+    matmul_finalize,
+)
 from repro.kernels import fused_knn as _fused
 from repro.kernels import pairwise_distance as _pd
+from repro.kernels import rescore as _rs
 from repro.kernels import stream_topk as _st
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+from repro.kernels._backend import resolve_interpret
 
 
 def _pad_axis(x, mult, axis, value=0.0):
@@ -62,8 +66,7 @@ def pairwise_distance(
     Pads m/n with +inf rows (callers slice), d with zero coordinates (safe for
     every registry distance's f/g maps: they send 0 -> 0).
     """
-    if interpret is None:
-        interpret = not _on_tpu()
+    interpret = resolve_interpret(interpret)
     m, n = x.shape[0], y.shape[0]
     dist = get_distance(distance)
     if cumulative or dist.matmul_form is None:
@@ -113,12 +116,11 @@ def stream_topk(
     *,
     bm: int = 256,
     bn: int | None = None,
-    threshold_skip: bool = True,
+    threshold_skip: bool | None = None,
     interpret: bool | None = None,
 ):
     """Ascending k smallest per row of [m, n] + int32 indices, via Pallas."""
-    if interpret is None:
-        interpret = not _on_tpu()
+    interpret = resolve_interpret(interpret)
     m, n = x.shape
     K = T.next_pow2(k)
     if bn is None:
@@ -133,7 +135,8 @@ def stream_topk(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("k", "distance", "tile_m", "tile_n", "bd", "exclude_self", "interpret"),
+    static_argnames=("k", "distance", "tile_m", "tile_n", "bd", "exclude_self",
+                     "threshold_skip", "interpret"),
 )
 def fused_knn(
     q,
@@ -147,9 +150,16 @@ def fused_knn(
     exclude_self: bool = False,
     db_valid=None,
     db_live=None,
+    threshold_skip: bool | None = None,
     interpret: bool | None = None,
 ):
     """kNN of q against db with the fused Pallas kernel; returns KNNResult.
+
+    ``db`` is either a raw fp32 [n, d] array or a ``QuantizedRows`` replica
+    (bf16 / int8 + per-row scales, already ``gy``-mapped — see
+    ``core.distances.quantize_rows``).  A quantized db makes the scan move
+    2x/4x fewer HBM bytes; distances are then exact w.r.t. the DEQUANTIZED
+    corpus, so callers over-fetch and rescore (DESIGN.md §Quantized).
 
     ``db_valid``: optional traced count of valid database rows — rows at index
     >= db_valid get +inf distance (via the rank-1 ``hy`` epilogue term), which
@@ -159,12 +169,24 @@ def fused_knn(
     """
     from repro.core.knn import KNNResult
 
-    if interpret is None:
-        interpret = not _on_tpu()
-    m, n = q.shape[0], db.shape[0]
+    interpret = resolve_interpret(interpret)
+    quantized = isinstance(db, QuantizedRows)
+    m = q.shape[0]
+    n = db.data.shape[0] if quantized else db.shape[0]
     K = T.next_pow2(k)
     tile_n = max(tile_n, K)
-    fx, gy, hx, hy, _ = _mxu_operands(q, db, distance)
+    if quantized:
+        dist = get_distance(distance)
+        mf = dist.matmul_form
+        assert mf is not None, f"{distance} has no MXU form"
+        fx = mf.fx(q).astype(jnp.float32)
+        hx = mf.hx(q).astype(jnp.float32)[:, None]
+        gy = db.data  # keep the storage dtype: the kernel upcasts in VMEM
+        hy = db.hy.astype(jnp.float32)[None, :]
+        gs = None if db.scale is None else db.scale.astype(jnp.float32)[None, :]
+    else:
+        fx, gy, hx, hy, _ = _mxu_operands(q, db, distance)
+        gs = None
     if db_valid is not None:
         hy = jnp.where(jnp.arange(n)[None, :] < db_valid, hy, T.POS_INF)
     if db_live is not None:
@@ -173,18 +195,82 @@ def fused_knn(
     gy = _pad_axis(_pad_axis(gy, tile_n, 0), bd, 1)
     hx = _pad_axis(hx, tile_m, 0)
     hy = _pad_axis(hy, tile_n, 1)
+    if gs is not None:
+        gs = _pad_axis(gs, tile_n, 1)
     vals, idx = _fused.fused_knn_pallas(
         fx,
         gy,
         hx,
         hy,
         k,
+        gy_scale=gs,
         distance=distance,
         bm=tile_m,
         bn=tile_n,
         bd=bd,
         n_real=n,
         exclude_self=exclude_self,
+        threshold_skip=threshold_skip,
         interpret=interpret,
     )
+    return KNNResult(vals[:m, :k], idx[:m, :k])
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "distance", "bm", "bd", "interpret"),
+)
+def rescore_topk(
+    q,
+    db,
+    cand_idx,
+    k: int,
+    *,
+    distance: str = "sqeuclidean",
+    bm: int = 128,
+    bd: int = 128,
+    interpret: bool | None = None,
+):
+    """Exact re-rank of per-query candidate rows; returns KNNResult [m, k].
+
+    ``cand_idx`` [m, Kp] int32 database rows from the quantized scan (-1 =
+    empty slot).  The gather ``db[cand_idx]`` runs in XLA; the Pallas kernel
+    fuses exact distance + selection over the gathered [m, Kp, d] block
+    (see kernels/rescore.py).  Candidate slots must be distinct per row
+    (scan output is); -1 slots come back as +inf / -1.
+    """
+    from repro.core.knn import KNNResult
+
+    interpret = resolve_interpret(interpret)
+    m, d = q.shape
+    n = db.shape[0]
+    Kp = cand_idx.shape[1]
+    K = T.next_pow2(k)
+    dist = get_distance(distance)
+    mf = dist.matmul_form
+    assert mf is not None, f"{distance} has no MXU form"
+
+    # XLA-side gather of the fp32 corpus rows, then gy-map them rowwise.
+    safe = jnp.clip(cand_idx, 0, n - 1)
+    rows = jnp.take(db, safe.reshape(-1), axis=0)  # [m * Kp, d]
+    cand = mf.gy(rows).astype(jnp.float32).reshape(m, Kp, d)
+    hy_c = mf.hy(rows).astype(jnp.float32).reshape(m, Kp)
+    hy_c = jnp.where(cand_idx >= 0, hy_c, T.POS_INF)
+    fx = mf.fx(q).astype(jnp.float32)
+    hx = mf.hx(q).astype(jnp.float32)[:, None]
+
+    # Pad: rows of queries, the d axis, and the candidate axis (to K * 2^t).
+    bm = min(bm, T.next_pow2(max(m, 8)))
+    Kp_pad = K * T.next_pow2(-(-max(Kp, K) // K))
+    fx = _pad_axis(_pad_axis(fx, bm, 0), bd, 1)
+    hx = _pad_axis(hx, bm, 0)
+    cand = _pad_axis(_pad_axis(_pad_axis(cand, bm, 0), Kp_pad, 1), bd, 2)
+    hy_c = _pad_axis(_pad_axis(hy_c, bm, 0), Kp_pad, 1, value=T.POS_INF)
+    cip = _pad_axis(_pad_axis(cand_idx, bm, 0, value=-1), Kp_pad, 1, value=-1)
+
+    vals, pos = _rs.rescore_topk_pallas(
+        fx, cand, hx, hy_c, k, distance=distance, bm=bm, bd=bd,
+        interpret=interpret)
+    idx = jnp.take_along_axis(cip, pos, axis=1)
+    idx = jnp.where(jnp.isfinite(vals), idx, -1)
     return KNNResult(vals[:m, :k], idx[:m, :k])

@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._backend import resolve_interpret
+
 
 def _matmul_kernel(finalize, alpha, n_dchunks):
     """Kernel body: acc over d-chunks, epilogue applies alpha/hx/hy/finalize."""
@@ -91,13 +93,15 @@ def pairwise_distance_pallas(
     bm: int = 256,
     bn: int = 256,
     bd: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ):
     """MXU-form distance tile matrix: [m, n] fp32.
 
     Inputs must be pre-padded: m % bm == n % bn == d % bd == 0.
     ``hx``: [m, 1] fp32, ``hy``: [1, n] fp32 rank-1 corrections.
+    ``interpret=None`` resolves backend-aware (Mosaic only on a real TPU).
     """
+    interpret = resolve_interpret(interpret)
     m, d = fx.shape
     n, d2 = gy.shape
     assert d == d2 and m % bm == 0 and n % bn == 0 and d % bd == 0, (
@@ -137,9 +141,10 @@ def pairwise_distance_cumulative_pallas(
     bm: int = 256,
     bn: int = 256,
     bd: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ):
     """Generic cumulative-dbar distance tile matrix (VPU path)."""
+    interpret = resolve_interpret(interpret)
     m, d = x.shape
     n, d2 = y.shape
     assert d == d2 and m % bm == 0 and n % bn == 0 and d % bd == 0

@@ -23,6 +23,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import topk as T
+from repro.kernels._backend import resolve_interpret
 
 
 def _tile_reduce_topk(tile, K, col_offset):
@@ -90,15 +91,19 @@ def stream_topk_pallas(
     *,
     bm: int = 256,
     bn: int = 512,
-    threshold_skip: bool = True,
-    interpret: bool = True,
+    threshold_skip: bool | None = None,
+    interpret: bool | None = None,
 ):
     """Ascending k smallest of each row of ``x`` [m, n] + int32 indices.
 
     Requires m % bm == 0, n % bn == 0, bn = next_pow2(k) * 2^t.
     Returns (values [m, K], indices [m, K]) with K = next_pow2(k); callers
-    slice [:, :k].
+    slice [:, :k].  ``interpret=None`` resolves backend-aware (Mosaic on a
+    real TPU, the interpreter elsewhere); ``threshold_skip=None`` resolves to
+    the Pallas policy (on) — see ``topk.resolve_threshold_skip``.
     """
+    interpret = resolve_interpret(interpret)
+    threshold_skip = T.resolve_threshold_skip(threshold_skip, pallas=True)
     m, n = x.shape
     K = T.next_pow2(k)
     assert m % bm == 0 and n % bn == 0, (x.shape, bm, bn)

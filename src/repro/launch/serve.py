@@ -14,6 +14,9 @@ Flags (see README.md "CLI reference"):
   --batches B       number of online batches (first is compile, excluded)
   --k K             neighbors per query
   --impl {jnp,fused}  segment scorer (fused = Pallas distance+select kernel)
+  --scan-dtype {float32,bf16,int8}  two-stage quantized main-segment scan
+                    (DESIGN.md §Quantized; float32 = exact, the default)
+  --overfetch O     scan candidate multiple for the quantized path
   --churn C         items upserted into the delta segment per batch (0 = off)
   --compact-every E compact() after every E batches (0 = never)
   --repeat-frac F   fraction of each batch drawn from repeat users (cache hits)
@@ -34,6 +37,9 @@ def main():
     ap.add_argument("--batches", type=int, default=20)
     ap.add_argument("--k", type=int, default=10)
     ap.add_argument("--impl", choices=("jnp", "fused"), default="jnp")
+    ap.add_argument("--scan-dtype", default="float32",
+                    choices=("float32", "fp32", "bf16", "bfloat16", "int8"))
+    ap.add_argument("--overfetch", type=int, default=4)
     ap.add_argument("--churn", type=int, default=0,
                     help="items upserted into the delta per batch")
     ap.add_argument("--compact-every", type=int, default=0)
@@ -63,7 +69,8 @@ def main():
 
     defaults = serving_defaults()
     defaults.update(k=args.k, impl=args.impl, cache_capacity=args.cache,
-                    max_batch=next_pow2(max(64, args.queries)))
+                    max_batch=next_pow2(max(64, args.queries)),
+                    scan_dtype=args.scan_dtype, overfetch=args.overfetch)
     mesh = None
     if args.mesh:
         from repro.launch.mesh import make_host_mesh

@@ -56,7 +56,16 @@ class QueryEngine:
         # pending vector (latest wins, scored once) — a plain list would
         # score both and silently drop one result at the dict build.
         self._queue: dict[object, np.ndarray] = {}
+        # (batch, k, index shape signature) keys already compiled.  Entries
+        # whose MAIN component no longer matches the live packed main are
+        # evicted — a compact that changes the row count strands them, so a
+        # long-lived churn workload holds one main-epoch's keys instead of
+        # one tuple per epoch forever.  Delta-capacity signatures are kept
+        # for the live main: they legitimately RECUR (delta refills through
+        # the same pow2 caps after every compact), and re-tagging a warm
+        # recurrence as a compile batch would skew the steady-state stats.
         self._seen_shapes: set = set()
+        self._live_main: int | None = None
 
     # -- batched search -----------------------------------------------------
 
@@ -87,7 +96,12 @@ class QueryEngine:
         # A shape is "cold" (compile expected) once per (batch, k, index
         # shape signature) — delta appends that stay inside the current
         # capacity/fetch buckets do NOT recompile and stay steady-state.
-        shape_key = (mp, k, self.index.shape_signature(k))
+        sig = self.index.shape_signature(k)
+        if sig[0] != self._live_main:  # new packed main: old keys stranded
+            self._seen_shapes = {s for s in self._seen_shapes
+                                 if s[2][0] == sig[0]}
+            self._live_main = sig[0]
+        shape_key = (mp, k, sig)
         cold = shape_key not in self._seen_shapes
         self._seen_shapes.add(shape_key)
         t0 = time.perf_counter()

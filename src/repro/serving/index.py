@@ -39,7 +39,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import topk as T
-from repro.core.knn import knn_query
+from repro.core.distances import QUANTIZABLE, canonical_scan_dtype, quantize_rows
+from repro.core.knn import knn_query, two_stage_query
 
 Array = jnp.ndarray
 
@@ -61,12 +62,33 @@ def _segment_candidates(q, vecs, live, ids, *, k_out, distance, impl):
     """
     vals, idx = knn_query(q, vecs, k_out, distance=distance, impl=impl,
                           db_live=live)
-    safe = jnp.clip(idx, 0, vecs.shape[0] - 1)
+    return _externalize(vals, idx, ids, k_out)
+
+
+def _externalize(vals, idx, ids, k_out):
+    """Row indices -> external ids, padded out to fetch width ``k_out``."""
+    safe = jnp.clip(idx, 0, ids.shape[0] - 1)
     ok = idx >= 0  # -1 where masked/padded (val == +inf)
     ext = jnp.where(ok, jnp.take(ids, safe, axis=0), jnp.int32(-1))
-    if vals.shape[-1] < k_out:  # knn_query clamps k to the row count
+    if vals.shape[-1] < k_out:  # scorers clamp k to the row count
         vals, ext = T.pad_topk(vals, ext, k_out)
     return vals, ext
+
+
+@functools.partial(jax.jit, static_argnames=("k_out", "overfetch", "distance",
+                                             "impl"))
+def _segment_candidates_quantized(q, vecs, qrows, live, ids, *, k_out,
+                                  overfetch, distance, impl):
+    """Two-stage top-``k_out`` of one segment: quantized scan + exact rescore.
+
+    Stage 1 scans the segment's low-precision replica (``qrows``, tombstones
+    masked inside the scan) for overfetch * k_out candidates; stage 2
+    re-scores them against the segment's fp32 rows (DESIGN.md §Quantized).
+    Returns ([m, k_out] exact vals, [m, k_out] external ids).
+    """
+    vals, idx = two_stage_query(q, vecs, qrows, k_out, distance=distance,
+                                impl=impl, overfetch=overfetch, db_live=live)
+    return _externalize(vals, idx, ids, k_out)
 
 
 @functools.partial(jax.jit, static_argnames=("k",))
@@ -84,17 +106,38 @@ class RetrievalIndex:
     and score it with the butterfly-merge serving path
     (``core.distributed.make_query_sharded``); the delta segment always
     scores locally (it is small by construction).
+
+    ``scan_dtype``/``overfetch``: the quantized two-stage retrieval knob
+    (DESIGN.md §Quantized).  "bfloat16"/"int8" keep a low-precision replica
+    of the MAIN segment (rebuilt when its rows change, i.e. at build and
+    compact — tombstones are a mask and never touch the replica), scan it
+    for overfetch * k candidates, and rescore those exactly against the fp32
+    rows; the delta segment always scans fp32 (it is small by construction).
+    The default "float32" bypasses the two-stage path entirely — results
+    stay bit-exact.
     """
 
     def __init__(self, dim: int, *, distance: str = "sqeuclidean",
                  impl: str = "jnp", mesh=None, db_axis: str = "model",
-                 query_axis: str = "data"):
+                 query_axis: str = "data", scan_dtype: str = "float32",
+                 overfetch: int = 4):
         self.dim = int(dim)
         self.distance = distance
         self.impl = impl
         self.mesh = mesh
         self.db_axis = db_axis
         self.query_axis = query_axis
+        self.scan_dtype = canonical_scan_dtype(scan_dtype)
+        self.overfetch = int(overfetch)
+        assert self.overfetch >= 1, overfetch
+        if self.scan_dtype != "float32" and distance not in QUANTIZABLE:
+            raise ValueError(
+                f"scan_dtype={scan_dtype!r} needs a quantizable distance; "
+                f"{distance!r} is not in {QUANTIZABLE}")
+        # Bumped only when the main segment's ROWS are replaced (build /
+        # compact) — tombstones bump _version but must not trigger a replica
+        # rebuild.
+        self._main_epoch = 0
         self._main_vecs = np.zeros((0, dim), np.float32)
         self._main_ids = np.zeros((0,), np.int32)
         self._main_live = np.zeros((0,), bool)
@@ -123,6 +166,7 @@ class RetrievalIndex:
         idx._main_live = np.ones(len(ids), bool)
         idx._loc = {int(i): ("main", r) for r, i in enumerate(ids)}
         idx._bump("main")
+        idx._main_epoch += 1
         return idx
 
     def _check_ids(self, ids, vectors) -> np.ndarray:
@@ -232,6 +276,7 @@ class RetrievalIndex:
         self._loc = {int(i): ("main", r) for r, i in enumerate(ids)}
         self._bump("main")
         self._bump("delta")
+        self._main_epoch += 1  # replica rebuild point (DESIGN.md §Quantized)
 
     def _bump(self, seg: str) -> None:
         self._version[seg] += 1
@@ -248,6 +293,15 @@ class RetrievalIndex:
                 self._dev[seg] = (jnp.asarray(vecs), jnp.asarray(live),
                                   jnp.asarray(ids))
                 self._dev_version[seg] = self._version[seg]
+        if self.scan_dtype != "float32" and self.mesh is None:
+            # Quantized replica of the main rows: keyed on the row EPOCH, not
+            # the version — tombstones must not trigger a requantize.  (The
+            # mesh path keeps its own PADDED replica, ``main_padded_q``.)
+            if self._dev_version.get("main_q") != self._main_epoch:
+                self._dev["main_q"] = quantize_rows(
+                    jnp.asarray(self._main_vecs), self.scan_dtype,
+                    distance=self.distance)
+                self._dev_version["main_q"] = self._main_epoch
         return self._dev
 
     def shape_signature(self, k: int) -> tuple:
@@ -299,11 +353,16 @@ class RetrievalIndex:
 
     def _main_candidates(self, q, k_out, dev):
         vecs, live, ids = dev["main"]
-        if self.mesh is None:
-            return _segment_candidates(
-                q, vecs, live, ids, k_out=k_out,
-                distance=self.distance, impl=self.impl)
-        return self._main_candidates_sharded(q, k_out, dev)
+        if self.mesh is not None:
+            return self._main_candidates_sharded(q, k_out, dev)
+        if self.scan_dtype != "float32":
+            return _segment_candidates_quantized(
+                q, vecs, dev["main_q"], live, ids, k_out=k_out,
+                overfetch=self.overfetch, distance=self.distance,
+                impl=self.impl)
+        return _segment_candidates(
+            q, vecs, live, ids, k_out=k_out,
+            distance=self.distance, impl=self.impl)
 
     def _main_candidates_sharded(self, q, k_out, dev):
         """Score main over the mesh: the paper's serving path + tombstones.
@@ -311,9 +370,15 @@ class RetrievalIndex:
         The tombstone mask shards over ``db_axis`` next to the database, so
         dead rows are +inf BEFORE the butterfly merge — wire payload stays
         k per row, identical to a tombstone-free index.
+
+        With a quantized ``scan_dtype`` each shard runs the two-stage scan +
+        rescore on its slice of the cached padded replica, and the butterfly
+        merge's value payload travels bf16 (``wire_dtype``) — the wire cost
+        shrinks with the scan (DESIGN.md §Quantized).
         """
         from repro.core import distributed as KD
 
+        quant = self.scan_dtype != "float32"
         _, _, ids = dev["main"]
         P_db = int(self.mesh.shape[self.db_axis])
         P_q = int(self.mesh.shape[self.query_axis])
@@ -324,7 +389,9 @@ class RetrievalIndex:
         if fn is None:
             fn = KD.make_query_sharded(
                 self.mesh, query_axis=self.query_axis, db_axis=self.db_axis,
-                k=k_out, distance=self.distance, impl=self.impl)
+                k=k_out, distance=self.distance, impl=self.impl,
+                scan_dtype=self.scan_dtype, overfetch=self.overfetch,
+                wire_dtype=jnp.bfloat16 if quant else None)
             self._sharded_cache[key] = fn
         # Padded main + mask are cached per main-segment version: re-padding
         # the whole corpus per query batch would be an O(n d) copy on the hot
@@ -336,14 +403,18 @@ class RetrievalIndex:
             )
             self._dev_version["main_padded"] = self._version["main"]
         db, live_p = self._dev["main_padded"]  # pad rows are dead
+        db_q = None
+        if quant:
+            # Padded replica keyed on the row epoch (pad rows quantize to
+            # zeros and are dead via ``live_p`` anyway).
+            if self._dev_version.get("main_padded_q") != (self._main_epoch, n_pad):
+                self._dev["main_padded_q"] = quantize_rows(
+                    db, self.scan_dtype, distance=self.distance)
+                self._dev_version["main_padded_q"] = (self._main_epoch, n_pad)
+            db_q = self._dev["main_padded_q"]
         m = q.shape[0]
         m_pad = m + (-m) % P_q
         qp = jnp.pad(q, ((0, m_pad - m), (0, 0)))
-        vals, idx = fn(qp, db, n, live_p)
+        vals, idx = fn(qp, db, n, live_p, db_q)
         vals, idx = vals[:m], idx[:m]
-        safe = jnp.clip(idx, 0, n - 1)
-        ok = idx >= 0
-        ext = jnp.where(ok, jnp.take(ids, safe, axis=0), jnp.int32(-1))
-        if vals.shape[-1] < k_out:
-            vals, ext = T.pad_topk(vals, ext, k_out)
-        return vals, ext
+        return _externalize(vals, idx, ids, k_out)

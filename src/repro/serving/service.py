@@ -34,6 +34,10 @@ class ServiceConfig:
     cache_capacity: int = 4096
     min_batch: int = 8
     max_batch: int = 1024
+    # Two-stage quantized scan of the main segment (DESIGN.md §Quantized):
+    # "float32" (exact) | "bfloat16" | "int8" + the candidate overfetch.
+    scan_dtype: str = "float32"
+    overfetch: int = 4
 
 
 class TwoTowerRetrievalService:
@@ -58,7 +62,7 @@ class TwoTowerRetrievalService:
         self._last_embed_cold = False
         self.index = RetrievalIndex(
             model_cfg.tower_mlp[-1], distance=svc.distance, impl=svc.impl,
-            mesh=mesh)
+            mesh=mesh, scan_dtype=svc.scan_dtype, overfetch=svc.overfetch)
         self.engine = QueryEngine(
             self.index,
             EngineConfig(k=svc.k, min_batch=svc.min_batch,
@@ -103,7 +107,8 @@ class TwoTowerRetrievalService:
         vecs = self._embed(self._item_tower, np.asarray(item_fields, np.int32))
         self.index = RetrievalIndex.build(
             item_ids, vecs, distance=self.svc.distance, impl=self.svc.impl,
-            mesh=self.index.mesh)
+            mesh=self.index.mesh, scan_dtype=self.svc.scan_dtype,
+            overfetch=self.svc.overfetch)
         self.engine.index = self.index
         return vecs
 

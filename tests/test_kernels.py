@@ -118,3 +118,71 @@ def test_fused_equals_unfused_pipeline():
     tiles = ops.pairwise_distance(x, y, distance="sqeuclidean", bm=64, bn=64, bd=32)
     v2, i2 = ops.stream_topk(tiles, 20)
     np.testing.assert_allclose(np.asarray(fused.distances), np.asarray(v2), atol=1e-5)
+
+
+@pytest.mark.parametrize("name", ["sqeuclidean", "neg_dot", "neg_cosine"])
+@pytest.mark.parametrize("scan_dtype", ["bfloat16", "int8"])
+def test_fused_knn_quantized_db_matches_dequantized_oracle(name, scan_dtype):
+    """Quantized-operand kernel == the dequantized-tile oracle.
+
+    The kernel's defined semantics (DESIGN.md §Quantized): the scanned value
+    is ``finalize(alpha * fx @ deq^T + hx + hy)`` with ``deq`` the
+    dequantized gy-space rows and ``hy`` the replica's stored rank-1 term —
+    the scale folding inside the epilogue must reproduce exactly that tile.
+    """
+    from repro.core.distances import dequantize_rows, get_distance, quantize_rows
+
+    x, y = _data(name, 100, 300, 48, 8)
+    qr = quantize_rows(y, scan_dtype, distance=name)
+    res = ops.fused_knn(x, qr, 9, distance=name, tile_m=64, tile_n=128, bd=16)
+    mf = get_distance(name).matmul_form
+    tile = (mf.alpha * np.asarray(mf.fx(x)) @ np.array(dequantize_rows(qr)).T
+            + np.asarray(mf.hx(x))[:, None] + np.asarray(qr.hy)[None, :])
+    want_v = np.sort(tile, axis=1)[:, :9]
+    np.testing.assert_allclose(np.asarray(res.distances), want_v,
+                               atol=2e-3, rtol=1e-3)
+    # indices reproduce their tile values
+    got = np.take_along_axis(tile, np.asarray(res.indices), axis=1)
+    np.testing.assert_allclose(got, want_v, atol=2e-3, rtol=1e-3)
+
+
+def test_fused_knn_quantized_respects_db_valid_and_live():
+    from repro.core.distances import quantize_rows
+
+    x, y = _data("sqeuclidean", 64, 64, 32, 9)
+    qr = quantize_rows(y, "int8")
+    res = ops.fused_knn(x, qr, 5, tile_m=64, tile_n=64, bd=32,
+                        db_valid=jnp.int32(10))
+    assert (np.asarray(res.indices) < 10).all()
+    live = jnp.arange(64) >= 32
+    res = ops.fused_knn(x, qr, 5, tile_m=64, tile_n=64, bd=32, db_live=live)
+    assert (np.asarray(res.indices) >= 32).all()
+
+
+@pytest.mark.parametrize("name", ["sqeuclidean", "neg_cosine", "kl"])
+@pytest.mark.parametrize("mkp", [(64, 16), (100, 40), (10, 3)])
+def test_rescore_topk_kernel_sweep(name, mkp):
+    """Pallas rescore == gather + reference distance + topk, per row."""
+    m, Kp = mkp
+    x, y = _data(name, m, 200, 40, 10)
+    g = np.random.default_rng(11)
+    cand = np.stack([g.choice(200, size=Kp, replace=False) for _ in range(m)])
+    cand[:, -1] = -1  # one empty slot per row
+    cand = jnp.asarray(cand, jnp.int32)
+    k = min(8, Kp)
+    res = ops.rescore_topk(x, y, cand, k, distance=name, bm=32, bd=8)
+    dm = np.asarray(ref.pairwise_distance_ref(x, y, distance=name))
+    want_v = []
+    for r in range(m):
+        cs = [c for c in np.asarray(cand)[r] if c >= 0]
+        want_v.append(np.sort(dm[r, cs])[:k])
+    want_v = np.stack([np.pad(w, (0, k - len(w)), constant_values=np.inf)
+                       for w in want_v])
+    np.testing.assert_allclose(np.asarray(res.distances), want_v,
+                               atol=3e-3, rtol=1e-3)
+    # returned indices reproduce the distances (and -1 marks +inf pads)
+    got = np.asarray(res.indices)
+    ok = got >= 0
+    np.testing.assert_allclose(dm[np.arange(m)[:, None], np.where(ok, got, 0)][ok],
+                               np.asarray(res.distances)[ok], atol=3e-3, rtol=1e-3)
+    assert np.isposinf(np.asarray(res.distances)[~ok]).all()
