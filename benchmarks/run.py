@@ -20,7 +20,7 @@ import sys
 import time
 
 
-SUITES = ("table1", "scaling", "kernels", "selection", "serving")
+SUITES = ("table1", "scaling", "kernels", "selection", "serving", "ivf")
 
 
 def run_suite(name: str, smoke: bool) -> None:
@@ -55,6 +55,13 @@ def run_suite(name: str, smoke: bool) -> None:
                          batches=4, churn=128)
         else:
             serving.main()
+    elif name == "ivf":
+        from benchmarks import serving
+        if smoke:
+            serving.ivf_sweep(corpus=2048, d=32, k=10, batch_sizes=(8, 64),
+                              batches=4)
+        else:
+            serving.ivf_sweep()
     else:
         raise SystemExit(f"unknown suite {name!r}; have {SUITES}")
 
@@ -78,6 +85,7 @@ def main() -> None:
     if args.json:
         from benchmarks import common
         payload = {
+            "meta": _run_metadata(),
             "suites": which,
             "smoke": bool(args.smoke),
             "total_wall_s": round(wall, 1),
@@ -86,6 +94,39 @@ def main() -> None:
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=1)
         print(f"# wrote {args.json} ({len(common.ROWS)} rows)", file=sys.stderr)
+
+
+def _run_metadata() -> dict:
+    """Provenance stamp for the BENCH artifact.
+
+    The CI bench-smoke job uploads one json per run; without the commit /
+    timestamp / backend the accumulating perf-trajectory points are not
+    attributable to anything (EXPERIMENTS.md).  Git lookups are best-effort:
+    an exported tarball still produces a valid artifact.
+    """
+    import datetime
+    import subprocess
+
+    from benchmarks.common import REPO
+
+    def git(*args: str) -> str | None:
+        try:
+            out = subprocess.run(["git", "-C", REPO, *args],
+                                 capture_output=True, text=True, timeout=10)
+            return out.stdout.strip() or None if out.returncode == 0 else None
+        except (OSError, subprocess.SubprocessError):
+            return None
+
+    import jax
+
+    return {
+        "git_sha": git("rev-parse", "HEAD"),
+        "git_branch": git("rev-parse", "--abbrev-ref", "HEAD"),
+        "timestamp_utc": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(timespec="seconds"),
+        "backend": jax.default_backend(),
+        "jax_version": jax.__version__,
+    }
 
 
 if __name__ == '__main__':

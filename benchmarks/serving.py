@@ -13,10 +13,15 @@ maps it as the "online retrieval" row).  Reports, in the standard
   * the precision sweep (DESIGN.md §Quantized): for each scan dtype, qps +
     p50/p99 AND recall@k against the fp32 exact baseline, next to the
     analytic HBM bytes-per-query model (``accounting.scan_bytes_per_query``)
-    so the bandwidth claim travels with the recall it buys.
+    so the bandwidth claim travels with the recall it buys;
+  * the IVF sweep (DESIGN.md §IVF, ``benchmarks.run ivf``): the cell-probed
+    index at the default ``(ncells=64, nprobe=8, overfetch=4)`` per scan
+    dtype — recall@k vs exact plus the modeled speedup vs the FLAT scan at
+    the same dtype (the sublinearity claim).
 
 CLI: ``python -m benchmarks.serving --scan-dtype {float32,bf16,int8}`` runs
-one dtype end-to-end (plus the fp32 baseline it needs for recall).
+one precision-sweep dtype end-to-end (plus the fp32 baseline it needs for
+recall); ``--ivf`` runs the IVF sweep instead.
 """
 from __future__ import annotations
 
@@ -41,7 +46,14 @@ def _recall_at_k(got_ids: np.ndarray, want_ids: np.ndarray) -> float:
 def sweep(tag: str, idx, k: int, d: int, batch_sizes, batches: int, rng,
           recall_vs: np.ndarray | None = None, queries=None,
           extra: str = ""):
-    """One qps/latency sweep; optionally scores recall vs a baseline."""
+    """One qps/latency sweep; optionally scores recall vs a baseline.
+
+    With a fixed ``queries`` set, each iteration slides a window of ``b``
+    rows through it and recall accumulates over EVERY batch — a small batch
+    size then still reports a full-set recall sample instead of one
+    b-query snapshot (which at b = 8 is dominated by whichever boundary
+    query lands in it).
+    """
     from repro.accounting import ServingMeter
     from repro.data.synthetic import clustered_vectors
     from repro.serving import EngineConfig, QueryEngine
@@ -50,17 +62,24 @@ def sweep(tag: str, idx, k: int, d: int, batch_sizes, batches: int, rng,
         meter = ServingMeter()
         eng = QueryEngine(idx, EngineConfig(k=k, min_batch=8, max_batch=1024),
                           meter=meter)
-        got = None
+        hits, slots = 0, 0
         for t in range(batches):
-            q = (queries if queries is not None else
-                 clustered_vectors(b, d, seed=int(rng.integers(1 << 30))))
-            r = eng.search(q[:b] if queries is not None else q)
-            got = np.asarray(r.ids)
+            if queries is not None:
+                start = (t * b) % max(1, len(queries) - b + 1)
+                q = queries[start : start + b]
+            else:
+                q = clustered_vectors(b, d, seed=int(rng.integers(1 << 30)))
+            r = eng.search(q)
+            if recall_vs is not None and queries is not None:
+                got = np.asarray(r.ids)
+                hits += _recall_at_k(got, recall_vs[start : start + b]) \
+                    * got.shape[0] * k
+                slots += got.shape[0] * k
         s = meter.summary()
         derived = (f"qps={s['qps']:.0f};p50_ms={s['p50_ms']:.2f};"
                    f"p99_ms={s['p99_ms']:.2f};batches={s['batches']}")
-        if recall_vs is not None and got is not None:
-            derived += f";recall@{k}={_recall_at_k(got, recall_vs[:len(got)]):.4f}"
+        if slots:
+            derived += f";recall@{k}={hits / slots:.4f}"
         if extra:
             derived += ";" + extra
         emit(f"serving_{tag}_b{b}",
@@ -96,6 +115,45 @@ def precision_sweep(corpus: int, d: int, k: int, batch_sizes, batches: int,
         extra = (f"hbm_bytes_per_q={bpq};x_fp32={fp32_bytes / bpq:.2f};"
                  f"overfetch={overfetch}")
         sweep(f"scan_{sd_c}", idx, k, d, batch_sizes, batches, rng,
+              recall_vs=exact_ids, queries=q, extra=extra)
+
+
+def ivf_sweep(corpus: int = 8192, d: int = 64, k: int = 10,
+              batch_sizes=(8, 64, 256), batches: int = 12,
+              ncells: int = 64, nprobe: int = 8, overfetch: int = 4,
+              scan_dtypes=("float32", "int8")):
+    """IVF cell-probed retrieval (DESIGN.md §IVF): qps / recall@k / bytes.
+
+    One row per scan dtype with the IVF index (``ivf_cells=ncells``,
+    probing ``nprobe``), each carrying recall@k against the exact fp32
+    flat-scan baseline plus the modeled HBM bytes/query and the speedup vs
+    the FLAT scan at the same dtype — the sublinearity claim and the recall
+    it buys travel together.
+    """
+    from repro import accounting
+    from repro.serving import RetrievalIndex
+
+    rng = np.random.default_rng(21)
+    from repro.data.synthetic import clustered_vectors
+
+    vecs = clustered_vectors(corpus, d, seed=13)
+    q = clustered_vectors(max(batch_sizes), d, seed=14)
+    base = RetrievalIndex.build(np.arange(corpus), vecs, impl="fused")
+    exact_ids = np.asarray(base.search(q, k).ids)
+
+    for sd in scan_dtypes:
+        idx = RetrievalIndex.build(
+            np.arange(corpus), vecs, impl="fused", scan_dtype=sd,
+            overfetch=overfetch, ivf_cells=ncells, nprobe=nprobe)
+        eff_cells = idx._effective_ncells()
+        bpq = accounting.scan_bytes_per_query(
+            corpus, d, scan_dtype=sd, k=k, overfetch=overfetch,
+            ncells=eff_cells, nprobe=nprobe)["total"]
+        flat = accounting.scan_bytes_per_query(
+            corpus, d, scan_dtype=sd, k=k, overfetch=overfetch)["total"]
+        extra = (f"hbm_bytes_per_q={bpq};x_flat={flat / bpq:.2f};"
+                 f"ncells={eff_cells};nprobe={nprobe};overfetch={overfetch}")
+        sweep(f"ivf_{sd}", idx, k, d, batch_sizes, batches, rng,
               recall_vs=exact_ids, queries=q, extra=extra)
 
 
@@ -141,14 +199,21 @@ if __name__ == "__main__":
                     choices=["float32", "fp32", "bf16", "bfloat16", "int8"],
                     help="run the precision sweep for ONE dtype "
                          "(default: the full serving suite, all dtypes)")
+    ap.add_argument("--ivf", action="store_true",
+                    help="run the IVF cell-probed sweep instead")
     ap.add_argument("--corpus", type=int, default=8192)
     ap.add_argument("--d", type=int, default=64)
     ap.add_argument("--k", type=int, default=10)
     ap.add_argument("--batches", type=int, default=12)
     ap.add_argument("--overfetch", type=int, default=4)
+    ap.add_argument("--ivf-cells", type=int, default=64)
+    ap.add_argument("--nprobe", type=int, default=8)
     a = ap.parse_args()
     print("name,us_per_call,derived")
-    if a.scan_dtype is not None:
+    if a.ivf:
+        ivf_sweep(a.corpus, a.d, a.k, (8, 64, 256), a.batches,
+                  ncells=a.ivf_cells, nprobe=a.nprobe, overfetch=a.overfetch)
+    elif a.scan_dtype is not None:
         precision_sweep(a.corpus, a.d, a.k, (8, 64, 256), a.batches,
                         (a.scan_dtype,), overfetch=a.overfetch)
     else:

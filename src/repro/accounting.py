@@ -13,8 +13,10 @@ first recorded batch after a (re)compile is tagged separately so steady-state
 numbers are not polluted by compilation (EXPERIMENTS.md §Serving).
 
 scan_bytes_per_query: the analytic HBM-traffic model of the two-stage
-quantized scan (DESIGN.md §Quantized) — what the precision-sweep benchmark
-reports next to measured qps so the bandwidth claim is auditable.
+quantized scan (DESIGN.md §Quantized) and its IVF cell-probed extension
+(``ncells``/``nprobe`` — DESIGN.md §IVF) — what the precision and IVF
+sweep benchmarks report next to measured qps so the bandwidth claims are
+auditable.
 """
 from __future__ import annotations
 
@@ -25,32 +27,51 @@ _SCAN_ITEMSIZE = {"float32": 4, "bfloat16": 2, "int8": 1}
 
 
 def scan_bytes_per_query(n_rows: int, d: int, *, scan_dtype: str = "float32",
-                         k: int = 10, overfetch: int = 4) -> dict:
+                         k: int = 10, overfetch: int = 4,
+                         ncells: int | None = None,
+                         nprobe: int | None = None) -> dict:
     """Analytic HBM bytes one query's corpus scan moves (model, not a probe).
 
     The scan is bandwidth-bound in the database stream (the paper's whole
     premise); per query it reads
-      * ``scan``    — the [n, d] replica at the scan dtype's width,
-      * ``epilogue``— the rank-1 terms: ``hy`` [n] fp32 always, plus the
-                      per-row int8 scales [n] fp32 when quantized to int8,
+      * ``centroids``— the IVF coarse-quantizer pass: the [ncells, d] fp32
+                      centroid table (zero for a flat scan),
+      * ``scan``    — the replica stream at the scan dtype's width: all
+                      [n, d] rows for a flat scan, or the ``nprobe`` probed
+                      cells' rows (nprobe · n/ncells — the average cell, the
+                      honest expectation under a balanced quantizer) for the
+                      IVF cell-probed scan (DESIGN.md §IVF),
+      * ``epilogue``— the rank-1 terms over the scanned rows: ``hy`` fp32
+                      always, plus the per-row int8 scales when quantized,
       * ``rescore`` — stage 2's gather of K' = overfetch * next_pow2(k)
-                      fp32 corpus rows (zero when the scan is fp32: there is
-                      no second stage).
+                      fp32 corpus rows (zero only for the flat fp32 scan,
+                      which has no second stage; IVF always rescores).
     Query-side operands and the [*, K] outputs are O(d + k) per query —
-    noise next to O(n d) — and are omitted, identically for every dtype.
+    noise next to the database stream — and are omitted, identically for
+    every configuration.
     """
     from repro.core.topk import next_pow2
 
     itemsize = _SCAN_ITEMSIZE[scan_dtype]
-    scan = n_rows * d * itemsize
-    epilogue = n_rows * 4 + (n_rows * 4 if scan_dtype == "int8" else 0)
-    rescore = 0 if scan_dtype == "float32" else min(
-        n_rows, overfetch * next_pow2(k)) * d * 4
+    ivf = ncells is not None and ncells > 0
+    centroids = ncells * d * 4 if ivf else 0
+    if ivf:
+        nprobe = min(ncells if nprobe is None else nprobe, ncells)
+        scanned_rows = min(n_rows, -(-n_rows // ncells) * nprobe)
+    else:
+        scanned_rows = n_rows
+    scan = scanned_rows * d * itemsize
+    epilogue = scanned_rows * 4 + (
+        scanned_rows * 4 if scan_dtype == "int8" else 0)
+    two_stage = ivf or scan_dtype != "float32"
+    rescore = (min(n_rows, overfetch * next_pow2(k)) * d * 4 if two_stage
+               else 0)
     return {
+        "centroids": centroids,
         "scan": scan,
         "epilogue": epilogue,
         "rescore": rescore,
-        "total": scan + epilogue + rescore,
+        "total": centroids + scan + epilogue + rescore,
     }
 
 

@@ -3,6 +3,8 @@
 Public API:
   knn_allpairs / knn_query      — single-device tiled solvers
   two_stage_query / rescore     — quantized scan + exact rescore (§Quantized)
+  ivf_query                     — cell-probed sublinear retrieval (§IVF)
+  ivf.build_ivf / IVFCells      — coarse quantizer + cell-packed layout
   distributed.knn_allpairs_*    — multi-device (shard_map) solvers
   distances.get_distance        — cumulative distance registry
   distances.quantize_rows       — bf16/int8 scan replicas (QuantizedRows)
@@ -16,8 +18,14 @@ from repro.core.distances import (  # noqa: F401
     is_symmetric,
     quantize_rows,
 )
+from repro.core.ivf import (  # noqa: F401
+    IVFCells,
+    build_ivf,
+    train_centroids,
+)
 from repro.core.knn import (  # noqa: F401
     KNNResult,
+    ivf_query,
     knn_allpairs,
     knn_query,
     rescore,

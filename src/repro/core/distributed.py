@@ -43,7 +43,13 @@ import numpy as np
 
 from repro.core import topk as T
 from repro.core.distances import QuantizedRows, get_distance, is_symmetric, quantize_rows
-from repro.core.knn import KNNResult, pairwise_tile, rescore, scan_width
+from repro.core.knn import (
+    KNNResult,
+    pairwise_tile,
+    quantized_scan,
+    rescore,
+    scan_width,
+)
 
 Array = jnp.ndarray
 
@@ -391,15 +397,14 @@ def query_sharded_shard(
                 db_valid=local_valid, db_live=db_live_local,
                 threshold_skip=threshold_skip).indices
         else:
-            from repro.core.distances import dequantize_rows
-
-            deq = dequantize_rows(db_q_local)
-            tile = pairwise_tile(q_local, deq, get_distance(distance))
-            col_ids = jnp.arange(n_loc)[None, :]
-            tile = jnp.where(col_ids >= local_valid, T.POS_INF, tile)
+            # Tiled jnp reference: scores the stored rows directly (scale in
+            # the epilogue) — never a dequantized [n_loc, d] fp32 copy.
+            live = jnp.arange(n_loc) < local_valid
             if db_live_local is not None:
-                tile = jnp.where(db_live_local[None, :], tile, T.POS_INF)
-            _, cand = T.tile_topk(tile, T.next_pow2(k_scan), 0)
+                live = jnp.logical_and(live, db_live_local)
+            cand = quantized_scan(
+                q_local, db_q_local, k_scan, distance=distance,
+                db_live=live, threshold_skip=threshold_skip).indices
         # Stage 2: exact fp32 rescore, still shard-local.
         vals, idx = rescore(q_local, db_local, cand, min(k, n_loc),
                             distance=distance,
@@ -433,6 +438,116 @@ def query_sharded_shard(
 
     # local -> global database indices
     idx = jnp.where(idx >= 0, idx + p * n_loc, -1)
+    vals, idx = tree_merge_topk(vals, idx, db_axis, wire_dtype=wire_dtype)
+    return vals[:, :k], idx[:, :k]
+
+
+def ivf_query_sharded_shard(
+    q_local: Array,
+    centroids: Array,
+    packed_local: Array,
+    row_of_slot_local: Array,
+    live_packed_local: Array | None = None,
+    packed_q_local: QuantizedRows | None = None,
+    *,
+    db_axis,
+    k: int,
+    nprobe: int,
+    cell_cap: int,
+    distance: str = "sqeuclidean",
+    impl: str = "fused",
+    scan_dtype: str = "float32",
+    overfetch: int = 4,
+    wire_dtype=None,
+    threshold_skip: bool | None = None,
+) -> tuple[Array, Array]:
+    """IVF serving path: centroids replicated, cell blocks row-sharded.
+
+    ``ncells % P == 0`` cells shard contiguously over ``db_axis`` (shard p
+    owns global cells [p·ncells/P, (p+1)·ncells/P) — the cell-packed layout
+    makes a shard boundary a cell boundary for free).  Each shard runs the
+    FULL pipeline locally before the butterfly merge (DESIGN.md §IVF):
+
+      1. the GLOBAL centroid shortlist (every shard computes the same
+         [m, nprobe] — centroids are replicated, the shortlist is tiny);
+      2. probes falling in this shard's cell range scan the local replica
+         slice (scalar-prefetch kernel or the jnp probe mask); a shard none
+         of whose cells were probed contributes only +inf slots;
+      3. exact local rescore against the fp32 packed slice, candidates
+         externalized through the local ``row_of_slot`` slice.
+
+    The butterfly payload stays K exact (value, GLOBAL corpus row) pairs per
+    query row — never the over-fetch width, and ``wire_dtype=bf16`` reuses
+    the quantized path's compressed wire (``tree_merge_topk``).
+    """
+    from repro.core import ivf as IVF
+
+    P = jax.lax.axis_size(db_axis)
+    p = jax.lax.axis_index(db_axis)
+    S_loc = packed_local.shape[0]
+    assert S_loc % cell_cap == 0, (S_loc, cell_cap)
+    ncells_loc = S_loc // cell_cap
+    ncells = ncells_loc * P
+    K = T.next_pow2(k)
+    k_loc = min(k, S_loc)
+
+    # 1. Global shortlist, then this shard's slice of the probe set.  Ids
+    # outside [0, ncells_loc) simply match no local cell below.
+    cells = IVF.probe_cells(q_local, centroids, min(nprobe, ncells),
+                            distance=distance, impl=impl)
+    local_cells = cells - p * ncells_loc
+
+    live = row_of_slot_local >= 0  # pad slots are dead by construction
+    if live_packed_local is not None:
+        live = jnp.logical_and(live, live_packed_local)
+
+    k_scan = scan_width(S_loc, k_loc, overfetch)
+    from repro.kernels._backend import resolve_interpret
+
+    # The scalar-prefetch kernel inside jit(shard_map) silently corrupts
+    # results under the Pallas INTERPRETER whenever its operands are
+    # device-varying (measured on the pinned toolchain: probed slots vanish
+    # from the merge; the flat fused_knn kernel under the same nesting is
+    # fine, so the defect is PrefetchScalarGridSpec-specific).  Off-TPU the
+    # sharded stage 1 therefore runs the jnp probe-mask reference — same
+    # candidates, predicated compute instead of pruned DMA; the kernel
+    # engages where it lowers through Mosaic (real TPU backends).  The
+    # LOCAL fused path (core.knn.ivf_query) uses the kernel everywhere.
+    if impl == "fused" and not resolve_interpret(None):
+        from repro.kernels import ops as kops
+
+        scan_db = packed_q_local
+        if scan_db is None:
+            scan_db = (packed_local if scan_dtype == "float32" else
+                       quantize_rows(packed_local, scan_dtype,
+                                     distance=distance))
+        m = q_local.shape[0]
+        bm = min(256, T.next_pow2(max(m, 8)))
+        cand = kops.ivf_scan_impl(
+            q_local, scan_db, local_cells, min(k_scan, cell_cap),
+            cell_cap=cell_cap, distance=distance, tile_m=bm,
+            packed_live=live, threshold_skip=threshold_skip).indices
+    else:
+        scan_q = packed_q_local
+        if scan_q is None:
+            scan_q = quantize_rows(packed_local, scan_dtype,
+                                   distance=distance)
+        probed = jnp.any(
+            local_cells[:, :, None] == jnp.arange(ncells_loc)[None, None, :],
+            axis=1)
+        cand = quantized_scan(
+            q_local, scan_q, k_scan, distance=distance, db_live=live,
+            probed=probed, cell_cap=cell_cap,
+            threshold_skip=threshold_skip).indices
+
+    # 3. Exact local rescore, then packed slot -> GLOBAL corpus row.
+    vals, idx = rescore(q_local, packed_local, cand, k_loc,
+                        distance=distance,
+                        impl=impl if impl == "fused" else "jnp")
+    safe = jnp.clip(idx, 0, S_loc - 1)
+    idx = jnp.where(idx >= 0, jnp.take(row_of_slot_local, safe), -1)
+    if vals.shape[1] < K:
+        vals, idx = T.pad_topk(vals, idx, K)
     vals, idx = tree_merge_topk(vals, idx, db_axis, wire_dtype=wire_dtype)
     return vals[:, :k], idx[:, :k]
 
@@ -634,3 +749,85 @@ def make_query_sharded(
         return KNNResult(v, i)
 
     return jax.jit(fn, static_argnames=("n_db_real",))
+
+
+def make_ivf_query_sharded(
+    mesh: jax.sharding.Mesh,
+    *,
+    query_axis: str,
+    db_axis: str,
+    k: int,
+    nprobe: int,
+    cell_cap: int,
+    distance: str = "sqeuclidean",
+    impl: str = "fused",
+    scan_dtype: str = "float32",
+    overfetch: int = 4,
+    wire_dtype=None,
+    threshold_skip: bool | None = None,
+):
+    """IVF serving-path kNN over ``mesh`` (see ``ivf_query_sharded_shard``).
+
+    fn(q [m, d], centroids [ncells, d], packed [S, d], row_of_slot [S],
+    live_packed [S] bool | None, packed_q QuantizedRows | None) -> KNNResult
+    with GLOBAL corpus-row indices.  ``q`` shards over ``query_axis``;
+    ``centroids`` replicate (the shortlist problem is tiny and every shard
+    needs the same global ranking); ``packed``/``row_of_slot``/``live_packed``
+    /``packed_q`` shard over ``db_axis`` — requires m % size(query_axis) == 0
+    and ncells % size(db_axis) == 0 (cell blocks never straddle shards).
+    """
+    q_axes = (query_axis,) if isinstance(query_axis, str) else tuple(query_axis)
+    assert db_axis not in q_axes, (
+        "queries must be replicated over db_axis (the butterfly merge runs "
+        f"across it); got query_axis={query_axis!r} == db_axis={db_axis!r}")
+    P_db = int(mesh.shape[db_axis])
+
+    def fn(q: Array, centroids: Array, packed: Array, row_of_slot: Array,
+           live_packed: Array | None = None,
+           packed_q: QuantizedRows | None = None) -> KNNResult:
+        S = packed.shape[0]
+        assert S % (P_db * cell_cap) == 0, (
+            f"ncells = {S // cell_cap} must divide over db_axis ({P_db})")
+        q_spec = jax.sharding.PartitionSpec(query_axis)
+        rep_spec = jax.sharding.PartitionSpec()  # centroids: replicated
+        db_spec = jax.sharding.PartitionSpec(db_axis)
+        row_spec = jax.sharding.PartitionSpec(db_axis)
+        live_spec = None if live_packed is None else row_spec
+        dbq_spec = None if packed_q is None else QuantizedRows(
+            db_spec, None if packed_q.scale is None else row_spec, row_spec)
+
+        @functools.partial(
+            jax.shard_map,
+            mesh=mesh,
+            in_specs=(q_spec, rep_spec, db_spec, row_spec, live_spec,
+                      dbq_spec),
+            out_specs=(q_spec, q_spec),
+            # The butterfly merge leaves results replicated over db_axis; vma
+            # tracking cannot infer replication through ppermute chains.
+            check_vma=False,
+        )
+        def body(q_local, cent, packed_local, ros_local, live_local,
+                 packed_q_local):
+            return ivf_query_sharded_shard(
+                q_local,
+                cent,
+                packed_local,
+                ros_local,
+                live_local,
+                packed_q_local,
+                db_axis=db_axis,
+                k=k,
+                nprobe=nprobe,
+                cell_cap=cell_cap,
+                distance=distance,
+                impl=impl,
+                scan_dtype=scan_dtype,
+                overfetch=overfetch,
+                wire_dtype=wire_dtype,
+                threshold_skip=threshold_skip,
+            )
+
+        v, i = body(q, centroids, packed, row_of_slot, live_packed, packed_q)
+        return KNNResult(v, i)
+
+    return jax.jit(fn)

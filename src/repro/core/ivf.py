@@ -1,0 +1,280 @@
+"""IVF coarse quantizer: cell-probed retrieval (DESIGN.md §IVF).
+
+The paper's scan — and PR 2's quantized replica of it — streams the FULL
+database past every query: O(n) bytes per query with a smaller constant.
+The production-scale move (Johnson et al., *Billion-scale similarity search
+with GPUs*, PAPERS.md) is a coarse quantizer: partition the corpus into
+``ncells`` Voronoi cells around k-means centroids, probe only the ``nprobe``
+cells nearest each query, and rescore the survivors exactly.  Scan bytes per
+query drop from O(n) to O(ncells · d + n · nprobe / ncells) — sublinear in
+the corpus for fixed cell geometry.  Composed with the int8 replica this is
+the IVFADC recipe.
+
+Three pieces live here; the scan kernel is ``kernels/ivf_scan.py`` and the
+query pipeline is ``core.knn.ivf_query``:
+
+* **On-device Lloyd k-means** (``train_centroids``) — the assignment step IS
+  a kNN problem (k = 1 over the centroid set), so it reuses the repo's own
+  solver (``knn_query``, optionally the fused Pallas kernel); the update
+  step is a ``segment_sum`` mean.  Clustering runs in MXU ``gy`` space
+  (identity for sqeuclidean/neg_dot, row-normalization for neg_cosine) — the
+  same geometry the scan scores in, so a cell boundary means the same thing
+  to the quantizer and to the kernel.
+* **Cell-packed layout** (``pack_cells``) — corpus rows are permuted so each
+  cell occupies one contiguous, tile-aligned block of ``cell_cap`` rows
+  (``cell_cap`` = pow2 ≥ the largest cell, ≥ the Pallas lane tile).  A cell
+  is then exactly one scan-kernel block: the grid can skip a cell by never
+  naming its block, which turns probing into *zero HBM traffic* for
+  unprobed cells rather than predicated-but-streamed compute.  The
+  permutation is carried both ways: ``slot_of_row`` (row → packed slot) and
+  ``row_of_slot`` (packed slot → row, −1 on pad slots) externalize scan
+  results back to corpus indices.
+* **Per-query-tile probe lists** (``tile_probe_lists``) — the kernel's grid
+  is shared by a tile of ``bm`` queries, so the tile scans the UNION of its
+  queries' probed cells: a fixed-width, ascending list padded by repeating
+  the last real cell.  Duplicate slots are skipped inside the kernel (and,
+  with the padded duplicates adjacent, their block DMA is elided by the
+  pipeline when the block index does not change), so HBM traffic tracks the
+  true union size while every shape stays static.  Each query scans a
+  SUPERSET of its own ``nprobe`` cells — extra cells can only improve
+  recall, and at ``nprobe = ncells`` the scan is exhaustive, which is the
+  exactness escape hatch ``tests/test_ivf.py`` pins.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import topk as T
+from repro.core.distances import QUANTIZABLE, get_distance
+
+Array = jnp.ndarray
+
+# Minimum rows per cell block: the TPU lane tile (and a comfortable floor for
+# the scan kernel's K-buffer constraint K <= cell_cap).
+MIN_CELL_CAP = 128
+
+
+class IVFCells(NamedTuple):
+    """A trained coarse quantizer + the cell-packed corpus layout.
+
+    All fields are arrays (jit-friendly pytree, like ``QuantizedRows``); the
+    static geometry is derivable from shapes: ``ncells = centroids.shape[0]``
+    and ``cell_cap = packed.shape[0] // ncells``.
+
+    centroids:   [ncells, d] fp32 cell centers in MXU ``gy`` space.
+    packed:      [ncells * cell_cap, d] fp32 corpus rows, cell-packed: cell c
+                 owns slots [c*cell_cap, (c+1)*cell_cap); slots past the
+                 cell's count are zero pad.
+    row_of_slot: [ncells * cell_cap] int32 — original corpus row of each
+                 packed slot, −1 on pad slots (the inverse permutation that
+                 externalizes scan indices).
+    slot_of_row: [n] int32 — packed slot of each original row (the forward
+                 permutation; round-trips with ``row_of_slot``, tested).
+    counts:      [ncells] int32 live rows per cell.
+    """
+
+    centroids: Array
+    packed: Array
+    row_of_slot: Array
+    slot_of_row: Array
+    counts: Array
+
+    @property
+    def ncells(self) -> int:
+        return self.centroids.shape[0]
+
+    @property
+    def cell_cap(self) -> int:
+        return self.packed.shape[0] // self.centroids.shape[0]
+
+
+def _gy_rows(x: Array, distance: str) -> Array:
+    dist = get_distance(distance)
+    if distance not in QUANTIZABLE:
+        raise ValueError(
+            f"distance {distance!r} has no IVF form (needs a row-local gy "
+            f"map); have {QUANTIZABLE}")
+    return dist.matmul_form.gy(jnp.asarray(x, jnp.float32)).astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("ncells", "iters", "impl",
+                                             "distance"))
+def train_centroids(
+    x: Array,
+    ncells: int,
+    *,
+    distance: str = "sqeuclidean",
+    iters: int = 10,
+    seed: int = 0,
+    impl: str = "jnp",
+) -> tuple[Array, Array]:
+    """On-device Lloyd k-means over ``x`` [n, d] in gy space.
+
+    Returns (centroids [ncells, d], assign [n] int32).  The assignment step
+    reuses the repo's kNN solver — k = 1 against the centroid set — so the
+    fused Pallas kernel trains the quantizer that later prunes it.  Empty
+    cells keep their previous centroid (deterministic, no resampling: a
+    replica/quantizer must be reproducible across rebuilds, same policy as
+    ``quantize_rows``).
+    """
+    from repro.core.knn import knn_query
+
+    n = x.shape[0]
+    assert 1 <= ncells <= n, (ncells, n)
+    g = _gy_rows(x, distance)
+    # Deterministic seeding: k-means++ buys little on the embedding corpora
+    # this serves; distinct random rows are the standard cheap init.
+    perm = jax.random.permutation(jax.random.PRNGKey(seed), n)
+    cent = g[perm[:ncells]]
+
+    def assign_to(cent):
+        # Lloyd assignment == 1-NN over centroids, in gy space where the
+        # scan scores; sqeuclidean there is the Voronoi partition.
+        return knn_query(g, cent, 1, distance="sqeuclidean",
+                         impl=impl).indices[:, 0]
+
+    def step(cent, _):
+        a = assign_to(cent)
+        sums = jax.ops.segment_sum(g, a, num_segments=ncells)
+        cnt = jax.ops.segment_sum(jnp.ones((n,), jnp.float32), a,
+                                  num_segments=ncells)
+        cent = jnp.where(cnt[:, None] > 0, sums / jnp.maximum(cnt[:, None], 1.0),
+                         cent)
+        return cent, None
+
+    cent, _ = jax.lax.scan(step, cent, None, length=iters)
+    return cent, assign_to(cent).astype(jnp.int32)
+
+
+def pack_cells(
+    x,
+    centroids,
+    assign,
+    *,
+    cell_cap: int | None = None,
+) -> IVFCells:
+    """Permute corpus rows into the cell-packed, tile-aligned layout.
+
+    Host-side (numpy) build step — packing happens at index build/compact
+    time, never on the query path.  ``cell_cap`` defaults to
+    ``next_pow2(max cell count)`` floored at ``MIN_CELL_CAP``; pow2 keeps the
+    scan kernel's K-buffer constraint (``cell_cap % K == 0``, quotient pow2)
+    satisfied for every pow2 fetch width K ≤ cell_cap.
+    """
+    x = np.asarray(x, np.float32)
+    centroids = np.asarray(centroids, np.float32)
+    assign = np.asarray(assign, np.int64)
+    n, d = x.shape
+    ncells = centroids.shape[0]
+    counts = np.bincount(assign, minlength=ncells).astype(np.int32)
+    cap = T.next_pow2(max(int(counts.max(initial=1)), MIN_CELL_CAP))
+    if cell_cap is not None:
+        assert cell_cap >= counts.max(initial=0), (cell_cap, counts.max())
+        assert cell_cap & (cell_cap - 1) == 0, cell_cap
+        cap = int(cell_cap)
+    # rank of each row within its cell (stable: packed order preserves
+    # original relative order inside a cell)
+    order = np.argsort(assign, kind="stable")
+    rank = np.empty(n, np.int64)
+    starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    rank[order] = np.arange(n) - np.repeat(starts, counts)
+    slot_of_row = (assign * cap + rank).astype(np.int32)
+    packed = np.zeros((ncells * cap, d), np.float32)
+    row_of_slot = np.full(ncells * cap, -1, np.int32)
+    packed[slot_of_row] = x
+    row_of_slot[slot_of_row] = np.arange(n, dtype=np.int32)
+    return IVFCells(
+        centroids=jnp.asarray(centroids),
+        packed=jnp.asarray(packed),
+        row_of_slot=jnp.asarray(row_of_slot),
+        slot_of_row=jnp.asarray(slot_of_row),
+        counts=jnp.asarray(counts),
+    )
+
+
+def build_ivf(
+    x,
+    ncells: int,
+    *,
+    distance: str = "sqeuclidean",
+    iters: int = 10,
+    seed: int = 0,
+    impl: str = "jnp",
+    cell_cap: int | None = None,
+) -> IVFCells:
+    """Train the coarse quantizer and pack the corpus: the build-time entry."""
+    cent, assign = train_centroids(
+        jnp.asarray(x, jnp.float32), ncells, distance=distance, iters=iters,
+        seed=seed, impl=impl)
+    return pack_cells(x, cent, assign, cell_cap=cell_cap)
+
+
+def packed_live(ivf: IVFCells, db_live: Array | None = None) -> Array:
+    """Bool [ncells * cell_cap] live mask in packed-slot order.
+
+    Pad slots are dead by construction; ``db_live`` (optional [n] bool, the
+    serving index's tombstones in ORIGINAL row order) rides along through the
+    permutation — a tombstone flips a mask bit, never touches the packing.
+    """
+    alive = ivf.row_of_slot >= 0
+    if db_live is None:
+        return alive
+    safe = jnp.clip(ivf.row_of_slot, 0, db_live.shape[0] - 1)
+    return jnp.logical_and(alive, jnp.take(db_live, safe))
+
+
+def probe_cells(
+    queries: Array,
+    centroids: Array,
+    nprobe: int,
+    *,
+    distance: str = "sqeuclidean",
+    impl: str = "jnp",
+) -> Array:
+    """Per-query centroid shortlist: the ``nprobe`` nearest cells [m, nprobe].
+
+    One more kNN problem (the paper's solver over [ncells, d]) — probed with
+    the INDEX distance so an inner-product index probes by inner product
+    (faiss's convention for IP IVF over L2-trained centroids).
+    """
+    from repro.core.knn import knn_query
+
+    nprobe = min(nprobe, centroids.shape[0])
+    return knn_query(queries, centroids, nprobe, distance=distance,
+                     impl=impl).indices
+
+
+def tile_probe_lists(cells: Array, ncells: int, bm: int) -> Array:
+    """Per-query-tile union probe lists [m/bm, W], W = min(ncells, bm·nprobe).
+
+    For each tile of ``bm`` queries: the distinct probed cells in ascending
+    order, padded out to W by REPEATING the last real cell.  Sorted-with-
+    adjacent-duplicates is load-bearing: the scan kernel skips a slot equal
+    to its predecessor, and the grid pipeline only issues a new block DMA
+    when the (data-dependent) block index changes — so padding costs neither
+    compute nor bandwidth beyond the true union.
+
+    ``cells`` is [m, nprobe] with m % bm == 0 (callers pad queries first;
+    pad-query probes are real cells and merely widen the union).
+    """
+    m, nprobe = cells.shape
+    assert m % bm == 0, (m, bm)
+    nt = m // bm
+    W = min(ncells, bm * nprobe)
+    t = cells.reshape(nt, bm * nprobe)
+    present = jnp.any(t[:, :, None] == jnp.arange(ncells)[None, None, :],
+                      axis=1)  # [nt, ncells]
+    # Sort key: present cells first (ascending id), absent cells after.
+    key = jnp.where(present, jnp.arange(ncells)[None, :],
+                    ncells + jnp.arange(ncells)[None, :])
+    order = jnp.argsort(key, axis=1)[:, :W].astype(jnp.int32)
+    n_present = jnp.sum(present, axis=1).astype(jnp.int32)  # >= 1 always
+    last = jnp.take_along_axis(
+        order, jnp.clip(n_present[:, None] - 1, 0, W - 1), axis=1)
+    slot_is_real = jnp.arange(W)[None, :] < n_present[:, None]
+    return jnp.where(slot_is_real, order, last)

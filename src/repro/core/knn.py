@@ -32,7 +32,6 @@ from repro.core import topk as T
 from repro.core.distances import (
     Distance,
     QuantizedRows,
-    dequantize_rows,
     get_distance,
     matmul_finalize,
 )
@@ -332,6 +331,100 @@ def rescore(
     return KNNResult(vals, idx)
 
 
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "distance", "tile_m", "tile_n", "threshold_skip"),
+)
+def quantized_scan(
+    queries: Array,
+    db_q: QuantizedRows,
+    k: int,
+    *,
+    distance: str = "sqeuclidean",
+    tile_m: int = 256,
+    tile_n: int = 1024,
+    threshold_skip: bool | None = None,
+    db_live: Array | None = None,
+    probed: Array | None = None,
+    cell_cap: int | None = None,
+) -> KNNResult:
+    """Tiled jnp scan of a ``QuantizedRows`` replica — stage 1 reference.
+
+    The XLA counterpart of the fused kernel's quantized path: per column
+    tile, the stored-dtype rows upcast to fp32 and the per-row int8 scale
+    folds into the rank-1 epilogue (``finalize(alpha·(fx@dataᵀ)·scale + hx +
+    hy)``).  The replica is NEVER dequantized wholesale — the only fp32
+    database-shaped arrays are [tile_n, d] per-tile upcasts, so the
+    compressed replica's memory win survives on the jnp path (the original
+    implementation materialized a full ``dequantize_rows`` copy; pinned by
+    the jaxpr peak-shape test in tests/test_quantized.py).
+
+    ``db_live``: [n] bool row mask (tombstones).  ``probed``/``cell_cap``:
+    optional per-QUERY cell mask [m, ncells] for the IVF jnp path — a column
+    of cell ``c`` is masked +inf for queries that did not probe ``c``
+    (the ``db_live``-style fallback when the scalar-prefetch kernel is not
+    in play; cells here cost predicated compute, not zero DMA).
+    """
+    threshold_skip = T.resolve_threshold_skip(threshold_skip, pallas=False)
+    dist = get_distance(distance)
+    mf = dist.matmul_form
+    assert mf is not None, f"{distance} has no MXU form"
+    fin = matmul_finalize(dist)
+    m_real, d = queries.shape
+    n_real = db_q.data.shape[0]
+    k = min(k, n_real)
+
+    fx = _pad_rows(mf.fx(queries).astype(jnp.float32), tile_m)
+    hx = _pad_rows(mf.hx(queries).astype(jnp.float32)[:, None], tile_m)
+    # Dead rows (pad, tombstones) die through the hy epilogue term — one
+    # [n] where() instead of per-tile masks, same idiom as the kernels.
+    hy = db_q.hy
+    if db_live is not None:
+        hy = jnp.where(db_live, hy, T.POS_INF)
+    pad_n = (-n_real) % tile_n
+    data = jnp.pad(db_q.data, ((0, pad_n), (0, 0)))
+    hy = jnp.pad(hy, (0, pad_n), constant_values=T.POS_INF)[None, :]
+    scale = (None if db_q.scale is None
+             else jnp.pad(db_q.scale, (0, pad_n), constant_values=1.0)[None, :])
+    if probed is not None:
+        assert cell_cap is not None
+        probed = _pad_rows(probed, tile_m)
+
+    n_row_tiles = fx.shape[0] // tile_m
+    n_col_tiles = data.shape[0] // tile_n
+
+    def row_block(_, r):
+        row_off = r * tile_m
+        fxt = jax.lax.dynamic_slice(fx, (row_off, 0), (tile_m, d))
+        hxt = jax.lax.dynamic_slice(hx, (row_off, 0), (tile_m, 1))
+        pbt = (None if probed is None else jax.lax.dynamic_slice(
+            probed, (row_off, 0), (tile_m, probed.shape[1])))
+        run = T.init_running(tile_m, k)
+
+        def col_step(c, run):
+            col_off = c * tile_n
+            dt = jax.lax.dynamic_slice(data, (col_off, 0), (tile_n, d))
+            dots = fxt @ dt.astype(jnp.float32).T  # per-tile upcast only
+            t = mf.alpha * dots
+            if scale is not None:
+                t = t * jax.lax.dynamic_slice(scale, (0, col_off), (1, tile_n))
+            hyt = jax.lax.dynamic_slice(hy, (0, col_off), (1, tile_n))
+            tile = fin(t + hxt + hyt)
+            if pbt is not None:
+                cell_ids = (col_off + jnp.arange(tile_n)) // cell_cap
+                cell_ids = jnp.clip(cell_ids, 0, pbt.shape[1] - 1)
+                tile = jnp.where(jnp.take(pbt, cell_ids, axis=1), tile,
+                                 T.POS_INF)
+            return T.update_running(*run, tile, col_off,
+                                    threshold_skip=threshold_skip)
+
+        run = jax.lax.fori_loop(0, n_col_tiles, col_step, run)
+        return None, T.finalize_topk(*run, k)
+
+    _, (vals, idx) = jax.lax.scan(row_block, None, jnp.arange(n_row_tiles))
+    return KNNResult(vals.reshape(-1, k)[:m_real], idx.reshape(-1, k)[:m_real])
+
+
 def scan_width(n: int, k: int, overfetch: int) -> int:
     """Candidate fetch width K' of the quantized scan (overfetch math).
 
@@ -370,7 +463,9 @@ def two_stage_query(
     top-k OF THE CANDIDATE SET.  With a float32 replica the candidate set
     provably contains the true top-k, so the result is exact; quantized
     replicas trade recall for a 2x/4x smaller database stream
-    (DESIGN.md §Quantized).
+    (DESIGN.md §Quantized).  ``impl="fused"`` scans with the Pallas kernel;
+    anything else uses the tiled jnp reference (``quantized_scan`` — scores
+    the stored rows directly, never a dequantized corpus copy).
     """
     n = database.shape[0]
     k_scan = scan_width(n, k, overfetch)
@@ -383,8 +478,92 @@ def two_stage_query(
             queries, db_q, k_scan, distance=distance, tile_m=bm,
             db_live=db_live, threshold_skip=threshold_skip).indices
     else:
-        cand = knn_query(
-            queries, dequantize_rows(db_q), k_scan, distance=distance,
-            impl=impl, db_live=db_live, threshold_skip=threshold_skip).indices
+        cand = quantized_scan(
+            queries, db_q, k_scan, distance=distance,
+            db_live=db_live, threshold_skip=threshold_skip).indices
     return rescore(queries, database, cand, min(k, n), distance=distance,
                    impl=impl)
+
+
+# ---------------------------------------------------------------------------
+# IVF cell-probed retrieval: coarse quantizer + pruned scan + exact rescore
+# (DESIGN.md §IVF).
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "nprobe", "distance", "impl", "overfetch",
+                     "threshold_skip"),
+)
+def ivf_query(
+    queries: Array,
+    database: Array,
+    ivf,
+    k: int,
+    *,
+    nprobe: int = 8,
+    distance: str = "sqeuclidean",
+    impl: str = "jnp",
+    overfetch: int = 4,
+    threshold_skip: bool | None = None,
+    db_live: Array | None = None,
+    packed_q: QuantizedRows | None = None,
+) -> KNNResult:
+    """Cell-probed kNN: centroid shortlist → pruned scan → exact rescore.
+
+    ``ivf`` is a trained ``core.ivf.IVFCells`` over ``database``; the
+    pipeline (DESIGN.md §IVF) is
+
+      1. shortlist: ``nprobe`` nearest centroids per query — one more kNN
+         problem over [ncells, d], solved by the repo's own solver;
+      2. pruned scan: the cell-packed replica (``packed_q`` if given, else
+         the fp32 packed rows) is scanned ONLY in probed cells for
+         K' = scan_width(n, k, overfetch) candidates.  ``impl="fused"`` uses
+         the scalar-prefetch Pallas kernel — unprobed cell blocks are never
+         DMA'd, each query tile scanning the union of its queries' probes;
+         other impls use the ``quantized_scan`` jnp reference with a
+         per-query probe mask (``db_live``-style: predicated, not pruned);
+      3. rescore: candidates externalize through ``row_of_slot`` and
+         re-rank exactly against the fp32 corpus (``rescore``).
+
+    ``nprobe = ncells`` probes everything — with the default fp32 packed
+    replica the result is identical to ``knn_query`` (the exactness escape
+    hatch, tested).  ``db_live`` is the [n] tombstone mask in ORIGINAL row
+    order; it rides through the packing permutation, never retraining it.
+    """
+    from repro.core import ivf as IVF
+
+    n = database.shape[0]
+    k = min(k, n)
+    ncells, cap = ivf.ncells, ivf.cell_cap
+    nprobe = min(nprobe, ncells)
+    cells = IVF.probe_cells(queries, ivf.centroids, nprobe,
+                            distance=distance, impl=impl)
+    live_p = IVF.packed_live(ivf, db_live)
+    k_scan = scan_width(n, k, overfetch)
+    if impl == "fused":
+        from repro.kernels import ops as kops
+
+        # The kernel's per-tile fetch width is bounded by the cell block.
+        assert T.next_pow2(k) <= cap, (k, cap)
+        cand = kops.ivf_scan(
+            queries, ivf.packed if packed_q is None else packed_q, cells,
+            min(k_scan, cap), cell_cap=cap, distance=distance,
+            packed_live=live_p, threshold_skip=threshold_skip).indices
+    else:
+        scan_q = packed_q
+        if scan_q is None:
+            from repro.core.distances import quantize_rows
+
+            scan_q = quantize_rows(ivf.packed, "float32", distance=distance)
+        probed = jnp.any(
+            cells[:, :, None] == jnp.arange(ncells)[None, None, :], axis=1)
+        cand = quantized_scan(
+            queries, scan_q, k_scan, distance=distance, db_live=live_p,
+            probed=probed, cell_cap=cap,
+            threshold_skip=threshold_skip).indices
+    safe = jnp.clip(cand, 0, ivf.row_of_slot.shape[0] - 1)
+    rows = jnp.where(cand >= 0, jnp.take(ivf.row_of_slot, safe), -1)
+    return rescore(queries, database, rows, k, distance=distance,
+                   impl="fused" if impl == "fused" else "jnp")

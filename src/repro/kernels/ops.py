@@ -21,6 +21,7 @@ from repro.core.distances import (
     matmul_finalize,
 )
 from repro.kernels import fused_knn as _fused
+from repro.kernels import ivf_scan as _ivf
 from repro.kernels import pairwise_distance as _pd
 from repro.kernels import rescore as _rs
 from repro.kernels import stream_topk as _st
@@ -214,6 +215,106 @@ def fused_knn(
         interpret=interpret,
     )
     return KNNResult(vals[:m, :k], idx[:m, :k])
+
+
+def ivf_scan_impl(
+    q,
+    db,
+    cells,
+    k: int,
+    *,
+    cell_cap: int,
+    distance: str = "sqeuclidean",
+    tile_m: int = 256,
+    bd: int = 128,
+    packed_live=None,
+    threshold_skip: bool | None = None,
+    interpret: bool | None = None,
+):
+    """Cell-probed kNN scan of a cell-packed corpus; returns KNNResult.
+
+    ``db`` is the cell-packed [S, d] fp32 array (``core.ivf.IVFCells.packed``)
+    or its ``QuantizedRows`` replica (already gy-mapped); ``cells`` [m,
+    nprobe] int32 is each query's probed-cell shortlist — the wrapper builds
+    the per-query-tile union lists (``core.ivf.tile_probe_lists``) that the
+    scalar-prefetch kernel's index map consumes, so only probed cell blocks
+    are ever DMA'd (kernels/ivf_scan.py).
+
+    ``packed_live``: optional traced bool [S] mask in PACKED slot order
+    (pad slots + tombstones — ``core.ivf.packed_live``); dead slots get +inf
+    via the rank-1 ``hy`` epilogue, same idiom as ``fused_knn``'s
+    ``db_live``.  Indices are PACKED slots (map back via ``row_of_slot``).
+
+    This impl is deliberately un-jitted for shard_map bodies: under the
+    Pallas INTERPRETER, a scalar-prefetch ``pallas_call`` nested in
+    jit(shard_map) with device-varying operands silently corrupts the
+    grid's revisiting state (pinned-toolchain defect — flat ``fused_knn``
+    under the same nesting is fine).  The sharded IVF path therefore only
+    calls this on real TPU backends and falls back to the jnp probe-mask
+    scan elsewhere (``core.distributed.ivf_query_sharded_shard``);
+    ``ivf_scan`` below is the jitted entry for local callers, where the
+    kernel is correct under the interpreter and tested.
+    """
+    from repro.core.ivf import tile_probe_lists
+    from repro.core.knn import KNNResult
+
+    interpret = resolve_interpret(interpret)
+    quantized = isinstance(db, QuantizedRows)
+    m = q.shape[0]
+    S = db.data.shape[0] if quantized else db.shape[0]
+    assert S % cell_cap == 0, (S, cell_cap)
+    ncells = S // cell_cap
+    K = T.next_pow2(k)
+    assert K <= cell_cap, (
+        f"fetch width K={K} exceeds the cell block ({cell_cap}); lower k or "
+        "rebuild with a larger cell_cap")
+    if quantized:
+        dist = get_distance(distance)
+        mf = dist.matmul_form
+        assert mf is not None, f"{distance} has no MXU form"
+        fx = mf.fx(q).astype(jnp.float32)
+        hx = mf.hx(q).astype(jnp.float32)[:, None]
+        gy = db.data  # keep the storage dtype: the kernel upcasts in VMEM
+        hy = db.hy.astype(jnp.float32)[None, :]
+        gs = None if db.scale is None else db.scale.astype(jnp.float32)[None, :]
+    else:
+        fx, gy, hx, hy, _ = _mxu_operands(q, db, distance)
+        gs = None
+    if packed_live is not None:
+        hy = jnp.where(packed_live[None, :], hy, T.POS_INF)
+    tile_m = min(tile_m, T.next_pow2(max(m, 8)))
+    fx = _pad_axis(_pad_axis(fx, tile_m, 0), bd, 1)
+    gy = _pad_axis(gy, bd, 1)
+    hx = _pad_axis(hx, tile_m, 0)
+    # Pad queries replicate the last row's probes: real cells, wider unions.
+    pad = fx.shape[0] - m
+    if pad:
+        cells = jnp.concatenate([cells, jnp.broadcast_to(
+            cells[-1:], (pad, cells.shape[1]))], axis=0)
+    probes = tile_probe_lists(cells, ncells, tile_m)
+    vals, idx = _ivf.ivf_scan_pallas(
+        probes,
+        fx,
+        gy,
+        hx,
+        hy,
+        k,
+        cell_cap=cell_cap,
+        gy_scale=gs,
+        distance=distance,
+        bm=tile_m,
+        bd=bd,
+        threshold_skip=threshold_skip,
+        interpret=interpret,
+    )
+    return KNNResult(vals[:m, :k], idx[:m, :k])
+
+
+ivf_scan = functools.partial(
+    jax.jit,
+    static_argnames=("k", "distance", "cell_cap", "tile_m", "bd",
+                     "threshold_skip", "interpret"),
+)(ivf_scan_impl)
 
 
 @functools.partial(

@@ -17,6 +17,11 @@ Flags (see README.md "CLI reference"):
   --scan-dtype {float32,bf16,int8}  two-stage quantized main-segment scan
                     (DESIGN.md §Quantized; float32 = exact, the default)
   --overfetch O     scan candidate multiple for the quantized path
+  --ivf-cells C     IVF cell-probed main-segment scan: train C k-means cells
+                    and probe only the nearest per query (DESIGN.md §IVF;
+                    0 = flat scan, the default)
+  --nprobe P        cells probed per query (>= C probes everything = exact
+                    with a float32 scan)
   --churn C         items upserted into the delta segment per batch (0 = off)
   --compact-every E compact() after every E batches (0 = never)
   --repeat-frac F   fraction of each batch drawn from repeat users (cache hits)
@@ -40,6 +45,10 @@ def main():
     ap.add_argument("--scan-dtype", default="float32",
                     choices=("float32", "fp32", "bf16", "bfloat16", "int8"))
     ap.add_argument("--overfetch", type=int, default=4)
+    ap.add_argument("--ivf-cells", type=int, default=0,
+                    help="IVF cells for the main-segment scan (0 = flat)")
+    ap.add_argument("--nprobe", type=int, default=8,
+                    help="IVF cells probed per query")
     ap.add_argument("--churn", type=int, default=0,
                     help="items upserted into the delta per batch")
     ap.add_argument("--compact-every", type=int, default=0)
@@ -70,7 +79,8 @@ def main():
     defaults = serving_defaults()
     defaults.update(k=args.k, impl=args.impl, cache_capacity=args.cache,
                     max_batch=next_pow2(max(64, args.queries)),
-                    scan_dtype=args.scan_dtype, overfetch=args.overfetch)
+                    scan_dtype=args.scan_dtype, overfetch=args.overfetch,
+                    ivf_cells=args.ivf_cells, nprobe=args.nprobe)
     mesh = None
     if args.mesh:
         from repro.launch.mesh import make_host_mesh

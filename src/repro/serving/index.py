@@ -40,7 +40,7 @@ import numpy as np
 
 from repro.core import topk as T
 from repro.core.distances import QUANTIZABLE, canonical_scan_dtype, quantize_rows
-from repro.core.knn import knn_query, two_stage_query
+from repro.core.knn import ivf_query, knn_query, two_stage_query
 
 Array = jnp.ndarray
 
@@ -73,6 +73,23 @@ def _externalize(vals, idx, ids, k_out):
     if vals.shape[-1] < k_out:  # scorers clamp k to the row count
         vals, ext = T.pad_topk(vals, ext, k_out)
     return vals, ext
+
+
+@functools.partial(jax.jit, static_argnames=("k_out", "nprobe", "overfetch",
+                                             "distance", "impl"))
+def _segment_candidates_ivf(q, vecs, ivf, qrows, live, ids, *, k_out, nprobe,
+                            overfetch, distance, impl):
+    """Cell-probed top-``k_out`` of one segment (DESIGN.md §IVF).
+
+    ``ivf`` is the segment's trained ``IVFCells`` (epoch-keyed: rebuilt at
+    build/compact only); ``qrows`` the quantized replica of its PACKED rows
+    (None = fp32 scan); ``live`` the tombstone mask in ORIGINAL row order —
+    it rides through the packing permutation, never retraining it.
+    """
+    vals, idx = ivf_query(q, vecs, ivf, k_out, nprobe=nprobe,
+                          distance=distance, impl=impl, overfetch=overfetch,
+                          db_live=live, packed_q=qrows)
+    return _externalize(vals, idx, ids, k_out)
 
 
 @functools.partial(jax.jit, static_argnames=("k_out", "overfetch", "distance",
@@ -115,12 +132,22 @@ class RetrievalIndex:
     rows; the delta segment always scans fp32 (it is small by construction).
     The default "float32" bypasses the two-stage path entirely — results
     stay bit-exact.
+
+    ``ivf_cells``/``nprobe``: the cell-probed sublinear scan (DESIGN.md
+    §IVF).  ``ivf_cells > 0`` trains a coarse quantizer over the MAIN
+    segment and scans only each query's ``nprobe`` nearest cells (composing
+    with ``scan_dtype``: the cell-packed replica is quantized, IVFADC-style).
+    The IVF structure is keyed on the row EPOCH exactly like the quantized
+    replica — rebuilt at build/compact only; tombstones flip the live mask
+    through the packing permutation and never retrain; the delta segment
+    stays flat-scanned.  ``nprobe >= ivf_cells`` probes everything (exact
+    with a fp32 scan).
     """
 
     def __init__(self, dim: int, *, distance: str = "sqeuclidean",
                  impl: str = "jnp", mesh=None, db_axis: str = "model",
                  query_axis: str = "data", scan_dtype: str = "float32",
-                 overfetch: int = 4):
+                 overfetch: int = 4, ivf_cells: int = 0, nprobe: int = 8):
         self.dim = int(dim)
         self.distance = distance
         self.impl = impl
@@ -129,10 +156,17 @@ class RetrievalIndex:
         self.query_axis = query_axis
         self.scan_dtype = canonical_scan_dtype(scan_dtype)
         self.overfetch = int(overfetch)
+        self.ivf_cells = int(ivf_cells)
+        self.nprobe = int(nprobe)
         assert self.overfetch >= 1, overfetch
+        assert self.ivf_cells >= 0 and self.nprobe >= 1, (ivf_cells, nprobe)
         if self.scan_dtype != "float32" and distance not in QUANTIZABLE:
             raise ValueError(
                 f"scan_dtype={scan_dtype!r} needs a quantizable distance; "
+                f"{distance!r} is not in {QUANTIZABLE}")
+        if self.ivf_cells and distance not in QUANTIZABLE:
+            raise ValueError(
+                f"ivf_cells needs a distance with a row-local gy map; "
                 f"{distance!r} is not in {QUANTIZABLE}")
         # Bumped only when the main segment's ROWS are replaced (build /
         # compact) — tombstones bump _version but must not trigger a replica
@@ -293,16 +327,61 @@ class RetrievalIndex:
                 self._dev[seg] = (jnp.asarray(vecs), jnp.asarray(live),
                                   jnp.asarray(ids))
                 self._dev_version[seg] = self._version[seg]
-        if self.scan_dtype != "float32" and self.mesh is None:
+        if self.scan_dtype != "float32" and self.mesh is None and \
+                not self._use_ivf():
             # Quantized replica of the main rows: keyed on the row EPOCH, not
             # the version — tombstones must not trigger a requantize.  (The
-            # mesh path keeps its own PADDED replica, ``main_padded_q``.)
+            # mesh path keeps its own PADDED replica, ``main_padded_q``; the
+            # IVF path quantizes its CELL-PACKED layout instead, below.)
             if self._dev_version.get("main_q") != self._main_epoch:
                 self._dev["main_q"] = quantize_rows(
                     jnp.asarray(self._main_vecs), self.scan_dtype,
                     distance=self.distance)
                 self._dev_version["main_q"] = self._main_epoch
+        if self._use_ivf():
+            # IVF structure (centroids + packing + packed replica): keyed on
+            # the row EPOCH exactly like the quantized replica — build and
+            # compact retrain/repack; tombstones never do (they ride the
+            # live mask through the permutation at query time).
+            if self._dev_version.get("main_ivf") != self._main_epoch:
+                from repro.core.ivf import build_ivf
+
+                self._dev["main_ivf"] = build_ivf(
+                    self._main_vecs, self._effective_ncells(),
+                    distance=self.distance, impl=self.impl,
+                    seed=self._main_epoch)
+                # Scan replica of the PACKED rows — built for float32 too:
+                # a None would make the jnp scan path re-derive the gy/hy
+                # replica (an O(S·d) full-corpus pass) inside every query
+                # batch instead of once per epoch.
+                self._dev["main_ivf_q"] = quantize_rows(
+                    self._dev["main_ivf"].packed, self.scan_dtype,
+                    distance=self.distance)
+                self._dev_version["main_ivf"] = self._main_epoch
         return self._dev
+
+    def _use_ivf(self) -> bool:
+        return bool(self.ivf_cells) and self._effective_ncells() > 0
+
+    def _effective_ncells(self) -> int:
+        """``ivf_cells`` clamped so cells stay meaningfully populated.
+
+        A cell under ~4 expected rows is pure coarse-quantizer overhead
+        (centroid scan + padding) with nothing left to prune; tiny corpora
+        degrade toward fewer cells rather than empty ones.  On a mesh the
+        count rounds DOWN to a multiple of the db-axis size so cell blocks
+        shard evenly; 0 means this main segment is too small for IVF at
+        all (e.g. fewer than ~4·P rows) and the flat scan path serves it —
+        never a quantizer with more cells than rows.
+        """
+        n = len(self._main_vecs)
+        if n == 0:
+            return 0
+        ncells = max(1, min(self.ivf_cells, n // 4 or 1))
+        if self.mesh is not None:
+            P = int(self.mesh.shape[self.db_axis])
+            ncells = (ncells // P) * P
+        return ncells
 
     def shape_signature(self, k: int) -> tuple:
         """Everything that determines the compiled shapes of a k-search.
@@ -311,11 +390,23 @@ class RetrievalIndex:
         same executables — the engine uses this to tell compile batches from
         steady-state ones.  Because tombstones are a mask, only the segment
         ROW COUNTS matter: main size (changes at compact) and delta capacity
-        (pow2 doubling), never the number of dead rows.
+        (pow2 doubling), never the number of dead rows.  With IVF the
+        cell-packed size (ncells · cell_cap — ``cell_cap`` can move across
+        epochs with the largest cell) joins the signature: it is a compiled
+        shape of the scan.
         """
         del k  # fetch width is next_pow2(k), already part of the batch key
+        packed = 0
+        if self._use_ivf():
+            if self._dev_version.get("main_ivf") == self._main_epoch:
+                packed = int(self._dev["main_ivf"].packed.shape[0])
+            else:
+                # Not yet (re)built: a distinct per-epoch marker so the first
+                # batch after a compact is conservatively tagged cold.
+                packed = -(self._main_epoch + 1)
         return (len(self._main_vecs),
-                len(self._delta_vecs) if self._delta_n else 0)
+                len(self._delta_vecs) if self._delta_n else 0,
+                packed)
 
     def search(self, queries, k: int) -> SearchResult:
         """Exact k nearest live rows for each query row.
@@ -355,6 +446,13 @@ class RetrievalIndex:
         vecs, live, ids = dev["main"]
         if self.mesh is not None:
             return self._main_candidates_sharded(q, k_out, dev)
+        if self._use_ivf():
+            ivf = dev["main_ivf"]
+            return _segment_candidates_ivf(
+                q, vecs, ivf, dev["main_ivf_q"], live, ids, k_out=k_out,
+                nprobe=min(self.nprobe, ivf.ncells),
+                overfetch=self.overfetch, distance=self.distance,
+                impl=self.impl)
         if self.scan_dtype != "float32":
             return _segment_candidates_quantized(
                 q, vecs, dev["main_q"], live, ids, k_out=k_out,
@@ -378,6 +476,8 @@ class RetrievalIndex:
         """
         from repro.core import distributed as KD
 
+        if self._use_ivf():
+            return self._main_candidates_sharded_ivf(q, k_out, dev)
         quant = self.scan_dtype != "float32"
         _, _, ids = dev["main"]
         P_db = int(self.mesh.shape[self.db_axis])
@@ -416,5 +516,45 @@ class RetrievalIndex:
         m_pad = m + (-m) % P_q
         qp = jnp.pad(q, ((0, m_pad - m), (0, 0)))
         vals, idx = fn(qp, db, n, live_p, db_q)
+        vals, idx = vals[:m], idx[:m]
+        return _externalize(vals, idx, ids, k_out)
+
+    def _main_candidates_sharded_ivf(self, q, k_out, dev):
+        """Mesh + IVF: cell blocks row-sharded, centroids replicated.
+
+        The epoch-keyed IVF structure already rounds ``ncells`` to a
+        multiple of the db-axis size (``_effective_ncells``), so the
+        cell-packed array splits on cell boundaries for free; the tombstone
+        mask rides through the permutation (keyed on the main VERSION — it
+        flips at deletes without touching the epoch-keyed packing).
+        """
+        from repro.core import distributed as KD
+        from repro.core.ivf import packed_live
+
+        _, _, ids = dev["main"]
+        ivf = dev["main_ivf"]
+        quant = self.scan_dtype != "float32"
+        key = ("ivf", k_out, ivf.packed.shape[0], ivf.ncells, self.mesh)
+        fn = self._sharded_cache.get(key)
+        if fn is None:
+            fn = KD.make_ivf_query_sharded(
+                self.mesh, query_axis=self.query_axis, db_axis=self.db_axis,
+                k=k_out, nprobe=min(self.nprobe, ivf.ncells),
+                cell_cap=ivf.cell_cap, distance=self.distance,
+                impl=self.impl, scan_dtype=self.scan_dtype,
+                overfetch=self.overfetch,
+                wire_dtype=jnp.bfloat16 if quant else None)
+            self._sharded_cache[key] = fn
+        live_key = (self._version["main"], self._main_epoch)
+        if self._dev_version.get("main_ivf_live") != live_key:
+            self._dev["main_ivf_live"] = packed_live(
+                ivf, jnp.asarray(self._main_live))
+            self._dev_version["main_ivf_live"] = live_key
+        P_q = int(self.mesh.shape[self.query_axis])
+        m = q.shape[0]
+        m_pad = m + (-m) % P_q
+        qp = jnp.pad(q, ((0, m_pad - m), (0, 0)))
+        vals, idx = fn(qp, ivf.centroids, ivf.packed, ivf.row_of_slot,
+                       self._dev["main_ivf_live"], dev["main_ivf_q"])
         vals, idx = vals[:m], idx[:m]
         return _externalize(vals, idx, ids, k_out)

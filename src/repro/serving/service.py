@@ -38,6 +38,11 @@ class ServiceConfig:
     # "float32" (exact) | "bfloat16" | "int8" + the candidate overfetch.
     scan_dtype: str = "float32"
     overfetch: int = 4
+    # IVF cell-probed scan of the main segment (DESIGN.md §IVF): 0 = flat
+    # scan; > 0 trains that many k-means cells and probes ``nprobe`` per
+    # query (composes with scan_dtype — the IVFADC recipe).
+    ivf_cells: int = 0
+    nprobe: int = 8
 
 
 class TwoTowerRetrievalService:
@@ -62,7 +67,8 @@ class TwoTowerRetrievalService:
         self._last_embed_cold = False
         self.index = RetrievalIndex(
             model_cfg.tower_mlp[-1], distance=svc.distance, impl=svc.impl,
-            mesh=mesh, scan_dtype=svc.scan_dtype, overfetch=svc.overfetch)
+            mesh=mesh, scan_dtype=svc.scan_dtype, overfetch=svc.overfetch,
+            ivf_cells=svc.ivf_cells, nprobe=svc.nprobe)
         self.engine = QueryEngine(
             self.index,
             EngineConfig(k=svc.k, min_batch=svc.min_batch,
@@ -108,7 +114,8 @@ class TwoTowerRetrievalService:
         self.index = RetrievalIndex.build(
             item_ids, vecs, distance=self.svc.distance, impl=self.svc.impl,
             mesh=self.index.mesh, scan_dtype=self.svc.scan_dtype,
-            overfetch=self.svc.overfetch)
+            overfetch=self.svc.overfetch, ivf_cells=self.svc.ivf_cells,
+            nprobe=self.svc.nprobe)
         self.engine.index = self.index
         return vecs
 

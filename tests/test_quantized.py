@@ -147,6 +147,53 @@ def test_two_stage_recall_above_floor(seed, k, scan_dtype, impl, distance):
                                rtol=1e-4, atol=1e-4)
 
 
+def _iter_eqns(jaxpr):
+    """All equations of a jaxpr, recursing into call/scan/cond sub-jaxprs."""
+    from jax.core import ClosedJaxpr, Jaxpr
+
+    def subs(v):
+        if isinstance(v, ClosedJaxpr):
+            return [v.jaxpr]
+        if isinstance(v, Jaxpr):
+            return [v]
+        if isinstance(v, (list, tuple)):
+            return [s for x in v for s in subs(x)]
+        return []
+
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for v in eqn.params.values():
+            for sub in subs(v):
+                yield from _iter_eqns(sub)
+
+
+def test_two_stage_jnp_never_materializes_dequantized_corpus():
+    """Peak-memory-shape assertion: the jnp scan scores the stored int8
+    rows directly (per-tile upcast, scale in the epilogue) — no
+    intermediate may be a corpus-sized fp32 array.  The original
+    implementation dequantized the whole replica up front, which made the
+    compressed replica's memory win a fiction on the jnp path."""
+    n, d, m, k = 4096, 32, 8, 10  # n >> tile_n so tiles are visibly smaller
+    rng = np.random.default_rng(13)
+    db = jnp.asarray(rng.standard_normal((n, d)).astype(np.float32))
+    q = jnp.asarray(rng.standard_normal((m, d)).astype(np.float32))
+    db_q = quantize_rows(db, "int8")
+    import jax
+
+    jaxpr = jax.make_jaxpr(
+        lambda q_, db_, dq: two_stage_query(q_, db_, dq, k, impl="jnp")
+    )(q, db, db_q)
+    offenders = [
+        (eqn.primitive.name, ov.aval.shape)
+        for eqn in _iter_eqns(jaxpr.jaxpr)
+        for ov in eqn.outvars
+        if (getattr(ov.aval, "ndim", 0) == 2 and ov.aval.shape[0] >= n
+            and ov.aval.dtype == jnp.float32)
+    ]
+    assert not offenders, (
+        f"corpus-sized fp32 intermediates on the jnp scan path: {offenders}")
+
+
 # ---------------------------------------------------------------------------
 # Serving index: scan_dtype knob
 # ---------------------------------------------------------------------------
