@@ -20,7 +20,7 @@ import sys
 import time
 
 
-SUITES = ("table1", "scaling", "kernels", "selection", "serving", "ivf")
+SUITES = ("table1", "scaling", "kernels", "selection", "serving", "ivf", "pq")
 
 
 def run_suite(name: str, smoke: bool) -> None:
@@ -62,8 +62,34 @@ def run_suite(name: str, smoke: bool) -> None:
                               batches=4)
         else:
             serving.ivf_sweep()
+    elif name == "pq":
+        from benchmarks import serving
+        if smoke:
+            serving.pq_sweep(corpus=2048, d=32, k=10, batch_sizes=(8, 64),
+                             batches=4, pq_ms=(8,), overfetches=(4,),
+                             nprobes=(8,))
+        else:
+            serving.pq_sweep()
     else:
         raise SystemExit(f"unknown suite {name!r}; have {SUITES}")
+
+
+def check_recall_floor(rows: list, floor: float) -> list:
+    """Rows whose derived ``recall@K=`` value sits below ``floor``.
+
+    The recall-carrying sweeps (serving precision, ivf, pq) run on fixed
+    seeds, so their recall values are deterministic per commit — a drop
+    below the floor is a real quality regression, not sampling noise, and
+    the CI bench-smoke job turns it into a failing run (``--recall-floor``).
+    """
+    bad = []
+    for row in rows:
+        for part in row.get("derived", "").split(";"):
+            if part.startswith("recall@") and "=" in part:
+                val = float(part.split("=", 1)[1])
+                if val < floor:
+                    bad.append((row["name"], val))
+    return bad
 
 
 def main() -> None:
@@ -74,6 +100,10 @@ def main() -> None:
                     help="CI-sized shapes: seconds per suite, same code paths")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write collected rows as a BENCH json artifact")
+    ap.add_argument("--recall-floor", type=float, default=None,
+                    metavar="FLOOR",
+                    help="fail the run if any swept recall@k lands below "
+                         "FLOOR (the CI bench-smoke quality gate)")
     args = ap.parse_args()
     which = args.suites or list(SUITES)
     print("name,us_per_call,derived")
@@ -82,8 +112,8 @@ def main() -> None:
         run_suite(name, args.smoke)
     wall = time.time() - t0
     print(f"# total_wall_s,{wall:.1f},")
+    from benchmarks import common
     if args.json:
-        from benchmarks import common
         payload = {
             "meta": _run_metadata(),
             "suites": which,
@@ -94,6 +124,11 @@ def main() -> None:
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=1)
         print(f"# wrote {args.json} ({len(common.ROWS)} rows)", file=sys.stderr)
+    if args.recall_floor is not None:
+        bad = check_recall_floor(common.ROWS, args.recall_floor)
+        if bad:
+            raise SystemExit(
+                f"recall@k below the {args.recall_floor} floor: {bad}")
 
 
 def _run_metadata() -> dict:

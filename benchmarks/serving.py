@@ -17,11 +17,15 @@ maps it as the "online retrieval" row).  Reports, in the standard
   * the IVF sweep (DESIGN.md §IVF, ``benchmarks.run ivf``): the cell-probed
     index at the default ``(ncells=64, nprobe=8, overfetch=4)`` per scan
     dtype — recall@k vs exact plus the modeled speedup vs the FLAT scan at
-    the same dtype (the sublinearity claim).
+    the same dtype (the sublinearity claim);
+  * the PQ sweep (DESIGN.md §PQ, ``benchmarks.run pq``): the IVF-PQ index
+    across a (pq_m, overfetch, nprobe) grid — recall@k vs exact plus the
+    modeled speedup vs the flat INT8 scan (the ADC compression claim rides
+    on top of the scalar replica's best case).
 
 CLI: ``python -m benchmarks.serving --scan-dtype {float32,bf16,int8}`` runs
 one precision-sweep dtype end-to-end (plus the fp32 baseline it needs for
-recall); ``--ivf`` runs the IVF sweep instead.
+recall); ``--ivf`` runs the IVF sweep instead; ``--pq`` the IVF-PQ sweep.
 """
 from __future__ import annotations
 
@@ -157,6 +161,55 @@ def ivf_sweep(corpus: int = 8192, d: int = 64, k: int = 10,
               recall_vs=exact_ids, queries=q, extra=extra)
 
 
+def pq_sweep(corpus: int = 8192, d: int = 64, k: int = 10,
+             batch_sizes=(8, 64, 256), batches: int = 12,
+             ncells: int = 64, pq_ms=(8, 16), overfetches=(4, 8),
+             nprobes=(8, 16), pq_nbits: int = 8):
+    """IVF-PQ ADC retrieval (DESIGN.md §PQ): qps / recall@k / bytes.
+
+    One row per (pq_m, overfetch, nprobe) grid point, each carrying
+    recall@k against the exact fp32 flat-scan baseline (sliding-window
+    accumulation as in the IVF sweep), the modeled HBM bytes/query, and the
+    speedup vs the flat int8 scan — PQ's claim is another order of
+    magnitude past the scalar replica, so that is the roof it is measured
+    against.  One index build per pq_m; overfetch/nprobe are query-time
+    knobs on the same trained codebooks (distinct compiled executables,
+    identical replica), exactly how a serving deployment would tune them.
+    """
+    from repro import accounting
+    from repro.data.synthetic import clustered_vectors
+    from repro.serving import RetrievalIndex
+
+    rng = np.random.default_rng(23)
+    vecs = clustered_vectors(corpus, d, seed=15)
+    q = clustered_vectors(max(batch_sizes), d, seed=16)
+    base = RetrievalIndex.build(np.arange(corpus), vecs, impl="fused")
+    exact_ids = np.asarray(base.search(q, k).ids)
+    flat8 = accounting.scan_bytes_per_query(
+        corpus, d, scan_dtype="int8", k=k)["total"]
+
+    for m in pq_ms:
+        if d % m:
+            continue
+        idx = RetrievalIndex.build(
+            np.arange(corpus), vecs, impl="fused", ivf_cells=ncells,
+            nprobe=nprobes[0], overfetch=overfetches[0], pq_m=m,
+            pq_nbits=pq_nbits)
+        eff_cells = idx._effective_ncells()
+        for overfetch in overfetches:
+            for nprobe in nprobes:
+                idx.overfetch, idx.nprobe = overfetch, nprobe
+                bpq = accounting.scan_bytes_per_query(
+                    corpus, d, k=k, overfetch=overfetch, ncells=eff_cells,
+                    nprobe=nprobe, pq_m=m, pq_nbits=pq_nbits)["total"]
+                extra = (f"hbm_bytes_per_q={bpq};x_int8_flat={flat8 / bpq:.2f};"
+                         f"pq_m={m};ncells={eff_cells};nprobe={nprobe};"
+                         f"overfetch={overfetch}")
+                sweep(f"pq_m{m}_of{overfetch}_np{nprobe}", idx, k, d,
+                      batch_sizes, batches, rng, recall_vs=exact_ids,
+                      queries=q, extra=extra)
+
+
 def main(corpus: int = 8192, d: int = 64, k: int = 10,
          batch_sizes=(8, 64, 256), batches: int = 12, churn: int = 512,
          scan_dtypes=("float32", "bfloat16", "int8"), overfetch: int = 4):
@@ -201,6 +254,8 @@ if __name__ == "__main__":
                          "(default: the full serving suite, all dtypes)")
     ap.add_argument("--ivf", action="store_true",
                     help="run the IVF cell-probed sweep instead")
+    ap.add_argument("--pq", action="store_true",
+                    help="run the IVF-PQ (pq_m, overfetch, nprobe) sweep")
     ap.add_argument("--corpus", type=int, default=8192)
     ap.add_argument("--d", type=int, default=64)
     ap.add_argument("--k", type=int, default=10)
@@ -210,7 +265,10 @@ if __name__ == "__main__":
     ap.add_argument("--nprobe", type=int, default=8)
     a = ap.parse_args()
     print("name,us_per_call,derived")
-    if a.ivf:
+    if a.pq:
+        pq_sweep(a.corpus, a.d, a.k, (8, 64, 256), a.batches,
+                 ncells=a.ivf_cells)
+    elif a.ivf:
         ivf_sweep(a.corpus, a.d, a.k, (8, 64, 256), a.batches,
                   ncells=a.ivf_cells, nprobe=a.nprobe, overfetch=a.overfetch)
     elif a.scan_dtype is not None:

@@ -29,41 +29,57 @@ _SCAN_ITEMSIZE = {"float32": 4, "bfloat16": 2, "int8": 1}
 def scan_bytes_per_query(n_rows: int, d: int, *, scan_dtype: str = "float32",
                          k: int = 10, overfetch: int = 4,
                          ncells: int | None = None,
-                         nprobe: int | None = None) -> dict:
+                         nprobe: int | None = None,
+                         pq_m: int | None = None,
+                         pq_nbits: int = 8) -> dict:
     """Analytic HBM bytes one query's corpus scan moves (model, not a probe).
 
     The scan is bandwidth-bound in the database stream (the paper's whole
     premise); per query it reads
       * ``centroids``— the IVF coarse-quantizer pass: the [ncells, d] fp32
                       centroid table (zero for a flat scan),
-      * ``scan``    — the replica stream at the scan dtype's width: all
-                      [n, d] rows for a flat scan, or the ``nprobe`` probed
+      * ``scan``    — the database stream over the scanned rows: all
+                      [n] rows for a flat scan, or the ``nprobe`` probed
                       cells' rows (nprobe · n/ncells — the average cell, the
                       honest expectation under a balanced quantizer) for the
-                      IVF cell-probed scan (DESIGN.md §IVF),
+                      IVF cell-probed scan (DESIGN.md §IVF); each row is
+                      d bytes × the scan dtype's width, or ``pq_m`` uint8
+                      code bytes when product-quantized (DESIGN.md §PQ —
+                      codes are byte-stored for any ``pq_nbits`` ≤ 8;
+                      sub-byte packing is an open item, ROADMAP),
       * ``epilogue``— the rank-1 terms over the scanned rows: ``hy`` fp32
-                      always, plus the per-row int8 scales when quantized,
+                      always, plus the per-row int8 scales when scalar-
+                      quantized (PQ folds everything else into the LUT),
       * ``rescore`` — stage 2's gather of K' = overfetch * next_pow2(k)
                       fp32 corpus rows (zero only for the flat fp32 scan,
-                      which has no second stage; IVF always rescores).
+                      which has no second stage; IVF/PQ always rescore).
     Query-side operands and the [*, K] outputs are O(d + k) per query —
     noise next to the database stream — and are omitted, identically for
-    every configuration.
+    every configuration; that includes the PQ lookup tables, whose build
+    reads the [2^nbits · d] fp32 codebook once per query BATCH and whose
+    m·2^nbits-entry table lives in VMEM per query tile, amortizing to O(d)
+    HBM bytes per query at serving batch sizes.
     """
     from repro.core.topk import next_pow2
 
-    itemsize = _SCAN_ITEMSIZE[scan_dtype]
     ivf = ncells is not None and ncells > 0
+    pq = pq_m is not None and pq_m > 0
     centroids = ncells * d * 4 if ivf else 0
     if ivf:
         nprobe = min(ncells if nprobe is None else nprobe, ncells)
         scanned_rows = min(n_rows, -(-n_rows // ncells) * nprobe)
     else:
         scanned_rows = n_rows
-    scan = scanned_rows * d * itemsize
-    epilogue = scanned_rows * 4 + (
-        scanned_rows * 4 if scan_dtype == "int8" else 0)
-    two_stage = ivf or scan_dtype != "float32"
+    if pq:
+        assert 1 <= pq_nbits <= 8, pq_nbits
+        row_bytes = pq_m  # one byte per code, any nbits <= 8
+        scaled = False
+    else:
+        row_bytes = d * _SCAN_ITEMSIZE[scan_dtype]
+        scaled = scan_dtype == "int8"
+    scan = scanned_rows * row_bytes
+    epilogue = scanned_rows * 4 + (scanned_rows * 4 if scaled else 0)
+    two_stage = ivf or pq or scan_dtype != "float32"
     rescore = (min(n_rows, overfetch * next_pow2(k)) * d * 4 if two_stage
                else 0)
     return {

@@ -4,7 +4,10 @@ Public API:
   knn_allpairs / knn_query      — single-device tiled solvers
   two_stage_query / rescore     — quantized scan + exact rescore (§Quantized)
   ivf_query                     — cell-probed sublinear retrieval (§IVF)
+  ivfpq_query                   — product-quantized ADC retrieval (§PQ)
   ivf.build_ivf / IVFCells      — coarse quantizer + cell-packed layout
+  pq.build_ivfpq / PQCodebook   — subspace codebooks + code replicas (§PQ)
+  kmeans.lloyd                  — shared Lloyd loop (IVF cells, PQ codebooks)
   distributed.knn_allpairs_*    — multi-device (shard_map) solvers
   distances.get_distance        — cumulative distance registry
   distances.quantize_rows       — bf16/int8 scan replicas (QuantizedRows)
@@ -23,11 +26,20 @@ from repro.core.ivf import (  # noqa: F401
     build_ivf,
     train_centroids,
 )
+from repro.core.kmeans import lloyd  # noqa: F401
 from repro.core.knn import (  # noqa: F401
     KNNResult,
     ivf_query,
+    ivfpq_query,
     knn_allpairs,
     knn_query,
     rescore,
     two_stage_query,
+)
+from repro.core.pq import (  # noqa: F401
+    PQCodebook,
+    PQCodes,
+    build_ivfpq,
+    build_pq,
+    train_pq,
 )

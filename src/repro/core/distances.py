@@ -270,6 +270,21 @@ def canonical_scan_dtype(name: str) -> str:
     return name
 
 
+def gy_rows(y: Array, distance: str) -> Array:
+    """Rows mapped to MXU ``gy`` space — the geometry every compressed
+    replica (scalar, IVF cells, PQ codebooks) is built in.
+
+    Only ``QUANTIZABLE`` distances participate: the map must be row-local so
+    per-row structures (scales, cell assignments, codes) survive it.
+    """
+    dist = get_distance(distance)
+    if distance not in QUANTIZABLE:
+        raise ValueError(
+            f"distance {distance!r} has no row-local gy map; "
+            f"have {QUANTIZABLE}")
+    return dist.matmul_form.gy(jnp.asarray(y, jnp.float32)).astype(jnp.float32)
+
+
 class QuantizedRows(NamedTuple):
     """A low-precision replica of a database, pre-mapped to MXU ``gy`` space.
 

@@ -552,6 +552,115 @@ def ivf_query_sharded_shard(
     return vals[:, :k], idx[:, :k]
 
 
+def ivfpq_query_sharded_shard(
+    q_local: Array,
+    centroids: Array,
+    pq_cb,
+    pq_codes_local,
+    packed_local: Array,
+    row_of_slot_local: Array,
+    live_packed_local: Array | None = None,
+    *,
+    db_axis,
+    k: int,
+    nprobe: int,
+    cell_cap: int,
+    distance: str = "sqeuclidean",
+    impl: str = "fused",
+    overfetch: int = 4,
+    wire_dtype=None,
+    threshold_skip: bool | None = None,
+    residual: bool = True,
+) -> tuple[Array, Array]:
+    """IVF-PQ serving path: codebooks replicated, code blocks row-sharded.
+
+    The same shard contract as ``ivf_query_sharded_shard`` (DESIGN.md §PQ):
+    ``ncells % P == 0`` cells shard contiguously over ``db_axis``, and each
+    shard runs the full pipeline locally before the butterfly merge —
+
+      1. the GLOBAL centroid shortlist (centroids and the PQ codebook are
+         replicated: the shortlist is tiny, the codebook is m·2^nbits·d/m·4
+         = 2^nbits·d·4 bytes — 128 KiB at d=128 — and every shard builds
+         the same per-query LUTs from it);
+      2. probes falling in this shard's cell range ADC-scan the LOCAL code
+         slice (``pq_codes_local``: the [S/P, m] uint8 rows + hy of this
+         shard's cells; the residual cross term biases against this shard's
+         centroid slice);
+      3. exact local rescore against the fp32 packed slice, candidates
+         externalized through the local ``row_of_slot`` slice.
+
+    The butterfly payload stays K exact (value, GLOBAL corpus row) pairs per
+    query row, optionally on the bf16 wire — the n-scaling arrays a shard
+    touches per query are m-byte code rows, which is what makes million-row
+    mains servable from HBM (ROADMAP north star).
+    """
+    from repro.core import ivf as IVF
+    from repro.core.knn import quantized_scan as q_scan
+    from repro.core.pq import pq_cell_bias
+    from repro.kernels._backend import resolve_interpret
+
+    P = jax.lax.axis_size(db_axis)
+    p = jax.lax.axis_index(db_axis)
+    S_loc = packed_local.shape[0]
+    assert S_loc % cell_cap == 0, (S_loc, cell_cap)
+    ncells_loc = S_loc // cell_cap
+    ncells = ncells_loc * P
+    d = q_local.shape[1]
+    K = T.next_pow2(k)
+    k_loc = min(k, S_loc)
+
+    # 1. Global shortlist, then this shard's slice of the probe set.
+    cells = IVF.probe_cells(q_local, centroids, min(nprobe, ncells),
+                            distance=distance, impl=impl)
+    local_cells = cells - p * ncells_loc
+    # Residual cross term against THIS shard's centroid rows only — the
+    # local cell ids index the slice directly.
+    cent_local = jax.lax.dynamic_slice(
+        centroids, (p * ncells_loc, 0), (ncells_loc, d))
+    cbias = (pq_cell_bias(q_local, cent_local, distance=distance)
+             if residual else None)
+
+    live = row_of_slot_local >= 0  # pad slots are dead by construction
+    if live_packed_local is not None:
+        live = jnp.logical_and(live, live_packed_local)
+
+    k_scan = scan_width(S_loc, k_loc, overfetch)
+    # Same pinned-toolchain guard as the IVF shard: a scalar-prefetch kernel
+    # inside jit(shard_map) with device-varying operands corrupts under the
+    # Pallas INTERPRETER, so off-TPU the sharded stage 1 runs the jnp ADC
+    # reference (predicated compute); the kernel engages on real TPUs.
+    if impl == "fused" and not resolve_interpret(None):
+        from repro.kernels import ops as kops
+
+        m = q_local.shape[0]
+        bm = min(256, T.next_pow2(max(m, 8)))
+        cand = kops.pq_scan_impl(
+            q_local, pq_cb, pq_codes_local, local_cells,
+            min(k_scan, cell_cap), cell_cap=cell_cap,
+            centroids=cent_local if residual else None, distance=distance,
+            tile_m=bm, packed_live=live,
+            threshold_skip=threshold_skip).indices
+    else:
+        probed = jnp.any(
+            local_cells[:, :, None] == jnp.arange(ncells_loc)[None, None, :],
+            axis=1)
+        cand = q_scan(
+            q_local, pq_codes_local, k_scan, distance=distance, db_live=live,
+            probed=probed, cell_cap=cell_cap, pq_codebook=pq_cb,
+            cell_bias=cbias, threshold_skip=threshold_skip).indices
+
+    # 3. Exact local rescore, then packed slot -> GLOBAL corpus row.
+    vals, idx = rescore(q_local, packed_local, cand, k_loc,
+                        distance=distance,
+                        impl=impl if impl == "fused" else "jnp")
+    safe = jnp.clip(idx, 0, S_loc - 1)
+    idx = jnp.where(idx >= 0, jnp.take(row_of_slot_local, safe), -1)
+    if vals.shape[1] < K:
+        vals, idx = T.pad_topk(vals, idx, K)
+    vals, idx = tree_merge_topk(vals, idx, db_axis, wire_dtype=wire_dtype)
+    return vals[:, :k], idx[:, :k]
+
+
 # ---------------------------------------------------------------------------
 # Host-level jitted entry points (build shard_map closures over a mesh).
 # ---------------------------------------------------------------------------
@@ -828,6 +937,92 @@ def make_ivf_query_sharded(
             )
 
         v, i = body(q, centroids, packed, row_of_slot, live_packed, packed_q)
+        return KNNResult(v, i)
+
+    return jax.jit(fn)
+
+
+def make_ivfpq_query_sharded(
+    mesh: jax.sharding.Mesh,
+    *,
+    query_axis: str,
+    db_axis: str,
+    k: int,
+    nprobe: int,
+    cell_cap: int,
+    distance: str = "sqeuclidean",
+    impl: str = "fused",
+    overfetch: int = 4,
+    wire_dtype=None,
+    threshold_skip: bool | None = None,
+    residual: bool = True,
+):
+    """IVF-PQ serving-path kNN over ``mesh`` (see ``ivfpq_query_sharded_shard``).
+
+    fn(q [m, d], centroids [ncells, d], pq_cb PQCodebook, pq_codes PQCodes,
+    packed [S, d], row_of_slot [S], live_packed [S] bool | None) -> KNNResult
+    with GLOBAL corpus-row indices.  ``q`` shards over ``query_axis``;
+    ``centroids`` and the codebook replicate (every shard builds the same
+    LUTs); the uint8 code rows, ``hy``, the fp32 packed rows (rescore
+    operand), ``row_of_slot`` and ``live_packed`` shard over ``db_axis`` —
+    requires m % size(query_axis) == 0 and ncells % size(db_axis) == 0.
+    ``residual`` must match how the replica was built (``build_ivfpq``).
+    """
+    from repro.core.pq import PQCodebook, PQCodes
+
+    q_axes = (query_axis,) if isinstance(query_axis, str) else tuple(query_axis)
+    assert db_axis not in q_axes, (
+        "queries must be replicated over db_axis (the butterfly merge runs "
+        f"across it); got query_axis={query_axis!r} == db_axis={db_axis!r}")
+    P_db = int(mesh.shape[db_axis])
+
+    def fn(q: Array, centroids: Array, pq_cb, pq_codes, packed: Array,
+           row_of_slot: Array, live_packed: Array | None = None) -> KNNResult:
+        S = packed.shape[0]
+        assert S % (P_db * cell_cap) == 0, (
+            f"ncells = {S // cell_cap} must divide over db_axis ({P_db})")
+        q_spec = jax.sharding.PartitionSpec(query_axis)
+        rep_spec = jax.sharding.PartitionSpec()  # centroids + codebook
+        db_spec = jax.sharding.PartitionSpec(db_axis)
+        row_spec = jax.sharding.PartitionSpec(db_axis)
+        live_spec = None if live_packed is None else row_spec
+        cb_spec = PQCodebook(rep_spec)
+        codes_spec = PQCodes(db_spec, row_spec)
+
+        @functools.partial(
+            jax.shard_map,
+            mesh=mesh,
+            in_specs=(q_spec, rep_spec, cb_spec, codes_spec, db_spec,
+                      row_spec, live_spec),
+            out_specs=(q_spec, q_spec),
+            # The butterfly merge leaves results replicated over db_axis; vma
+            # tracking cannot infer replication through ppermute chains.
+            check_vma=False,
+        )
+        def body(q_local, cent, cb, codes_local, packed_local, ros_local,
+                 live_local):
+            return ivfpq_query_sharded_shard(
+                q_local,
+                cent,
+                cb,
+                codes_local,
+                packed_local,
+                ros_local,
+                live_local,
+                db_axis=db_axis,
+                k=k,
+                nprobe=nprobe,
+                cell_cap=cell_cap,
+                distance=distance,
+                impl=impl,
+                overfetch=overfetch,
+                wire_dtype=wire_dtype,
+                threshold_skip=threshold_skip,
+                residual=residual,
+            )
+
+        v, i = body(q, centroids, pq_cb, pq_codes, packed, row_of_slot,
+                    live_packed)
         return KNNResult(v, i)
 
     return jax.jit(fn)

@@ -50,7 +50,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import topk as T
-from repro.core.distances import QUANTIZABLE, get_distance
+from repro.core.distances import gy_rows
 
 Array = jnp.ndarray
 
@@ -93,15 +93,6 @@ class IVFCells(NamedTuple):
         return self.packed.shape[0] // self.centroids.shape[0]
 
 
-def _gy_rows(x: Array, distance: str) -> Array:
-    dist = get_distance(distance)
-    if distance not in QUANTIZABLE:
-        raise ValueError(
-            f"distance {distance!r} has no IVF form (needs a row-local gy "
-            f"map); have {QUANTIZABLE}")
-    return dist.matmul_form.gy(jnp.asarray(x, jnp.float32)).astype(jnp.float32)
-
-
 @functools.partial(jax.jit, static_argnames=("ncells", "iters", "impl",
                                              "distance"))
 def train_centroids(
@@ -115,40 +106,17 @@ def train_centroids(
 ) -> tuple[Array, Array]:
     """On-device Lloyd k-means over ``x`` [n, d] in gy space.
 
-    Returns (centroids [ncells, d], assign [n] int32).  The assignment step
-    reuses the repo's kNN solver — k = 1 against the centroid set — so the
-    fused Pallas kernel trains the quantizer that later prunes it.  Empty
-    cells keep their previous centroid (deterministic, no resampling: a
-    replica/quantizer must be reproducible across rebuilds, same policy as
-    ``quantize_rows``).
+    Returns (centroids [ncells, d], assign [n] int32).  The Lloyd loop is the
+    shared ``core.kmeans.lloyd`` (the same implementation trains the PQ
+    subspace codebooks — DESIGN.md §PQ); this wrapper only supplies the
+    geometry: clustering runs in MXU ``gy`` space, where the scan scores, so
+    a cell boundary means the same thing to the quantizer and to the kernel.
     """
-    from repro.core.knn import knn_query
+    from repro.core.kmeans import lloyd
 
-    n = x.shape[0]
-    assert 1 <= ncells <= n, (ncells, n)
-    g = _gy_rows(x, distance)
-    # Deterministic seeding: k-means++ buys little on the embedding corpora
-    # this serves; distinct random rows are the standard cheap init.
-    perm = jax.random.permutation(jax.random.PRNGKey(seed), n)
-    cent = g[perm[:ncells]]
-
-    def assign_to(cent):
-        # Lloyd assignment == 1-NN over centroids, in gy space where the
-        # scan scores; sqeuclidean there is the Voronoi partition.
-        return knn_query(g, cent, 1, distance="sqeuclidean",
-                         impl=impl).indices[:, 0]
-
-    def step(cent, _):
-        a = assign_to(cent)
-        sums = jax.ops.segment_sum(g, a, num_segments=ncells)
-        cnt = jax.ops.segment_sum(jnp.ones((n,), jnp.float32), a,
-                                  num_segments=ncells)
-        cent = jnp.where(cnt[:, None] > 0, sums / jnp.maximum(cnt[:, None], 1.0),
-                         cent)
-        return cent, None
-
-    cent, _ = jax.lax.scan(step, cent, None, length=iters)
-    return cent, assign_to(cent).astype(jnp.int32)
+    assert 1 <= ncells <= x.shape[0], (ncells, x.shape[0])
+    return lloyd(gy_rows(x, distance), ncells, iters=iters, seed=seed,
+                 impl=impl)
 
 
 def pack_cells(

@@ -1,0 +1,73 @@
+"""Shared on-device Lloyd k-means (DESIGN.md §IVF, §PQ).
+
+One tested implementation serves every quantizer in the repo: the IVF coarse
+quantizer (``core.ivf.train_centroids`` — ncells centroids over full rows)
+and the PQ subspace codebooks (``core.pq.train_pq`` — 2^nbits codewords per
+d/m-dim subspace).  Both are the same algorithm pointed at different row
+spaces, and both lean on the same two properties:
+
+* the **assignment step IS a kNN problem** (k = 1 over the centroid set), so
+  it reuses the repo's own solver (``knn_query``, optionally the fused Pallas
+  kernel) — the engine trains the quantizers that later prune it;
+* **determinism** — seeding is a fixed permutation draw and empty clusters
+  keep their previous centroid (no resampling): a quantizer, like a scan
+  replica, must be reproducible across index rebuilds.
+
+Callers pre-map rows into the space they intend to cluster in (MXU ``gy``
+space for IVF, per-subspace slices of it for PQ) — this module is
+geometry-agnostic and always clusters by squared euclidean distance, the
+Voronoi partition of whatever space it was handed.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+@functools.partial(jax.jit, static_argnames=("k", "iters", "impl"))
+def lloyd(
+    g: Array,
+    k: int,
+    *,
+    iters: int = 10,
+    seed: int = 0,
+    impl: str = "jnp",
+) -> tuple[Array, Array]:
+    """Lloyd k-means over pre-mapped rows ``g`` [n, d].
+
+    Returns (centroids [k, d] fp32, assign [n] int32).  Init draws ``k``
+    distinct random rows (k-means++ buys little on the embedding corpora this
+    serves); each iteration assigns via 1-NN over the centroid set
+    (``knn_query`` — ``impl`` selects the jnp tiles or the fused Pallas
+    kernel) and re-centers with a ``segment_sum`` mean.  Empty clusters keep
+    their previous centroid — deterministic across rebuilds.
+    """
+    from repro.core.knn import knn_query
+
+    n = g.shape[0]
+    assert 1 <= k <= n, (k, n)
+    g = jnp.asarray(g, jnp.float32)
+    perm = jax.random.permutation(jax.random.PRNGKey(seed), n)
+    cent = g[perm[:k]]
+
+    def assign_to(cent):
+        # Lloyd assignment == 1-NN over centroids; sqeuclidean in the
+        # caller's pre-mapped space is the Voronoi partition there.
+        return knn_query(g, cent, 1, distance="sqeuclidean",
+                         impl=impl).indices[:, 0]
+
+    def step(cent, _):
+        a = assign_to(cent)
+        sums = jax.ops.segment_sum(g, a, num_segments=k)
+        cnt = jax.ops.segment_sum(jnp.ones((n,), jnp.float32), a,
+                                  num_segments=k)
+        cent = jnp.where(cnt[:, None] > 0, sums / jnp.maximum(cnt[:, None], 1.0),
+                         cent)
+        return cent, None
+
+    cent, _ = jax.lax.scan(step, cent, None, length=iters)
+    return cent, assign_to(cent).astype(jnp.int32)

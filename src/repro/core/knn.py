@@ -337,7 +337,7 @@ def rescore(
 )
 def quantized_scan(
     queries: Array,
-    db_q: QuantizedRows,
+    db_q,
     k: int,
     *,
     distance: str = "sqeuclidean",
@@ -347,34 +347,56 @@ def quantized_scan(
     db_live: Array | None = None,
     probed: Array | None = None,
     cell_cap: int | None = None,
+    pq_codebook=None,
+    cell_bias: Array | None = None,
 ) -> KNNResult:
-    """Tiled jnp scan of a ``QuantizedRows`` replica — stage 1 reference.
+    """Tiled jnp scan of a compressed replica — stage 1 reference.
 
-    The XLA counterpart of the fused kernel's quantized path: per column
-    tile, the stored-dtype rows upcast to fp32 and the per-row int8 scale
-    folds into the rank-1 epilogue (``finalize(alpha·(fx@dataᵀ)·scale + hx +
-    hy)``).  The replica is NEVER dequantized wholesale — the only fp32
-    database-shaped arrays are [tile_n, d] per-tile upcasts, so the
-    compressed replica's memory win survives on the jnp path (the original
-    implementation materialized a full ``dequantize_rows`` copy; pinned by
+    ``db_q`` is a ``QuantizedRows`` replica (scalar path) or a
+    ``core.pq.PQCodes`` replica (ADC path, pass ``pq_codebook``).
+
+    Scalar path — the XLA counterpart of the fused kernel's quantized scan:
+    per column tile, the stored-dtype rows upcast to fp32 and the per-row
+    int8 scale folds into the rank-1 epilogue (``finalize(alpha·(fx@dataᵀ)·
+    scale + hx + hy)``).  The replica is NEVER dequantized wholesale — the
+    only fp32 database-shaped arrays are [tile_n, d] per-tile upcasts, so
+    the compressed replica's memory win survives on the jnp path (pinned by
     the jaxpr peak-shape test in tests/test_quantized.py).
+
+    ADC path (DESIGN.md §PQ) — the reference for ``kernels/pq_scan.py``: the
+    per-query LUTs build once (``build_pq_luts``) and each column tile
+    scores through the SAME one-hot MXU contraction as the kernel
+    (``kernels.pq_scan.adc_tile``), so at tile_n = cell_cap the two paths
+    are bit-identical under the interpreter (tested).  ``cell_bias``
+    [m, ncells] is the residual-PQ cross term (``pq_cell_bias``), gathered
+    per column by cell id.
 
     ``db_live``: [n] bool row mask (tombstones).  ``probed``/``cell_cap``:
     optional per-QUERY cell mask [m, ncells] for the IVF jnp path — a column
     of cell ``c`` is masked +inf for queries that did not probe ``c``
-    (the ``db_live``-style fallback when the scalar-prefetch kernel is not
+    (the ``db_live``-style fallback when the scalar-prefetch kernels are not
     in play; cells here cost predicated compute, not zero DMA).
     """
+    from repro.core.pq import PQCodes, build_pq_luts
+    from repro.kernels.pq_scan import adc_tile
+
     threshold_skip = T.resolve_threshold_skip(threshold_skip, pallas=False)
     dist = get_distance(distance)
     mf = dist.matmul_form
     assert mf is not None, f"{distance} has no MXU form"
     fin = matmul_finalize(dist)
     m_real, d = queries.shape
-    n_real = db_q.data.shape[0]
+    pq = isinstance(db_q, PQCodes)
+    n_real = (db_q.codes if pq else db_q.data).shape[0]
     k = min(k, n_real)
 
-    fx = _pad_rows(mf.fx(queries).astype(jnp.float32), tile_m)
+    if pq:
+        assert pq_codebook is not None, "PQCodes scan needs its codebook"
+        ncodes = pq_codebook.ncodes
+        luts = build_pq_luts(pq_codebook, queries, distance=distance)
+        fx = _pad_rows(luts.reshape(m_real, -1), tile_m)  # flattened LUTs
+    else:
+        fx = _pad_rows(mf.fx(queries).astype(jnp.float32), tile_m)
     hx = _pad_rows(mf.hx(queries).astype(jnp.float32)[:, None], tile_m)
     # Dead rows (pad, tombstones) die through the hy epilogue term — one
     # [n] where() instead of per-tile masks, same idiom as the kernels.
@@ -382,32 +404,53 @@ def quantized_scan(
     if db_live is not None:
         hy = jnp.where(db_live, hy, T.POS_INF)
     pad_n = (-n_real) % tile_n
-    data = jnp.pad(db_q.data, ((0, pad_n), (0, 0)))
+    if pq:
+        # Transposed codes: the column (row-of-corpus) axis last, like the
+        # kernel's streamed operand; pad columns are dead via hy below.
+        data = jnp.pad(db_q.codes, ((0, pad_n), (0, 0))).T  # [m_sub, n_pad]
+        scale = None
+    else:
+        data = jnp.pad(db_q.data, ((0, pad_n), (0, 0)))
+        scale = (None if db_q.scale is None else
+                 jnp.pad(db_q.scale, (0, pad_n), constant_values=1.0)[None, :])
     hy = jnp.pad(hy, (0, pad_n), constant_values=T.POS_INF)[None, :]
-    scale = (None if db_q.scale is None
-             else jnp.pad(db_q.scale, (0, pad_n), constant_values=1.0)[None, :])
     if probed is not None:
         assert cell_cap is not None
         probed = _pad_rows(probed, tile_m)
+    if cell_bias is not None:
+        assert pq and cell_cap is not None
+        cell_bias = _pad_rows(cell_bias, tile_m)
 
     n_row_tiles = fx.shape[0] // tile_m
-    n_col_tiles = data.shape[0] // tile_n
+    n_col_tiles = data.shape[1 if pq else 0] // tile_n
 
     def row_block(_, r):
         row_off = r * tile_m
-        fxt = jax.lax.dynamic_slice(fx, (row_off, 0), (tile_m, d))
+        fxt = jax.lax.dynamic_slice(fx, (row_off, 0), (tile_m, fx.shape[1]))
         hxt = jax.lax.dynamic_slice(hx, (row_off, 0), (tile_m, 1))
         pbt = (None if probed is None else jax.lax.dynamic_slice(
             probed, (row_off, 0), (tile_m, probed.shape[1])))
+        cbt = (None if cell_bias is None else jax.lax.dynamic_slice(
+            cell_bias, (row_off, 0), (tile_m, cell_bias.shape[1])))
         run = T.init_running(tile_m, k)
 
         def col_step(c, run):
             col_off = c * tile_n
-            dt = jax.lax.dynamic_slice(data, (col_off, 0), (tile_n, d))
-            dots = fxt @ dt.astype(jnp.float32).T  # per-tile upcast only
-            t = mf.alpha * dots
-            if scale is not None:
-                t = t * jax.lax.dynamic_slice(scale, (0, col_off), (1, tile_n))
+            if pq:
+                ct = jax.lax.dynamic_slice(
+                    data, (0, col_off), (data.shape[0], tile_n))
+                t = adc_tile(fxt, ct, ncodes)  # the kernel's exact tile math
+                if cbt is not None:
+                    cell_ids = (col_off + jnp.arange(tile_n)) // cell_cap
+                    cell_ids = jnp.clip(cell_ids, 0, cbt.shape[1] - 1)
+                    t = t + jnp.take(cbt, cell_ids, axis=1)
+            else:
+                dt = jax.lax.dynamic_slice(data, (col_off, 0), (tile_n, d))
+                dots = fxt @ dt.astype(jnp.float32).T  # per-tile upcast only
+                t = mf.alpha * dots
+                if scale is not None:
+                    t = t * jax.lax.dynamic_slice(scale, (0, col_off),
+                                                  (1, tile_n))
             hyt = jax.lax.dynamic_slice(hy, (0, col_off), (1, tile_n))
             tile = fin(t + hxt + hyt)
             if pbt is not None:
@@ -562,6 +605,88 @@ def ivf_query(
         cand = quantized_scan(
             queries, scan_q, k_scan, distance=distance, db_live=live_p,
             probed=probed, cell_cap=cap,
+            threshold_skip=threshold_skip).indices
+    safe = jnp.clip(cand, 0, ivf.row_of_slot.shape[0] - 1)
+    rows = jnp.where(cand >= 0, jnp.take(ivf.row_of_slot, safe), -1)
+    return rescore(queries, database, rows, k, distance=distance,
+                   impl="fused" if impl == "fused" else "jnp")
+
+
+# ---------------------------------------------------------------------------
+# IVF-PQ: coarse quantizer + product-quantized ADC scan + exact rescore
+# (DESIGN.md §PQ).
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "nprobe", "distance", "impl", "overfetch",
+                     "threshold_skip", "residual"),
+)
+def ivfpq_query(
+    queries: Array,
+    database: Array,
+    ivf,
+    pq_cb,
+    pq_codes,
+    k: int,
+    *,
+    nprobe: int = 8,
+    distance: str = "sqeuclidean",
+    impl: str = "jnp",
+    overfetch: int = 4,
+    threshold_skip: bool | None = None,
+    db_live: Array | None = None,
+    residual: bool = True,
+) -> KNNResult:
+    """IVF-PQ kNN: centroid shortlist → ADC scan of m-byte codes → rescore.
+
+    The IVFADC pipeline (DESIGN.md §PQ): ``ivf`` is a trained
+    ``core.ivf.IVFCells`` over ``database`` and ``pq_cb``/``pq_codes`` its
+    PQ replica in PACKED slot order (``core.pq.build_ivfpq`` — codes encode
+    residuals to the cell centroid when ``residual=True``, which MUST match
+    how the replica was built).  Stage 1 probes ``nprobe`` cells and scans
+    their uint8 code blocks by LUT accumulation — ``impl="fused"`` uses the
+    scalar-prefetch Pallas kernel (``kernels/pq_scan.py``: unprobed cells
+    are never DMA'd), other impls the ``quantized_scan`` ADC reference with
+    a per-query probe mask; stage 2 re-ranks the K' = ``scan_width(n, k,
+    overfetch)`` survivors exactly against the fp32 corpus.
+
+    PQ is lossy, so there is no nprobe escape hatch to bit-exactness — but
+    the candidate ordering is the ONLY error source (the scanned value is
+    exactly the distance to the decoded corpus, and rescore is exact), so
+    ``nprobe = ncells`` with ``overfetch`` spanning the corpus reproduces
+    ``knn_query`` (tested).  ``db_live`` is the [n] tombstone mask in
+    ORIGINAL row order, riding the packing permutation as in ``ivf_query``.
+    """
+    from repro.core import ivf as IVF
+    from repro.core.pq import pq_cell_bias
+
+    n = database.shape[0]
+    k = min(k, n)
+    ncells, cap = ivf.ncells, ivf.cell_cap
+    nprobe = min(nprobe, ncells)
+    cells = IVF.probe_cells(queries, ivf.centroids, nprobe,
+                            distance=distance, impl=impl)
+    live_p = IVF.packed_live(ivf, db_live)
+    k_scan = scan_width(n, k, overfetch)
+    if impl == "fused":
+        from repro.kernels import ops as kops
+
+        # The kernel's per-tile fetch width is bounded by the cell block.
+        assert T.next_pow2(k) <= cap, (k, cap)
+        cand = kops.pq_scan(
+            queries, pq_cb, pq_codes, cells, min(k_scan, cap), cell_cap=cap,
+            centroids=ivf.centroids if residual else None, distance=distance,
+            packed_live=live_p, threshold_skip=threshold_skip).indices
+    else:
+        probed = jnp.any(
+            cells[:, :, None] == jnp.arange(ncells)[None, None, :], axis=1)
+        cbias = (pq_cell_bias(queries, ivf.centroids, distance=distance)
+                 if residual else None)
+        cand = quantized_scan(
+            queries, pq_codes, k_scan, distance=distance, db_live=live_p,
+            probed=probed, cell_cap=cap, pq_codebook=pq_cb, cell_bias=cbias,
             threshold_skip=threshold_skip).indices
     safe = jnp.clip(cand, 0, ivf.row_of_slot.shape[0] - 1)
     rows = jnp.where(cand >= 0, jnp.take(ivf.row_of_slot, safe), -1)

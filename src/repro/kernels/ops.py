@@ -23,6 +23,7 @@ from repro.core.distances import (
 from repro.kernels import fused_knn as _fused
 from repro.kernels import ivf_scan as _ivf
 from repro.kernels import pairwise_distance as _pd
+from repro.kernels import pq_scan as _pq
 from repro.kernels import rescore as _rs
 from repro.kernels import stream_topk as _st
 from repro.kernels._backend import resolve_interpret
@@ -315,6 +316,99 @@ ivf_scan = functools.partial(
     static_argnames=("k", "distance", "cell_cap", "tile_m", "bd",
                      "threshold_skip", "interpret"),
 )(ivf_scan_impl)
+
+
+def pq_scan_impl(
+    q,
+    pq_cb,
+    pq_codes,
+    cells,
+    k: int,
+    *,
+    cell_cap: int,
+    centroids=None,
+    distance: str = "sqeuclidean",
+    tile_m: int = 256,
+    packed_live=None,
+    threshold_skip: bool | None = None,
+    interpret: bool | None = None,
+):
+    """Cell-probed ADC scan of a PQ-coded corpus; returns KNNResult.
+
+    ``pq_cb``/``pq_codes`` are the ``core.pq`` codebook + cell-packed code
+    replica (codes in PACKED slot order); ``cells`` [m, nprobe] int32 is each
+    query's probed-cell shortlist; ``centroids`` (the IVF coarse table) marks
+    the codes as RESIDUAL and rides in as the per-(query, cell) cross-term
+    bias (``core.pq.pq_cell_bias``) — None means plain (non-residual) codes.
+
+    The wrapper builds the per-query LUTs (``build_pq_luts``) and the
+    per-query-tile union probe lists, pads queries, and transposes the codes
+    to the kernel's [m, S] streamed layout; ``packed_live`` masks dead slots
+    to +inf via ``hy`` exactly like ``ivf_scan``.  Indices are PACKED slots.
+
+    Un-jitted for shard_map bodies for the same pinned-toolchain reason as
+    ``ivf_scan_impl`` (scalar-prefetch kernels corrupt under the interpreter
+    inside jit(shard_map) with device-varying operands); ``pq_scan`` below is
+    the jitted local entry.
+    """
+    from repro.core.ivf import tile_probe_lists
+    from repro.core.knn import KNNResult
+    from repro.core.pq import build_pq_luts, pq_cell_bias
+
+    interpret = resolve_interpret(interpret)
+    dist = get_distance(distance)
+    mf = dist.matmul_form
+    assert mf is not None, f"{distance} has no MXU form"
+    m = q.shape[0]
+    S = pq_codes.codes.shape[0]
+    assert S % cell_cap == 0, (S, cell_cap)
+    ncells = S // cell_cap
+    K = T.next_pow2(k)
+    assert K <= cell_cap, (
+        f"fetch width K={K} exceeds the cell block ({cell_cap}); lower k or "
+        "rebuild with a larger cell_cap")
+    luts = build_pq_luts(pq_cb, q, distance=distance)
+    lut_flat = luts.reshape(m, pq_cb.m * pq_cb.ncodes)
+    hx = mf.hx(q).astype(jnp.float32)[:, None]
+    hy = pq_codes.hy.astype(jnp.float32)[None, :]
+    if packed_live is not None:
+        hy = jnp.where(packed_live[None, :], hy, T.POS_INF)
+    qc = (None if centroids is None
+          else pq_cell_bias(q, centroids, distance=distance))
+    tile_m = min(tile_m, T.next_pow2(max(m, 8)))
+    lut_flat = _pad_axis(lut_flat, tile_m, 0)
+    hx = _pad_axis(hx, tile_m, 0)
+    if qc is not None:
+        qc = _pad_axis(qc, tile_m, 0)
+    # Pad queries replicate the last row's probes: real cells, wider unions.
+    pad = lut_flat.shape[0] - m
+    if pad:
+        cells = jnp.concatenate([cells, jnp.broadcast_to(
+            cells[-1:], (pad, cells.shape[1]))], axis=0)
+    probes = tile_probe_lists(cells, ncells, tile_m)
+    vals, idx = _pq.pq_scan_pallas(
+        probes,
+        lut_flat,
+        pq_codes.codes.T,
+        hx,
+        hy,
+        k,
+        cell_cap=cell_cap,
+        ncodes=pq_cb.ncodes,
+        qc=qc,
+        distance=distance,
+        bm=tile_m,
+        threshold_skip=threshold_skip,
+        interpret=interpret,
+    )
+    return KNNResult(vals[:m, :k], idx[:m, :k])
+
+
+pq_scan = functools.partial(
+    jax.jit,
+    static_argnames=("k", "distance", "cell_cap", "tile_m",
+                     "threshold_skip", "interpret"),
+)(pq_scan_impl)
 
 
 @functools.partial(

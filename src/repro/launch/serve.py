@@ -22,6 +22,10 @@ Flags (see README.md "CLI reference"):
                     0 = flat scan, the default)
   --nprobe P        cells probed per query (>= C probes everything = exact
                     with a float32 scan)
+  --pq-m M          product-quantized ADC main-segment scan: M uint8 codes
+                    per row instead of d coordinates (DESIGN.md §PQ; needs
+                    --ivf-cells > 0 — the IVFADC recipe; 0 = off)
+  --pq-nbits B      bits per PQ code (codebook = 2^B words per subspace)
   --churn C         items upserted into the delta segment per batch (0 = off)
   --compact-every E compact() after every E batches (0 = never)
   --repeat-frac F   fraction of each batch drawn from repeat users (cache hits)
@@ -49,6 +53,11 @@ def main():
                     help="IVF cells for the main-segment scan (0 = flat)")
     ap.add_argument("--nprobe", type=int, default=8,
                     help="IVF cells probed per query")
+    ap.add_argument("--pq-m", type=int, default=0,
+                    help="PQ codes per row for the main-segment ADC scan "
+                         "(0 = off; needs --ivf-cells)")
+    ap.add_argument("--pq-nbits", type=int, default=8,
+                    help="bits per PQ code (2^nbits codewords per subspace)")
     ap.add_argument("--churn", type=int, default=0,
                     help="items upserted into the delta per batch")
     ap.add_argument("--compact-every", type=int, default=0)
@@ -80,7 +89,8 @@ def main():
     defaults.update(k=args.k, impl=args.impl, cache_capacity=args.cache,
                     max_batch=next_pow2(max(64, args.queries)),
                     scan_dtype=args.scan_dtype, overfetch=args.overfetch,
-                    ivf_cells=args.ivf_cells, nprobe=args.nprobe)
+                    ivf_cells=args.ivf_cells, nprobe=args.nprobe,
+                    pq_m=args.pq_m, pq_nbits=args.pq_nbits)
     mesh = None
     if args.mesh:
         from repro.launch.mesh import make_host_mesh

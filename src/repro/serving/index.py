@@ -40,7 +40,7 @@ import numpy as np
 
 from repro.core import topk as T
 from repro.core.distances import QUANTIZABLE, canonical_scan_dtype, quantize_rows
-from repro.core.knn import ivf_query, knn_query, two_stage_query
+from repro.core.knn import ivf_query, ivfpq_query, knn_query, two_stage_query
 
 Array = jnp.ndarray
 
@@ -89,6 +89,23 @@ def _segment_candidates_ivf(q, vecs, ivf, qrows, live, ids, *, k_out, nprobe,
     vals, idx = ivf_query(q, vecs, ivf, k_out, nprobe=nprobe,
                           distance=distance, impl=impl, overfetch=overfetch,
                           db_live=live, packed_q=qrows)
+    return _externalize(vals, idx, ids, k_out)
+
+
+@functools.partial(jax.jit, static_argnames=("k_out", "nprobe", "overfetch",
+                                             "distance", "impl"))
+def _segment_candidates_ivfpq(q, vecs, ivf, pq_cb, pq_codes, live, ids, *,
+                              k_out, nprobe, overfetch, distance, impl):
+    """IVF-PQ top-``k_out`` of one segment (DESIGN.md §PQ).
+
+    ``pq_cb``/``pq_codes`` are the segment's epoch-keyed residual-PQ replica
+    over its PACKED rows (``core.pq.build_ivfpq``); everything else matches
+    ``_segment_candidates_ivf`` — the live mask rides the packing
+    permutation, the rescore stage is exact fp32.
+    """
+    vals, idx = ivfpq_query(q, vecs, ivf, pq_cb, pq_codes, k_out,
+                            nprobe=nprobe, distance=distance, impl=impl,
+                            overfetch=overfetch, db_live=live)
     return _externalize(vals, idx, ids, k_out)
 
 
@@ -142,12 +159,23 @@ class RetrievalIndex:
     through the packing permutation and never retrain; the delta segment
     stays flat-scanned.  ``nprobe >= ivf_cells`` probes everything (exact
     with a fp32 scan).
+
+    ``pq_m``/``pq_nbits``: product-quantized ADC scan of the MAIN segment
+    (DESIGN.md §PQ; requires ``ivf_cells > 0`` — the IVFADC composition).
+    ``pq_m > 0`` trains residual-PQ codebooks over the cell-packed rows and
+    scans ``pq_m``-byte uint8 code rows instead of the ``scan_dtype``
+    replica (which the main scan then ignores); candidates still rescore
+    exactly in fp32.  Epoch policy is identical to IVF: build/compact
+    retrain codebooks + re-encode, tombstones never do, delta stays
+    flat-scanned fp32.  A main segment with fewer than 2^pq_nbits rows
+    cannot train a codebook and falls back to the plain IVF scan.
     """
 
     def __init__(self, dim: int, *, distance: str = "sqeuclidean",
                  impl: str = "jnp", mesh=None, db_axis: str = "model",
                  query_axis: str = "data", scan_dtype: str = "float32",
-                 overfetch: int = 4, ivf_cells: int = 0, nprobe: int = 8):
+                 overfetch: int = 4, ivf_cells: int = 0, nprobe: int = 8,
+                 pq_m: int = 0, pq_nbits: int = 8):
         self.dim = int(dim)
         self.distance = distance
         self.impl = impl
@@ -158,6 +186,8 @@ class RetrievalIndex:
         self.overfetch = int(overfetch)
         self.ivf_cells = int(ivf_cells)
         self.nprobe = int(nprobe)
+        self.pq_m = int(pq_m)
+        self.pq_nbits = int(pq_nbits)
         assert self.overfetch >= 1, overfetch
         assert self.ivf_cells >= 0 and self.nprobe >= 1, (ivf_cells, nprobe)
         if self.scan_dtype != "float32" and distance not in QUANTIZABLE:
@@ -168,6 +198,14 @@ class RetrievalIndex:
             raise ValueError(
                 f"ivf_cells needs a distance with a row-local gy map; "
                 f"{distance!r} is not in {QUANTIZABLE}")
+        if self.pq_m:
+            from repro.core.pq import _check_pq_geometry
+
+            if not self.ivf_cells:
+                raise ValueError(
+                    "pq_m needs a coarse quantizer: set ivf_cells > 0 "
+                    "(the IVFADC composition, DESIGN.md §PQ)")
+            _check_pq_geometry(self.dim, self.pq_m, self.pq_nbits)
         # Bumped only when the main segment's ROWS are replaced (build /
         # compact) — tombstones bump _version but must not trigger a replica
         # rebuild.
@@ -350,18 +388,36 @@ class RetrievalIndex:
                     self._main_vecs, self._effective_ncells(),
                     distance=self.distance, impl=self.impl,
                     seed=self._main_epoch)
-                # Scan replica of the PACKED rows — built for float32 too:
-                # a None would make the jnp scan path re-derive the gy/hy
-                # replica (an O(S·d) full-corpus pass) inside every query
-                # batch instead of once per epoch.
-                self._dev["main_ivf_q"] = quantize_rows(
-                    self._dev["main_ivf"].packed, self.scan_dtype,
-                    distance=self.distance)
+                if self._use_pq():
+                    # PQ replaces the scalar replica for the main scan:
+                    # residual codebooks + codes of the PACKED rows, same
+                    # epoch key (build/compact retrain; tombstones never).
+                    from repro.core.pq import build_ivfpq
+
+                    self._dev["main_pq"] = build_ivfpq(
+                        self._main_vecs, self._dev["main_ivf"], self.pq_m,
+                        nbits=self.pq_nbits, distance=self.distance,
+                        impl=self.impl, seed=self._main_epoch)
+                else:
+                    # Scan replica of the PACKED rows — built for float32
+                    # too: a None would make the jnp scan path re-derive the
+                    # gy/hy replica (an O(S·d) full-corpus pass) inside
+                    # every query batch instead of once per epoch.
+                    self._dev["main_ivf_q"] = quantize_rows(
+                        self._dev["main_ivf"].packed, self.scan_dtype,
+                        distance=self.distance)
                 self._dev_version["main_ivf"] = self._main_epoch
         return self._dev
 
     def _use_ivf(self) -> bool:
         return bool(self.ivf_cells) and self._effective_ncells() > 0
+
+    def _use_pq(self) -> bool:
+        # A codebook needs 2^nbits distinct init rows; a main segment below
+        # that serves through the plain IVF scan instead (never a truncated
+        # codebook — the LUT width is a compiled shape).
+        return (bool(self.pq_m) and self._use_ivf()
+                and len(self._main_vecs) >= 2 ** self.pq_nbits)
 
     def _effective_ncells(self) -> int:
         """``ivf_cells`` clamped so cells stay meaningfully populated.
@@ -446,6 +502,14 @@ class RetrievalIndex:
         vecs, live, ids = dev["main"]
         if self.mesh is not None:
             return self._main_candidates_sharded(q, k_out, dev)
+        if self._use_pq():
+            ivf = dev["main_ivf"]
+            pq_cb, pq_codes = dev["main_pq"]
+            return _segment_candidates_ivfpq(
+                q, vecs, ivf, pq_cb, pq_codes, live, ids, k_out=k_out,
+                nprobe=min(self.nprobe, ivf.ncells),
+                overfetch=self.overfetch, distance=self.distance,
+                impl=self.impl)
         if self._use_ivf():
             ivf = dev["main_ivf"]
             return _segment_candidates_ivf(
@@ -476,6 +540,8 @@ class RetrievalIndex:
         """
         from repro.core import distributed as KD
 
+        if self._use_pq():
+            return self._main_candidates_sharded_ivfpq(q, k_out, dev)
         if self._use_ivf():
             return self._main_candidates_sharded_ivf(q, k_out, dev)
         quant = self.scan_dtype != "float32"
@@ -484,7 +550,11 @@ class RetrievalIndex:
         P_q = int(self.mesh.shape[self.query_axis])
         n = len(self._main_vecs)
         n_pad = n + (-n) % P_db
-        key = (k_out, n_pad, self.mesh)
+        # The maker closes over the query-time knobs (overfetch here;
+        # nprobe too on the IVF paths), so they join the key — a caller
+        # tuning idx.overfetch between searches must get a fresh builder,
+        # not a silently stale closure (benchmarks/serving.py does this).
+        key = (k_out, n_pad, self.mesh, self.overfetch)
         fn = self._sharded_cache.get(key)
         if fn is None:
             fn = KD.make_query_sharded(
@@ -534,7 +604,8 @@ class RetrievalIndex:
         _, _, ids = dev["main"]
         ivf = dev["main_ivf"]
         quant = self.scan_dtype != "float32"
-        key = ("ivf", k_out, ivf.packed.shape[0], ivf.ncells, self.mesh)
+        key = ("ivf", k_out, ivf.packed.shape[0], ivf.ncells, self.mesh,
+               self.nprobe, self.overfetch)
         fn = self._sharded_cache.get(key)
         if fn is None:
             fn = KD.make_ivf_query_sharded(
@@ -556,5 +627,45 @@ class RetrievalIndex:
         qp = jnp.pad(q, ((0, m_pad - m), (0, 0)))
         vals, idx = fn(qp, ivf.centroids, ivf.packed, ivf.row_of_slot,
                        self._dev["main_ivf_live"], dev["main_ivf_q"])
+        vals, idx = vals[:m], idx[:m]
+        return _externalize(vals, idx, ids, k_out)
+
+    def _main_candidates_sharded_ivfpq(self, q, k_out, dev):
+        """Mesh + IVF-PQ: code blocks row-sharded, codebook replicated.
+
+        Identical sharding story to ``_main_candidates_sharded_ivf`` —
+        ``_effective_ncells`` already rounds cell count to the db-axis size,
+        so the uint8 code rows split on cell boundaries next to the fp32
+        packed rows (the rescore operand); the tombstone mask rides the
+        permutation keyed on the main VERSION.
+        """
+        from repro.core import distributed as KD
+        from repro.core.ivf import packed_live
+
+        _, _, ids = dev["main"]
+        ivf = dev["main_ivf"]
+        pq_cb, pq_codes = dev["main_pq"]
+        key = ("ivfpq", k_out, ivf.packed.shape[0], ivf.ncells, self.mesh,
+               self.nprobe, self.overfetch)
+        fn = self._sharded_cache.get(key)
+        if fn is None:
+            fn = KD.make_ivfpq_query_sharded(
+                self.mesh, query_axis=self.query_axis, db_axis=self.db_axis,
+                k=k_out, nprobe=min(self.nprobe, ivf.ncells),
+                cell_cap=ivf.cell_cap, distance=self.distance,
+                impl=self.impl, overfetch=self.overfetch,
+                wire_dtype=jnp.bfloat16)
+            self._sharded_cache[key] = fn
+        live_key = (self._version["main"], self._main_epoch)
+        if self._dev_version.get("main_ivf_live") != live_key:
+            self._dev["main_ivf_live"] = packed_live(
+                ivf, jnp.asarray(self._main_live))
+            self._dev_version["main_ivf_live"] = live_key
+        P_q = int(self.mesh.shape[self.query_axis])
+        m = q.shape[0]
+        m_pad = m + (-m) % P_q
+        qp = jnp.pad(q, ((0, m_pad - m), (0, 0)))
+        vals, idx = fn(qp, ivf.centroids, pq_cb, pq_codes, ivf.packed,
+                       ivf.row_of_slot, self._dev["main_ivf_live"])
         vals, idx = vals[:m], idx[:m]
         return _externalize(vals, idx, ids, k_out)

@@ -43,6 +43,11 @@ class ServiceConfig:
     # query (composes with scan_dtype — the IVFADC recipe).
     ivf_cells: int = 0
     nprobe: int = 8
+    # Product-quantized ADC scan of the main segment (DESIGN.md §PQ):
+    # 0 = off; > 0 stores pq_m uint8 codes per row (requires ivf_cells > 0 —
+    # residual PQ over the cell-packed layout, the full IVFADC).
+    pq_m: int = 0
+    pq_nbits: int = 8
 
 
 class TwoTowerRetrievalService:
@@ -68,7 +73,8 @@ class TwoTowerRetrievalService:
         self.index = RetrievalIndex(
             model_cfg.tower_mlp[-1], distance=svc.distance, impl=svc.impl,
             mesh=mesh, scan_dtype=svc.scan_dtype, overfetch=svc.overfetch,
-            ivf_cells=svc.ivf_cells, nprobe=svc.nprobe)
+            ivf_cells=svc.ivf_cells, nprobe=svc.nprobe, pq_m=svc.pq_m,
+            pq_nbits=svc.pq_nbits)
         self.engine = QueryEngine(
             self.index,
             EngineConfig(k=svc.k, min_batch=svc.min_batch,
@@ -115,7 +121,8 @@ class TwoTowerRetrievalService:
             item_ids, vecs, distance=self.svc.distance, impl=self.svc.impl,
             mesh=self.index.mesh, scan_dtype=self.svc.scan_dtype,
             overfetch=self.svc.overfetch, ivf_cells=self.svc.ivf_cells,
-            nprobe=self.svc.nprobe)
+            nprobe=self.svc.nprobe, pq_m=self.svc.pq_m,
+            pq_nbits=self.svc.pq_nbits)
         self.engine.index = self.index
         return vecs
 

@@ -72,6 +72,41 @@ def test_unquantizable_distance_raises():
         quantize_rows(y, "float16")  # not a scan dtype
 
 
+@hypothesis.settings(**SETTINGS)
+@hypothesis.given(seed=st.integers(0, 10_000),
+                  mode=st.sampled_from(["zero", "constant", "ragged"]),
+                  scan_dtype=st.sampled_from(["float32", "bfloat16", "int8"]))
+def test_quantize_rows_degenerate_inputs_finite(seed, mode, scan_dtype):
+    """All-zero rows, constant rows, and non-tile-multiple corpus sizes
+    quantize/dequantize without NaN/Inf, and the two-stage pipeline over
+    them returns finite distances (satellite contract next to the PQ edge
+    cases in tests/test_pq.py — int8's zero-row scale floors at eps/127
+    rather than dividing by zero)."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(3, 200))
+    d = int(rng.integers(2, 40))
+    if mode == "zero":
+        y = np.zeros((n, d), np.float32)
+    elif mode == "constant":
+        y = np.full((n, d), float(rng.choice([-4.0, 1e-7, 2.5])), np.float32)
+    else:
+        y = rng.standard_normal((n, d)).astype(np.float32)
+    qr = quantize_rows(jnp.asarray(y), scan_dtype)
+    assert np.isfinite(np.asarray(qr.data, np.float32)).all()
+    assert np.isfinite(np.asarray(qr.hy)).all()
+    if qr.scale is not None:
+        s = np.asarray(qr.scale)
+        assert np.isfinite(s).all() and (s > 0).all()
+    deq = np.asarray(dequantize_rows(qr))
+    assert np.isfinite(deq).all()
+    if mode == "zero":
+        np.testing.assert_array_equal(deq, y)
+    q = jnp.asarray(rng.standard_normal((4, d)).astype(np.float32))
+    res = two_stage_query(q, jnp.asarray(y), qr, min(5, n))
+    assert np.isfinite(np.asarray(res.distances)).all()
+    assert (np.asarray(res.indices) >= 0).all()
+
+
 # ---------------------------------------------------------------------------
 # rescore + two_stage_query
 # ---------------------------------------------------------------------------
