@@ -20,7 +20,8 @@ import sys
 import time
 
 
-SUITES = ("table1", "scaling", "kernels", "selection", "serving", "ivf", "pq")
+SUITES = ("table1", "scaling", "kernels", "selection", "serving", "ivf",
+          "pq", "snapshot")
 
 
 def run_suite(name: str, smoke: bool) -> None:
@@ -70,8 +71,89 @@ def run_suite(name: str, smoke: bool) -> None:
                              nprobes=(8,))
         else:
             serving.pq_sweep()
+    elif name == "snapshot":
+        from benchmarks import serving
+        if smoke:
+            serving.cold_start(corpus=2048, d=32, k=10, ncells=16, pq_m=8)
+        else:
+            serving.cold_start()
     else:
         raise SystemExit(f"unknown suite {name!r}; have {SUITES}")
+
+
+def _derived_value(row: dict, key: str) -> float | None:
+    """Parse ``key=<float>`` out of a row's ``derived`` field, else None."""
+    for part in row.get("derived", "").split(";"):
+        if part.startswith(key + "="):
+            try:
+                return float(part.split("=", 1)[1])
+            except ValueError:
+                return None
+    return None
+
+
+def compare_rows(rows: list, baseline_rows: list, tolerance: float) -> list:
+    """Perf regressions of ``rows`` vs a committed baseline (the CI gate).
+
+    Gated metrics are the serving-level ones the stack optimizes for:
+    ``qps`` (must not drop) and ``p99_ms`` (must not grow).  Two checks,
+    both calibrated against measured same-machine run-over-run noise
+    (single smoke rows move up to ~30%: p99 at CI sizes is a max over ~3
+    steady-state samples):
+
+    * **systemic** — the geometric-mean fresh/baseline ratio across ALL
+      matched rows of a metric must stay within ``tolerance``.  A real
+      regression in the shared scan/merge/select code moves every serving
+      row together, which is exactly what a geomean detects and what
+      single-row jitter cannot fake;
+    * **catastrophic** — any single row beyond ``3 * tolerance`` fails on
+      its own (a 75%+ move at the default is far outside noise even for a
+      suite-local regression, e.g. one sweep recompiling per batch).
+
+    Rows present on only one side are reported but never fail the run —
+    suites grow, and a new sweep must not need a baseline to land in the
+    same PR.  Raw ``us_per_call`` is NOT gated: kernel microbenches at CI
+    sizes are noise-dominated.  The comparison is absolute, so the
+    committed baseline must be refreshed when the runner class changes.
+    """
+    import math
+
+    base = {r["name"]: r for r in baseline_rows}
+    regressions = []
+    fresh_names = {r["name"] for r in rows}
+    rels: dict[str, list] = {"qps": [], "p99_ms": []}
+    for row in rows:
+        b = base.get(row["name"])
+        if b is None:
+            print(f"# compare: no baseline for {row['name']} (new row, "
+                  f"skipped)", file=sys.stderr)
+            continue
+        for key, direction in (("qps", -1), ("p99_ms", +1)):
+            bv, fv = _derived_value(b, key), _derived_value(row, key)
+            if bv is None or fv is None or bv <= 0 or fv <= 0:
+                continue
+            rel = (fv - bv) / bv * direction  # oriented: > 0 means worse
+            rels[key].append(rel)
+            if rel > 3 * tolerance:
+                regressions.append(
+                    (row["name"], key, round(bv, 3), round(fv, 3),
+                     f"{rel:+.0%}"))
+    for key in rels:
+        if not rels[key]:
+            continue
+        gm = math.exp(sum(math.log(max(1.0 + r, 1e-9)) for r in rels[key])
+                      / len(rels[key]))
+        print(f"# compare: {key} geomean drift {gm - 1:+.1%} over "
+              f"{len(rels[key])} rows (gate {tolerance:+.0%})",
+              file=sys.stderr)
+        if gm - 1 > tolerance:
+            regressions.append(
+                (f"<geomean of {len(rels[key])} rows>", key, 1.0,
+                 round(gm, 3), f"{gm - 1:+.0%}"))
+    for name in sorted(set(base) - fresh_names):
+        print(f"# compare: baseline row {name} missing from this run",
+              file=sys.stderr)
+    return regressions
 
 
 def check_recall_floor(rows: list, floor: float) -> list:
@@ -104,6 +186,13 @@ def main() -> None:
                     metavar="FLOOR",
                     help="fail the run if any swept recall@k lands below "
                          "FLOOR (the CI bench-smoke quality gate)")
+    ap.add_argument("--compare", default=None, metavar="BASELINE_JSON",
+                    help="diff this run against a committed BENCH json and "
+                         "fail on qps/p99 regressions beyond --tolerance "
+                         "(the CI bench regression gate)")
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    help="relative qps/p99 slack for --compare "
+                         "(default 0.25)")
     args = ap.parse_args()
     which = args.suites or list(SUITES)
     print("name,us_per_call,derived")
@@ -129,6 +218,20 @@ def main() -> None:
         if bad:
             raise SystemExit(
                 f"recall@k below the {args.recall_floor} floor: {bad}")
+    if args.compare is not None:
+        with open(args.compare) as f:
+            baseline = json.load(f)
+        regressions = compare_rows(common.ROWS, baseline["rows"],
+                                   args.tolerance)
+        if regressions:
+            lines = "\n".join(
+                f"  {name}: {key} {bv} -> {fv} ({rel} worse)"
+                for name, key, bv, fv, rel in regressions)
+            raise SystemExit(
+                f"perf regressions beyond ±{args.tolerance:.0%} vs "
+                f"{args.compare} (baseline {baseline['meta'].get('git_sha', '?')[:8]}):\n{lines}")
+        print(f"# compare: no qps/p99 regressions beyond "
+              f"±{args.tolerance:.0%} vs {args.compare}", file=sys.stderr)
 
 
 def _run_metadata() -> dict:

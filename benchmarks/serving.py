@@ -23,9 +23,14 @@ maps it as the "online retrieval" row).  Reports, in the standard
     modeled speedup vs the flat INT8 scan (the ADC compression claim rides
     on top of the scalar replica's best case).
 
+  * the cold-start measurement (DESIGN.md §Persistence,
+    ``benchmarks.run snapshot``): snapshot restore vs index retrain wall
+    clock, with the snapshot footprint and a bit-identical-results check.
+
 CLI: ``python -m benchmarks.serving --scan-dtype {float32,bf16,int8}`` runs
 one precision-sweep dtype end-to-end (plus the fp32 baseline it needs for
-recall); ``--ivf`` runs the IVF sweep instead; ``--pq`` the IVF-PQ sweep.
+recall); ``--ivf`` runs the IVF sweep instead; ``--pq`` the IVF-PQ sweep;
+``--cold-start`` the restore-vs-retrain measurement.
 """
 from __future__ import annotations
 
@@ -210,6 +215,65 @@ def pq_sweep(corpus: int = 8192, d: int = 64, k: int = 10,
                       queries=q, extra=extra)
 
 
+def cold_start(corpus: int = 8192, d: int = 64, k: int = 10,
+               ncells: int = 64, pq_m: int = 8, queries: int = 64):
+    """Restore-vs-retrain wall clock (DESIGN.md §Persistence).
+
+    The process-restart scenario: a trained index is either rebuilt from
+    vectors (k-means for the coarse quantizer + PQ codebook training +
+    encode — the dominant cold-start cost at scale) or restored from a
+    snapshot (pure load; zero training).  Emits, per config, build / save /
+    restore wall clocks with the restore speedup and the snapshot footprint,
+    and hard-checks the restored index serves BIT-identical results before
+    any number is reported.  Embedding-tower time is excluded on both sides
+    (the bench starts from vectors), so the speedup is the training-vs-load
+    ratio alone — the end-to-end gap is larger.
+    """
+    import os
+    import shutil
+    import tempfile
+
+    from repro.data.synthetic import clustered_vectors
+    from repro.serving import RetrievalIndex
+
+    vecs = clustered_vectors(corpus, d, seed=31)
+    q = clustered_vectors(queries, d, seed=32)
+    grid = [("flat", {}),
+            ("ivfpq", {"ivf_cells": ncells, "nprobe": 8, "pq_m": pq_m})]
+    tmp = tempfile.mkdtemp(prefix="repro-snap-")
+    try:
+        for tag, kw in grid:
+            if kw.get("pq_m") and d % kw["pq_m"]:
+                continue
+            t0 = time.perf_counter()
+            idx = RetrievalIndex.build(np.arange(corpus), vecs, **kw)
+            want = idx.search(q, k)  # forces training + device state
+            t_build = time.perf_counter() - t0
+
+            snap = os.path.join(tmp, tag)
+            t0 = time.perf_counter()
+            idx.save(snap)
+            t_save = time.perf_counter() - t0
+            mb = sum(os.path.getsize(os.path.join(snap, f))
+                     for f in os.listdir(snap)) / 1e6
+
+            t0 = time.perf_counter()
+            r = RetrievalIndex.restore(snap)
+            got = r.search(q, k)
+            t_restore = time.perf_counter() - t0
+            identical = (np.array_equal(np.asarray(want.ids),
+                                        np.asarray(got.ids))
+                         and np.array_equal(np.asarray(want.distances),
+                                            np.asarray(got.distances)))
+            assert identical, f"restored {tag} index is not bit-identical"
+            emit(f"serving_cold_{tag}_build", t_build, f"rows={corpus};d={d}")
+            emit(f"serving_cold_{tag}_save", t_save, f"snapshot_mb={mb:.1f}")
+            emit(f"serving_cold_{tag}_restore", t_restore,
+                 f"x_build={t_build / t_restore:.1f};identical=1")
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
 def main(corpus: int = 8192, d: int = 64, k: int = 10,
          batch_sizes=(8, 64, 256), batches: int = 12, churn: int = 512,
          scan_dtypes=("float32", "bfloat16", "int8"), overfetch: int = 4):
@@ -256,6 +320,9 @@ if __name__ == "__main__":
                     help="run the IVF cell-probed sweep instead")
     ap.add_argument("--pq", action="store_true",
                     help="run the IVF-PQ (pq_m, overfetch, nprobe) sweep")
+    ap.add_argument("--cold-start", action="store_true",
+                    help="measure snapshot restore vs index retrain wall "
+                         "clock (DESIGN.md §Persistence)")
     ap.add_argument("--corpus", type=int, default=8192)
     ap.add_argument("--d", type=int, default=64)
     ap.add_argument("--k", type=int, default=10)
@@ -265,7 +332,9 @@ if __name__ == "__main__":
     ap.add_argument("--nprobe", type=int, default=8)
     a = ap.parse_args()
     print("name,us_per_call,derived")
-    if a.pq:
+    if a.cold_start:
+        cold_start(a.corpus, a.d, a.k, ncells=a.ivf_cells)
+    elif a.pq:
         pq_sweep(a.corpus, a.d, a.k, (8, 64, 256), a.batches,
                  ncells=a.ivf_cells)
     elif a.ivf:

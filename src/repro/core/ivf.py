@@ -182,6 +182,52 @@ def build_ivf(
     return pack_cells(x, cent, assign, cell_cap=cell_cap)
 
 
+def ivf_to_arrays(ivf: IVFCells) -> dict[str, np.ndarray]:
+    """Host-side array dict of a trained IVF structure (snapshot payload)."""
+    return {f: np.asarray(getattr(ivf, f)) for f in IVFCells._fields}
+
+
+def ivf_from_arrays(arrays: dict) -> IVFCells:
+    """Rebuild + validate an ``IVFCells`` from ``ivf_to_arrays`` output.
+
+    Validation is structural, not statistical: the permutation must
+    round-trip and the geometry must cohere, so a corrupted snapshot fails
+    here instead of mis-externalizing scan results (DESIGN.md §Persistence).
+    Raises ``ValueError`` — callers (``serving.snapshot``) wrap it.
+    """
+    missing = [f for f in IVFCells._fields if f not in arrays]
+    if missing:
+        raise ValueError(f"IVF snapshot missing fields {missing}")
+    cent = np.asarray(arrays["centroids"], np.float32)
+    packed = np.asarray(arrays["packed"], np.float32)
+    row_of_slot = np.asarray(arrays["row_of_slot"], np.int32)
+    slot_of_row = np.asarray(arrays["slot_of_row"], np.int32)
+    counts = np.asarray(arrays["counts"], np.int32)
+    ncells, d = cent.shape
+    S, n = packed.shape[0], slot_of_row.shape[0]
+    if S == 0 or S % ncells or packed.shape[1] != d:
+        raise ValueError(
+            f"packed shape {packed.shape} incoherent with centroids {cent.shape}")
+    cap = S // ncells
+    if cap & (cap - 1) or cap < MIN_CELL_CAP:
+        raise ValueError(f"cell_cap {cap} not a pow2 >= {MIN_CELL_CAP}")
+    if row_of_slot.shape != (S,) or counts.shape != (ncells,):
+        raise ValueError(
+            f"permutation/count shapes {row_of_slot.shape}/{counts.shape} "
+            f"incoherent with packed {packed.shape}")
+    if not ((slot_of_row >= 0) & (slot_of_row < S)).all():
+        raise ValueError("slot_of_row out of packed range")
+    if (row_of_slot[slot_of_row] != np.arange(n, dtype=np.int32)).any():
+        raise ValueError("slot_of_row / row_of_slot do not round-trip")
+    if int(counts.sum()) != n or int(counts.max(initial=0)) > cap:
+        raise ValueError(f"counts (sum {counts.sum()}) incoherent with "
+                         f"n={n}, cell_cap={cap}")
+    return IVFCells(
+        centroids=jnp.asarray(cent), packed=jnp.asarray(packed),
+        row_of_slot=jnp.asarray(row_of_slot),
+        slot_of_row=jnp.asarray(slot_of_row), counts=jnp.asarray(counts))
+
+
 def packed_live(ivf: IVFCells, db_live: Array | None = None) -> Array:
     """Bool [ncells * cell_cap] live mask in packed-slot order.
 

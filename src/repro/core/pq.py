@@ -216,6 +216,46 @@ def build_ivfpq(
     return cb, PQCodes(codes, hy)
 
 
+def pq_to_arrays(cb: PQCodebook, codes: PQCodes) -> dict:
+    """Host-side array dict of a trained PQ replica (snapshot payload)."""
+    import numpy as np
+
+    return {"codebooks": np.asarray(cb.codebooks),
+            "codes": np.asarray(codes.codes), "hy": np.asarray(codes.hy)}
+
+
+def pq_from_arrays(arrays: dict) -> tuple[PQCodebook, PQCodes]:
+    """Rebuild + validate (PQCodebook, PQCodes) from ``pq_to_arrays`` output.
+
+    Structural checks only (geometry, dtypes, code range) — a corrupted
+    snapshot must fail here rather than index past the codebook inside the
+    ADC scan.  Raises ``ValueError``; ``serving.snapshot`` wraps it.
+    """
+    import numpy as np
+
+    missing = [f for f in ("codebooks", "codes", "hy") if f not in arrays]
+    if missing:
+        raise ValueError(f"PQ snapshot missing fields {missing}")
+    cbs = np.asarray(arrays["codebooks"], np.float32)
+    codes = np.asarray(arrays["codes"])
+    hy = np.asarray(arrays["hy"], np.float32)
+    if cbs.ndim != 3:
+        raise ValueError(f"codebooks must be [m, ncodes, dsub], got {cbs.shape}")
+    m, ncodes, _ = cbs.shape
+    if ncodes & (ncodes - 1) or not 2 <= ncodes <= 256:
+        raise ValueError(f"ncodes {ncodes} not a pow2 in [2, 256]")
+    if codes.dtype != np.uint8 or codes.ndim != 2 or codes.shape[1] != m:
+        raise ValueError(
+            f"codes must be uint8 [n, m={m}], got {codes.dtype} {codes.shape}")
+    if hy.shape != (codes.shape[0],):
+        raise ValueError(f"hy shape {hy.shape} != ({codes.shape[0]},)")
+    if ncodes < 256 and int(codes.max(initial=0)) >= ncodes:
+        raise ValueError(
+            f"code id {int(codes.max())} out of codebook range {ncodes}")
+    return (PQCodebook(jnp.asarray(cbs)),
+            PQCodes(jnp.asarray(codes), jnp.asarray(hy)))
+
+
 @functools.partial(jax.jit, static_argnames=("distance",))
 def build_pq_luts(cb: PQCodebook, queries: Array, *,
                   distance: str = "sqeuclidean") -> Array:

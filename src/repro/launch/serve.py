@@ -32,6 +32,10 @@ Flags (see README.md "CLI reference"):
   --cache N         user embedding cache capacity (0 disables)
   --mesh            shard the main segment over the host mesh (query-sharded
                     butterfly scoring — the paper's multi-device serving path)
+  --snapshot-dir D  persist the index under D after the corpus build
+                    (DESIGN.md §Persistence: versioned, atomic, CRC-stamped)
+  --restore         cold-start from the --snapshot-dir snapshot instead of
+                    re-embedding + retraining (prints the wall-clock saved)
   --seed S
 """
 from __future__ import annotations
@@ -67,8 +71,15 @@ def main():
     ap.add_argument("--mesh", action="store_true",
                     help="shard the main segment over the host mesh and score "
                          "it with the query-sharded butterfly path")
+    ap.add_argument("--snapshot-dir", default=None,
+                    help="persist the built index here (DESIGN.md §Persistence)")
+    ap.add_argument("--restore", action="store_true",
+                    help="cold-start from --snapshot-dir instead of "
+                         "re-embedding + retraining")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    if args.restore and not args.snapshot_dir:
+        ap.error("--restore needs --snapshot-dir")
 
     import jax
     import numpy as np
@@ -90,7 +101,8 @@ def main():
                     max_batch=next_pow2(max(64, args.queries)),
                     scan_dtype=args.scan_dtype, overfetch=args.overfetch,
                     ivf_cells=args.ivf_cells, nprobe=args.nprobe,
-                    pq_m=args.pq_m, pq_nbits=args.pq_nbits)
+                    pq_m=args.pq_m, pq_nbits=args.pq_nbits,
+                    snapshot_dir=args.snapshot_dir)
     mesh = None
     if args.mesh:
         from repro.launch.mesh import make_host_mesh
@@ -100,14 +112,37 @@ def main():
     svc = TwoTowerRetrievalService(values, cfg, ServiceConfig(**defaults),
                                    mesh=mesh)
 
-    # Offline: embed + pack the corpus.
+    # Offline: embed + pack the corpus — or restore a snapshot and skip the
+    # whole pass (the cold-start path, DESIGN.md §Persistence).
+    import time
+
     rng = np.random.default_rng(args.seed)
     item_lim = min(cfg.i_sizes())
     user_lim = min(cfg.u_sizes())
     corpus_fields = rng.integers(
         0, item_lim, size=(args.corpus, cfg.n_item_fields)).astype(np.int32)
-    svc.build_corpus(np.arange(args.corpus), corpus_fields)
-    print(f"[serve] corpus embedded + indexed: {len(svc.index)} x {svc.index.dim}")
+    if args.restore:
+        t0 = time.perf_counter()
+        svc.restore_index()
+        print(f"[serve] restored {len(svc.index)} x {svc.index.dim} from "
+              f"{args.snapshot_dir} in {time.perf_counter() - t0:.2f}s "
+              f"(no embedding, no training)")
+    else:
+        t0 = time.perf_counter()
+        svc.build_corpus(np.arange(args.corpus), corpus_fields)
+        t_build = time.perf_counter() - t0
+        print(f"[serve] corpus embedded + indexed: {len(svc.index)} x "
+              f"{svc.index.dim} in {t_build:.2f}s")
+        if args.snapshot_dir:
+            # save() finalizes any lazily-pending IVF/PQ training first, so
+            # this wall clock includes it — which is exactly the work a
+            # later --restore run skips (benchmarks.serving --cold-start
+            # separates the two).
+            t0 = time.perf_counter()
+            svc.save_index()
+            print(f"[serve] snapshot -> {args.snapshot_dir} in "
+                  f"{time.perf_counter() - t0:.2f}s (--restore skips the "
+                  f"embedding pass and all IVF/PQ training)")
 
     # Online: batches of user queries with optional churn/compaction.
     n_users = 4 * args.queries

@@ -9,11 +9,14 @@ Layering (each importable on its own):
   cache.py    EmbeddingCache — LRU for repeat-query embeddings.
   service.py  TwoTowerRetrievalService — towers + index + engine + cache,
               the end-to-end recommender flow.
+  snapshot.py versioned on-disk save/restore of the full index state —
+              restart without re-embedding or retraining (§Persistence).
 """
 from repro.serving.cache import EmbeddingCache
 from repro.serving.engine import EngineConfig, QueryEngine
 from repro.serving.index import RetrievalIndex, SearchResult
 from repro.serving.service import ServiceConfig, TwoTowerRetrievalService
+from repro.serving.snapshot import SnapshotError
 
 __all__ = [
     "EmbeddingCache",
@@ -22,5 +25,6 @@ __all__ = [
     "RetrievalIndex",
     "SearchResult",
     "ServiceConfig",
+    "SnapshotError",
     "TwoTowerRetrievalService",
 ]

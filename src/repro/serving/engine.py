@@ -67,6 +67,20 @@ class QueryEngine:
         self._seen_shapes: set = set()
         self._live_main: int | None = None
 
+    def rebind(self, index: RetrievalIndex) -> None:
+        """Point the engine at a replacement index (rebuild or restore).
+
+        Drops the compile-tracking state: the old index's shape-signature
+        keys are meaningless against a new object, and keeping them would
+        mis-tag the new index's first batches as warm (skewing steady-state
+        p50/p99) or strand keys forever.  Pending queue entries survive —
+        they are vectors, not index state.
+        """
+        assert index.dim == self.index.dim, (index.dim, self.index.dim)
+        self.index = index
+        self._seen_shapes = set()
+        self._live_main = None
+
     # -- batched search -----------------------------------------------------
 
     def _bucket(self, m: int) -> int:

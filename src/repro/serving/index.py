@@ -241,6 +241,40 @@ class RetrievalIndex:
         idx._main_epoch += 1
         return idx
 
+    # -- persistence (DESIGN.md §Persistence) --------------------------------
+
+    def save(self, directory: str, *, include_replicas: bool = True,
+             extra: dict | None = None) -> str:
+        """Snapshot the full index state under ``directory``.
+
+        Versioned, atomic, integrity-stamped — see ``serving.snapshot``.
+        ``include_replicas=False`` omits the scalar quantized-scan replicas
+        (they are deterministic maps, rebuilt on load); trained IVF/PQ state
+        is always included — that is the point of the snapshot.  ``extra``
+        rides in the manifest verbatim (callers pin provenance there, e.g.
+        the service's tower-params fingerprint).
+        """
+        from repro.serving.snapshot import save_index
+
+        return save_index(self, directory, include_replicas=include_replicas,
+                          extra=extra)
+
+    @classmethod
+    def restore(cls, directory: str, *, mesh=None, db_axis: str = "model",
+                query_axis: str = "data",
+                impl: str | None = None) -> "RetrievalIndex":
+        """Rebuild an index from a snapshot with ZERO training work.
+
+        The snapshot's config/shape signature is hard-checked (a mismatch
+        raises ``serving.snapshot.SnapshotError``, never a mis-scanning
+        index); searches on the restored index are bit-identical to the
+        source's.  ``mesh`` is runtime state and passed here, not restored.
+        """
+        from repro.serving.snapshot import restore_index
+
+        return restore_index(directory, mesh=mesh, db_axis=db_axis,
+                             query_axis=query_axis, impl=impl)
+
     def _check_ids(self, ids, vectors) -> np.ndarray:
         ids = np.asarray(ids, np.int64)
         assert vectors.shape == (len(ids), self.dim), (vectors.shape, len(ids))

@@ -48,6 +48,9 @@ class ServiceConfig:
     # residual PQ over the cell-packed layout, the full IVFADC).
     pq_m: int = 0
     pq_nbits: int = 8
+    # Default snapshot location for save_index()/restore_index() (DESIGN.md
+    # §Persistence); None = callers pass a directory explicitly.
+    snapshot_dir: str | None = None
 
 
 class TwoTowerRetrievalService:
@@ -123,8 +126,76 @@ class TwoTowerRetrievalService:
             overfetch=self.svc.overfetch, ivf_cells=self.svc.ivf_cells,
             nprobe=self.svc.nprobe, pq_m=self.svc.pq_m,
             pq_nbits=self.svc.pq_nbits)
-        self.engine.index = self.index
+        self.engine.rebind(self.index)
         return vecs
+
+    # -- persistence: skip re-embedding + retraining on restart -------------
+
+    def _params_fingerprint(self) -> str:
+        """Streaming CRC32 over the tower parameters, leaf by leaf.
+
+        A corpus snapshot is only meaningful against the towers that
+        embedded it — serving user embeddings from different params against
+        restored item vectors would be silently meaningless rankings.  The
+        fingerprint rides in the snapshot manifest and is hard-checked at
+        ``restore_index`` time.
+        """
+        import zlib
+
+        import jax
+
+        crc = 0
+        for leaf in jax.tree.leaves(self.values):
+            a = np.asarray(leaf)
+            crc = zlib.crc32(str((a.shape, str(a.dtype))).encode(), crc)
+            crc = zlib.crc32(a.tobytes(), crc)
+        return f"{crc:08x}"
+
+    def save_index(self, directory: str | None = None) -> str:
+        """Snapshot the index (DESIGN.md §Persistence); default location is
+        ``ServiceConfig.snapshot_dir``.  The manifest records this service's
+        tower-params fingerprint so the snapshot can't silently be served
+        against a different model."""
+        directory = directory if directory is not None else self.svc.snapshot_dir
+        assert directory, "pass a directory or set ServiceConfig.snapshot_dir"
+        return self.index.save(
+            directory, extra={"params_crc32": self._params_fingerprint()})
+
+    def restore_index(self, directory: str | None = None) -> None:
+        """Swap in an index restored from a snapshot — no embedding pass, no
+        k-means/PQ training.
+
+        The snapshot's recorded config must MATCH this service's retrieval
+        knobs, and its params fingerprint (when present) this service's
+        towers — a snapshot built for a different scan/probe configuration
+        or embedded by a different model would serve different results than
+        a fresh ``build_corpus``: hard fail, never silently diverge.
+        """
+        from repro.serving.snapshot import (SnapshotError, config_signature,
+                                            read_manifest)
+
+        directory = directory if directory is not None else self.svc.snapshot_dir
+        assert directory, "pass a directory or set ServiceConfig.snapshot_dir"
+        # Manifest-only peek (verify=False): the full CRC pass runs once,
+        # inside RetrievalIndex.restore below.
+        manifest = read_manifest(directory, verify=False)
+        stored = manifest["config"]
+        want = dict(config_signature(self.index))
+        if stored != want:
+            diff = {k: (stored.get(k), want[k]) for k in want
+                    if stored.get(k) != want[k]}
+            raise SnapshotError(
+                f"snapshot config does not match ServiceConfig "
+                f"(snapshot, service): {diff}")
+        stored_fp = manifest.get("extra", {}).get("params_crc32")
+        if stored_fp is not None and stored_fp != self._params_fingerprint():
+            raise SnapshotError(
+                f"snapshot was embedded by a different model: params "
+                f"fingerprint {stored_fp} != this service's "
+                f"{self._params_fingerprint()} (same --seed / checkpoint?)")
+        self.index = RetrievalIndex.restore(
+            directory, mesh=self.index.mesh, impl=self.svc.impl)
+        self.engine.rebind(self.index)
 
     # -- online: item ingest (delta segment) --------------------------------
 

@@ -1,0 +1,438 @@
+"""Versioned snapshot/restore of a RetrievalIndex (DESIGN.md §Persistence).
+
+At serving scale the dominant cold-start cost is not loading bytes — it is
+re-running everything *derived* from them: the corpus embedding pass, the
+Lloyd k-means that trains the IVF coarse quantizer, and the per-subspace PQ
+codebook training + re-encode.  The production split (FAISS's
+``write_index``/``read_index``) treats trained quantizer state as an
+artifact: build once, serve from a pure load-and-scan path.  This module is
+that split for ``RetrievalIndex``.
+
+Layout on disk::
+
+    <dir>/manifest.json     format version + config/shape/dtype signature +
+                            per-file byte counts and CRCs (written LAST)
+    <dir>/main.npz          packed main segment: vecs, ids, live mask
+    <dir>/journal.bin       delta segment as an append-only framed journal
+    <dir>/ivf.npz           trained IVFCells (centroids + packed layout +
+                            both permutations + counts), when configured
+    <dir>/pq.npz            PQ codebooks + codes + decoded-row hy, when
+                            configured
+    <dir>/replica.npz       scalar quantized-scan replicas (optional:
+                            ``include_replicas=False`` rebuilds them on load
+                            — quantization is deterministic, not training)
+
+Guarantees:
+
+* **Atomic**: the snapshot is written to ``<dir>.tmp-<pid>`` and renamed;
+  the manifest carries ``complete: true`` and is written last, so a crash
+  mid-save never yields a directory that ``restore`` accepts.
+* **Hard-fail on mismatch**: ``restore`` verifies the format version, the
+  config/shape/dtype signature, and a CRC32 + byte count per segment file
+  BEFORE constructing anything.  A truncated npz, a manifest from a future
+  format, or arrays that disagree with the recorded geometry raise
+  ``SnapshotError`` — never a silently mis-scanning index.
+* **Zero training on restore**: the IVF structure and PQ codebooks/codes are
+  loaded, not retrained — ``core.kmeans.lloyd`` is never entered
+  (tests/test_snapshot.py pins this by making it raise).  Epoch bookkeeping
+  (``_main_epoch``) resumes from the manifest so ``shape_signature`` and the
+  per-epoch device caches behave exactly like the source index's.
+* **Bit-identical search**: every array the scan consumes is restored
+  byte-for-byte (or recomputed by a deterministic, training-free map), so a
+  restored index returns bit-identical ``SearchResult`` values AND ids.
+
+The delta segment is persisted as a *journal*: length-prefixed, CRC-framed
+``add``/``del`` records replayed through the index's own mutation path on
+restore.  Framing is append-only by construction — a future incremental mode
+can extend an existing journal without rewriting the main segment (ROADMAP:
+journal compaction).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import struct
+import zlib
+from typing import IO
+
+import jax.numpy as jnp
+import numpy as np
+
+FORMAT_VERSION = 1
+_MANIFEST = "manifest.json"
+_MAIN = "main.npz"
+_JOURNAL = "journal.bin"
+_IVF = "ivf.npz"
+_PQ = "pq.npz"
+_REPLICA = "replica.npz"
+
+_JOURNAL_MAGIC = b"RPJL0001"
+_REC_HEADER = struct.Struct("<4sII")  # tag, payload bytes, payload crc32
+
+# The knobs that determine what a search computes — two indexes with equal
+# signatures scan identically.  Recorded in the manifest and hard-checked on
+# restore (and by the service layer against its ServiceConfig).
+_CONFIG_KEYS = ("dim", "distance", "scan_dtype", "overfetch", "ivf_cells",
+                "nprobe", "pq_m", "pq_nbits")
+
+
+class SnapshotError(RuntimeError):
+    """A snapshot that must not be served: version/signature/integrity."""
+
+
+# -- journal framing ---------------------------------------------------------
+
+
+def _write_record(f: IO[bytes], tag: bytes, arrays: dict) -> None:
+    import io
+
+    buf = io.BytesIO()
+    np.savez(buf, **arrays)
+    payload = buf.getvalue()
+    f.write(_REC_HEADER.pack(tag, len(payload), zlib.crc32(payload)))
+    f.write(payload)
+
+
+def _read_records(path: str) -> list[tuple[bytes, dict]]:
+    """Parse a journal file; raise SnapshotError on any torn/corrupt frame."""
+    import io
+
+    with open(path, "rb") as f:
+        data = f.read()
+    if data[: len(_JOURNAL_MAGIC)] != _JOURNAL_MAGIC:
+        raise SnapshotError(f"journal magic mismatch in {path}")
+    pos, out = len(_JOURNAL_MAGIC), []
+    while pos < len(data):
+        if pos + _REC_HEADER.size > len(data):
+            raise SnapshotError(f"truncated journal header at byte {pos}")
+        tag, nbytes, crc = _REC_HEADER.unpack_from(data, pos)
+        pos += _REC_HEADER.size
+        payload = data[pos : pos + nbytes]
+        if len(payload) != nbytes:
+            raise SnapshotError(f"truncated journal payload at byte {pos}")
+        if zlib.crc32(payload) != crc:
+            raise SnapshotError(f"journal record CRC mismatch at byte {pos}")
+        with np.load(io.BytesIO(payload)) as z:
+            out.append((tag, {k: z[k] for k in z.files}))
+        pos += nbytes
+    return out
+
+
+# -- save --------------------------------------------------------------------
+
+
+def _npz_atomic(path: str, arrays: dict) -> None:
+    # np.savez appends .npz to names without it; write the exact path.
+    with open(path, "wb") as f:
+        np.savez(f, **arrays)
+
+
+def _file_stamp(path: str) -> dict:
+    """Byte count + streaming CRC32 — never the whole file in memory (a
+    main segment at the scale this module cites is multi-GB)."""
+    crc, nbytes = 0, 0
+    with open(path, "rb") as f:
+        while chunk := f.read(1 << 22):
+            crc = zlib.crc32(chunk, crc)
+            nbytes += len(chunk)
+    return {"bytes": nbytes, "crc32": crc}
+
+
+def save_index(idx, directory: str, *, include_replicas: bool = True,
+               extra: dict | None = None) -> str:
+    """Snapshot ``idx`` (a ``serving.index.RetrievalIndex``) under ``directory``.
+
+    Returns the final snapshot path.  The write is atomic (tmp + rename): an
+    existing snapshot at ``directory`` is replaced only once the new one is
+    complete on disk.  ``extra`` is caller metadata carried verbatim in the
+    manifest (the service layer stores a tower-params fingerprint there, so
+    a snapshot cannot be served against a different model).
+    """
+    tmp = directory.rstrip("/") + f".tmp-{os.getpid()}"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    files: dict[str, dict] = {}
+
+    _npz_atomic(os.path.join(tmp, _MAIN), {
+        "vecs": idx._main_vecs, "ids": idx._main_ids, "live": idx._main_live,
+    })
+    files[_MAIN] = _file_stamp(os.path.join(tmp, _MAIN))
+
+    # Delta journal: one bulk `add` of the rows in write-head order — replay
+    # reproduces the same pow2 capacity and `_loc` ordering the incremental
+    # appends produced.  Liveness rides per ROW (not per id): an id upserted
+    # twice inside the delta owns a dead row and a live row under the same
+    # key, so a by-id delete replay would kill the wrong one.
+    n = idx._delta_n
+    with open(os.path.join(tmp, _JOURNAL), "wb") as f:
+        f.write(_JOURNAL_MAGIC)
+        if n:
+            _write_record(f, b"ADD\0", {
+                "ids": idx._delta_ids[:n], "vecs": idx._delta_vecs[:n],
+                "live": idx._delta_live[:n],
+            })
+    files[_JOURNAL] = _file_stamp(os.path.join(tmp, _JOURNAL))
+
+    # Trained structures: persisted from the live device cache when it is
+    # current, else (re)built once here — a snapshot must never carry a
+    # stale epoch's quantizer.
+    dev = idx._device_state() if len(idx._main_vecs) else {}
+    if idx._use_ivf():
+        from repro.core.ivf import ivf_to_arrays
+
+        _npz_atomic(os.path.join(tmp, _IVF), ivf_to_arrays(dev["main_ivf"]))
+        files[_IVF] = _file_stamp(os.path.join(tmp, _IVF))
+    if idx._use_pq():
+        from repro.core.pq import pq_to_arrays
+
+        _npz_atomic(os.path.join(tmp, _PQ), pq_to_arrays(*dev["main_pq"]))
+        files[_PQ] = _file_stamp(os.path.join(tmp, _PQ))
+    if include_replicas:
+        reps = {}
+        for key in ("main_q", "main_ivf_q"):
+            q = dev.get(key)
+            if q is not None:
+                reps[f"{key}.data"] = np.asarray(q.data)
+                reps[f"{key}.hy"] = np.asarray(q.hy)
+                if q.scale is not None:
+                    reps[f"{key}.scale"] = np.asarray(q.scale)
+        if reps:
+            _npz_atomic(os.path.join(tmp, _REPLICA), reps)
+            files[_REPLICA] = _file_stamp(os.path.join(tmp, _REPLICA))
+
+    manifest = {
+        "format_version": FORMAT_VERSION,
+        "config": config_signature(idx),
+        "impl": idx.impl,
+        "main_epoch": idx._main_epoch,
+        "rows": {"main": len(idx._main_vecs), "delta": int(n),
+                 "live": len(idx)},
+        "include_replicas": bool(include_replicas),
+        "extra": dict(extra) if extra else {},
+        "files": files,
+        "complete": True,
+    }
+    with open(os.path.join(tmp, _MANIFEST), "w") as f:
+        json.dump(manifest, f, indent=1)
+    # Replace-by-rename, never delete-then-rename: a crash between the two
+    # must leave SOME restorable snapshot — the old image moves aside, the
+    # new one renames in, and only then is the old one reaped.  (A crash in
+    # the window leaves the old image at .old-<pid>: recoverable by hand,
+    # vs. an empty path which defeats the module's whole purpose.)
+    old = None
+    if os.path.exists(directory):
+        old = directory.rstrip("/") + f".old-{os.getpid()}"
+        if os.path.exists(old):
+            shutil.rmtree(old)
+        os.rename(directory, old)
+    os.rename(tmp, directory)
+    if old is not None:
+        shutil.rmtree(old)
+    return directory
+
+
+def config_signature(idx) -> dict:
+    """The search-determining knobs of ``idx`` (manifest ``config`` block)."""
+    return {k: getattr(idx, k) for k in _CONFIG_KEYS}
+
+
+# -- restore -----------------------------------------------------------------
+
+
+def read_manifest(directory: str, *, verify: bool = True) -> dict:
+    """Load + version-check a snapshot manifest (no arrays yet).
+
+    ``verify=True`` additionally CRC-checks every segment file (streaming,
+    constant memory).  Pass ``verify=False`` for manifest-only peeks — e.g.
+    the service's config pre-check, which would otherwise pay the full
+    segment read twice per restore.
+    """
+    path = os.path.join(directory, _MANIFEST)
+    try:
+        with open(path) as f:
+            manifest = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        raise SnapshotError(f"unreadable snapshot manifest {path}: {e}") from e
+    if not manifest.get("complete"):
+        raise SnapshotError(f"incomplete snapshot (torn save?) at {directory}")
+    ver = manifest.get("format_version")
+    if ver != FORMAT_VERSION:
+        raise SnapshotError(
+            f"snapshot format_version {ver} != supported {FORMAT_VERSION}; "
+            f"re-save the index with this tree (no silent cross-version read)")
+    if not verify:
+        return manifest
+    for name, stamp in manifest["files"].items():
+        fpath = os.path.join(directory, name)
+        try:
+            got = _file_stamp(fpath)
+        except OSError as e:
+            raise SnapshotError(f"missing snapshot segment {name}: {e}") from e
+        if got != stamp:
+            raise SnapshotError(
+                f"snapshot segment {name} corrupted/truncated: "
+                f"expected {stamp}, found {got}")
+    return manifest
+
+
+def restore_index(directory: str, *, mesh=None, db_axis: str = "model",
+                  query_axis: str = "data", impl: str | None = None):
+    """Rebuild a ``RetrievalIndex`` from a snapshot — zero training work.
+
+    ``mesh`` is runtime state, never serialized; pass the serving mesh here
+    (the stored cell count must divide its db-axis size, else SnapshotError —
+    a cell-block layout cannot be resharded without retraining).  ``impl``
+    optionally overrides the scorer backend ("jnp"/"fused"): it changes how
+    tiles are computed, not what the index contains.
+    """
+    from repro.serving.index import RetrievalIndex
+
+    manifest = read_manifest(directory)
+    cfg = dict(manifest["config"])
+    dim = cfg.pop("dim")
+    idx = RetrievalIndex(
+        dim, impl=impl if impl is not None else manifest.get("impl", "jnp"),
+        mesh=mesh, db_axis=db_axis, query_axis=query_axis, **cfg)
+
+    with np.load(os.path.join(directory, _MAIN)) as z:
+        vecs, ids, live = z["vecs"], z["ids"], z["live"]
+    _expect(vecs.shape == (len(ids), dim) and vecs.dtype == np.float32,
+            f"main segment shape/dtype mismatch: {vecs.shape} {vecs.dtype} "
+            f"vs dim={dim}")
+    _expect(live.shape == (len(ids),) and live.dtype == bool,
+            f"main live-mask mismatch: {live.shape} {live.dtype}")
+    _expect(len(ids) == manifest["rows"]["main"],
+            f"main rows {len(ids)} != manifest {manifest['rows']['main']}")
+    idx._main_vecs = np.ascontiguousarray(vecs)
+    idx._main_ids = ids.astype(np.int32)
+    idx._main_live = live.copy()
+    idx._loc = {int(i): ("main", r) for r, i in enumerate(ids) if live[r]}
+    idx._bump("main")
+    # Resume the epoch counter, not restart it: the epoch keys every derived
+    # device-side structure AND seeds any future retrain, so a restored index
+    # must continue the source's sequence for its caches (and its next
+    # compact) to behave identically.
+    idx._main_epoch = int(manifest["main_epoch"])
+
+    for tag, rec in _read_records(os.path.join(directory, _JOURNAL)):
+        if tag == b"ADD\0":
+            _expect(all(k in rec for k in ("ids", "vecs", "live")),
+                    f"ADD journal record missing fields: has {sorted(rec)}")
+            rids = rec["ids"].astype(np.int32)
+            _expect(rec["vecs"].shape == (len(rids), dim),
+                    f"journal vecs shape {rec['vecs'].shape} != "
+                    f"({len(rids)}, {dim})")
+            r0 = idx._delta_n
+            idx._append_delta(rids, rec["vecs"].astype(np.float32))
+            for off in np.nonzero(~rec["live"])[0]:
+                # Dead at save time: flip the ROW, and drop the id only if
+                # it still points at this row (an upserted id points at its
+                # later, live row — leave that mapping alone).
+                idx._delta_live[r0 + int(off)] = False
+                if idx._loc.get(int(rids[off])) == ("delta", r0 + int(off)):
+                    del idx._loc[int(rids[off])]
+        elif tag == b"DEL\0":
+            _expect("ids" in rec,
+                    f"DEL journal record missing ids: has {sorted(rec)}")
+            for i in rec["ids"]:
+                idx._tombstone(int(i), missing_ok=False)
+        else:
+            raise SnapshotError(f"unknown journal record tag {tag!r}")
+    _expect(idx._delta_n == manifest["rows"]["delta"],
+            f"journal replay produced {idx._delta_n} delta rows, manifest "
+            f"says {manifest['rows']['delta']}")
+    _expect(len(idx) == manifest["rows"]["live"],
+            f"restored live count {len(idx)} != manifest "
+            f"{manifest['rows']['live']}")
+
+    _preload_trained(idx, directory, manifest)
+    return idx
+
+
+def _expect(ok: bool, msg: str) -> None:
+    if not ok:
+        raise SnapshotError(msg)
+
+
+def _preload_trained(idx, directory: str, manifest: dict) -> None:
+    """Install the persisted IVF/PQ/replica state into the device cache.
+
+    This is the no-training guarantee: ``_dev_version`` is stamped with the
+    restored epoch, so ``_device_state`` sees everything as current and the
+    build paths (``build_ivf``/``build_ivfpq`` → ``kmeans.lloyd``) are never
+    entered.  Scalar replicas are loaded when the snapshot carries them and
+    recomputed otherwise — ``quantize_rows`` is a deterministic map, so both
+    routes yield bit-identical scans.
+    """
+    from repro.core.distances import QuantizedRows, quantize_rows
+
+    files = manifest["files"]
+    if idx._use_ivf():
+        from repro.core.ivf import ivf_from_arrays
+
+        _expect(_IVF in files, "manifest configures IVF but has no ivf.npz")
+        with np.load(os.path.join(directory, _IVF)) as z:
+            ivf = ivf_from_arrays({k: z[k] for k in z.files})
+        _expect(ivf.packed.shape[1] == idx.dim,
+                f"IVF packed dim {ivf.packed.shape[1]} != index {idx.dim}")
+        _expect(ivf.slot_of_row.shape[0] == len(idx._main_vecs),
+                f"IVF permutation covers {ivf.slot_of_row.shape[0]} rows, "
+                f"main has {len(idx._main_vecs)}")
+        _expect(ivf.ncells == idx._effective_ncells(),
+                f"snapshot trained {ivf.ncells} cells; this config/mesh "
+                f"derives {idx._effective_ncells()} — a cell layout cannot "
+                f"be resharded without retraining")
+        idx._dev["main_ivf"] = ivf
+        idx._dev_version["main_ivf"] = idx._main_epoch
+    else:
+        _expect(_IVF not in files,
+                "snapshot carries ivf.npz but this config derives no IVF")
+
+    replicas: dict = {}
+    if _REPLICA in files:
+        with np.load(os.path.join(directory, _REPLICA)) as z:
+            loaded = {k: z[k] for k in z.files}
+        for key in ("main_q", "main_ivf_q"):
+            if f"{key}.data" in loaded:
+                replicas[key] = QuantizedRows(
+                    jnp.asarray(loaded[f"{key}.data"]),
+                    (jnp.asarray(loaded[f"{key}.scale"])
+                     if f"{key}.scale" in loaded else None),
+                    jnp.asarray(loaded[f"{key}.hy"]))
+
+    if idx._use_pq():
+        from repro.core.pq import pq_from_arrays
+
+        _expect(_PQ in files, "manifest configures PQ but has no pq.npz")
+        with np.load(os.path.join(directory, _PQ)) as z:
+            cb, codes = pq_from_arrays({k: z[k] for k in z.files})
+        _expect(cb.m == idx.pq_m and cb.ncodes == 2 ** idx.pq_nbits,
+                f"PQ geometry ({cb.m}, {cb.ncodes}) != configured "
+                f"({idx.pq_m}, {2 ** idx.pq_nbits})")
+        ivf = idx._dev["main_ivf"]
+        _expect(codes.codes.shape[0] == ivf.packed.shape[0],
+                f"PQ codes cover {codes.codes.shape[0]} slots, packed has "
+                f"{ivf.packed.shape[0]}")
+        idx._dev["main_pq"] = (cb, codes)
+    elif idx._use_ivf():
+        q = replicas.get("main_ivf_q")
+        if q is None:
+            q = quantize_rows(idx._dev["main_ivf"].packed, idx.scan_dtype,
+                              distance=idx.distance)
+        _expect(q.data.shape == idx._dev["main_ivf"].packed.shape,
+                f"packed replica shape {q.data.shape} != "
+                f"{idx._dev['main_ivf'].packed.shape}")
+        idx._dev["main_ivf_q"] = q
+
+    if idx.scan_dtype != "float32" and idx.mesh is None and not idx._use_ivf():
+        q = replicas.get("main_q")
+        if q is None:
+            q = quantize_rows(jnp.asarray(idx._main_vecs), idx.scan_dtype,
+                              distance=idx.distance)
+        _expect(q.data.shape == idx._main_vecs.shape,
+                f"flat replica shape {q.data.shape} != "
+                f"{idx._main_vecs.shape}")
+        idx._dev["main_q"] = q
+        idx._dev_version["main_q"] = idx._main_epoch
