@@ -21,7 +21,7 @@ import time
 
 
 SUITES = ("table1", "scaling", "kernels", "selection", "serving", "ivf",
-          "pq", "snapshot")
+          "pq", "snapshot", "shards")
 
 
 def run_suite(name: str, smoke: bool) -> None:
@@ -77,6 +77,14 @@ def run_suite(name: str, smoke: bool) -> None:
             serving.cold_start(corpus=2048, d=32, k=10, ncells=16, pq_m=8)
         else:
             serving.cold_start()
+    elif name == "shards":
+        from benchmarks import serving
+        if smoke:
+            serving.shards_sweep(corpus=2048, d=32, k=10,
+                                 batch_sizes=(8, 64), batches=4, ncells=16,
+                                 nprobe=8, shard_counts=(4,))
+        else:
+            serving.shards_sweep()
     else:
         raise SystemExit(f"unknown suite {name!r}; have {SUITES}")
 

@@ -274,6 +274,78 @@ def cold_start(corpus: int = 8192, d: int = 64, k: int = 10,
         shutil.rmtree(tmp, ignore_errors=True)
 
 
+def shards_sweep(corpus: int = 8192, d: int = 64, k: int = 10,
+                 batch_sizes=(8, 64), batches: int = 12, ncells: int = 64,
+                 nprobe: int = 8, overfetch: int = 4, pq_m: int = 8,
+                 shard_counts=(1, 4), model_rows: int = 100_000_000):
+    """Shard-routed serving (DESIGN.md §13): routed qps/p99/recall + model.
+
+    Two halves.  Measured: the IVFADC index is cut into S cell-range shard
+    images (``save_shards``), restored into workers, and served through the
+    probe-set router + butterfly aggregator — qps/p50/p99 and recall@k vs
+    the exact baseline per batch size, one row per shard count (S=1 is the
+    routed path's overhead floor over the single-host scan).  Modeled: the
+    synthetic ≥10⁸-row fleet the architecture exists for, reported purely
+    through ``accounting.shard_bytes_per_query`` — per-shard scan bytes
+    stay ~flat as the fleet grows while the single-host stream doesn't,
+    and the rows make that auditable next to the measured small-scale qps.
+    """
+    import os
+    import shutil
+    import tempfile
+
+    from repro import accounting
+    from repro.data.synthetic import clustered_vectors
+    from repro.serving import RetrievalIndex, load_router
+    from repro.serving.snapshot import save_shards, shard_dirs
+
+    rng = np.random.default_rng(29)
+    vecs = clustered_vectors(corpus, d, seed=17)
+    q = clustered_vectors(max(batch_sizes), d, seed=18)
+    base = RetrievalIndex.build(np.arange(corpus), vecs, impl="fused")
+    exact_ids = np.asarray(base.search(q, k).ids)
+    kw = dict(ivf_cells=ncells, nprobe=nprobe, overfetch=overfetch)
+    if pq_m and d % pq_m == 0:
+        kw["pq_m"] = pq_m
+    idx = RetrievalIndex.build(np.arange(corpus), vecs, **kw)
+    eff_cells = idx._effective_ncells()
+    tmp = tempfile.mkdtemp(prefix="repro-shards-")
+    try:
+        for S in shard_counts:
+            if S > eff_cells:
+                continue
+            root = os.path.join(tmp, f"s{S}")
+            save_shards(idx, root, S)
+            router = load_router(shard_dirs(root))
+            model = accounting.shard_bytes_per_query(
+                corpus, d, S, k=k, overfetch=overfetch, ncells=eff_cells,
+                nprobe=min(nprobe, eff_cells), pq_m=kw.get("pq_m"))
+            extra = (f"shards={S};"
+                     f"dispatched={model['shards_dispatched']:.2f};"
+                     f"per_shard_bytes={model['per_shard']['total']:.0f};"
+                     f"wire_bytes={model['aggregator_wire']:.0f}")
+            sweep(f"shards_s{S}", router, k, d, batch_sizes, batches, rng,
+                  recall_vs=exact_ids, queries=q, extra=extra)
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+    # The synthetic billion-scale config (≥ 10⁸ rows): model-only rows — no
+    # index is built; the point is that the per-shard stream is the fleet's
+    # unit of provisioning and stays ~constant as shards absorb rows.
+    md, mcells, mprobe, mpq = 128, 65536, 64, 16
+    for S in (16, 64):
+        m = accounting.shard_bytes_per_query(
+            model_rows, md, S, k=k, overfetch=8, ncells=mcells,
+            nprobe=mprobe, pq_m=mpq)
+        emit(f"shards_model_r{model_rows:.0e}_s{S}".replace("+", ""), 0.0,
+             f"rows={model_rows};d={md};ncells={mcells};nprobe={mprobe};"
+             f"pq_m={mpq};dispatched={m['shards_dispatched']:.1f};"
+             f"per_shard_scan_bytes={m['per_shard']['scan']:.3e};"
+             f"per_shard_total_bytes={m['per_shard']['total']:.3e};"
+             f"aggregator_wire_bytes={m['aggregator_wire']:.0f};"
+             f"single_host_bytes={m['single_host_total']:.3e}")
+
+
 def main(corpus: int = 8192, d: int = 64, k: int = 10,
          batch_sizes=(8, 64, 256), batches: int = 12, churn: int = 512,
          scan_dtypes=("float32", "bfloat16", "int8"), overfetch: int = 4):
@@ -323,6 +395,10 @@ if __name__ == "__main__":
     ap.add_argument("--cold-start", action="store_true",
                     help="measure snapshot restore vs index retrain wall "
                          "clock (DESIGN.md §Persistence)")
+    ap.add_argument("--shards", action="store_true",
+                    help="run the shard-routed serving sweep: routed "
+                         "qps/p99/recall per shard count + the modeled "
+                         "10^8-row fleet (DESIGN.md §13)")
     ap.add_argument("--corpus", type=int, default=8192)
     ap.add_argument("--d", type=int, default=64)
     ap.add_argument("--k", type=int, default=10)
@@ -332,7 +408,11 @@ if __name__ == "__main__":
     ap.add_argument("--nprobe", type=int, default=8)
     a = ap.parse_args()
     print("name,us_per_call,derived")
-    if a.cold_start:
+    if a.shards:
+        shards_sweep(a.corpus, a.d, a.k, (8, 64), a.batches,
+                     ncells=a.ivf_cells, nprobe=a.nprobe,
+                     overfetch=a.overfetch)
+    elif a.cold_start:
         cold_start(a.corpus, a.d, a.k, ncells=a.ivf_cells)
     elif a.pq:
         pq_sweep(a.corpus, a.d, a.k, (8, 64, 256), a.batches,

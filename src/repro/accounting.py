@@ -91,6 +91,72 @@ def scan_bytes_per_query(n_rows: int, d: int, *, scan_dtype: str = "float32",
     }
 
 
+def shard_bytes_per_query(n_rows: int, d: int, n_shards: int, *,
+                          scan_dtype: str = "float32", k: int = 10,
+                          overfetch: int = 4, ncells: int = 0,
+                          nprobe: int | None = None, pq_m: int | None = None,
+                          pq_nbits: int = 8,
+                          wire_bytes_per_value: int = 2) -> dict:
+    """Analytic per-shard traffic of the shard-routed path (DESIGN.md §13).
+
+    Extends ``scan_bytes_per_query`` to a fleet of ``n_shards`` cell-range
+    shards: the probe set (``nprobe`` distinct cells, uniform under a
+    balanced quantizer) lands on an expected ``shards_dispatched`` =
+    S · (1 − C(ncells−c, nprobe)/C(ncells, nprobe)) distinct shards
+    (c = ncells/S cells per shard — the hypergeometric "shard owns none of
+    the probes" complement).  Each dispatched shard then
+      * reads the full replicated centroid table (every worker probes
+        locally — the replicated-quantizer contract),
+      * streams its share of the probed rows: the global IVF ``scan`` +
+        ``epilogue`` bytes split over the dispatched shards,
+      * rescores its own overfetch window (up to K' fp32 rows — per-shard,
+        NOT divided: each worker overfetches independently),
+    and ships one sorted [K = next_pow2(k)] run to the aggregator —
+    ``wire_bytes_per_value`` (2 = the bf16 wire) + 4 id bytes per entry,
+    the thin-aggregator ingest this architecture exists to keep thin.
+
+    Returns per-shard component bytes plus fleet totals; the ``--shards``
+    bench sweep reports this next to measured qps at small scale so the
+    10⁸-row projections stay auditable.
+    """
+    import math
+
+    from repro.core.topk import next_pow2
+
+    assert n_shards >= 1 and ncells >= n_shards, (n_shards, ncells)
+    whole = scan_bytes_per_query(
+        n_rows, d, scan_dtype=scan_dtype, k=k, overfetch=overfetch,
+        ncells=ncells, nprobe=nprobe, pq_m=pq_m, pq_nbits=pq_nbits)
+    nprobe_eff = min(ncells if nprobe is None else nprobe, ncells)
+    cells_per_shard = ncells / n_shards
+    # P(one shard owns none of the nprobe distinct probed cells); guard the
+    # exhaustive probe where the combinatorics degenerate to 0.
+    free = ncells - cells_per_shard
+    if nprobe_eff > free:
+        p_none = 0.0
+    else:
+        p_none = math.exp(
+            math.lgamma(free + 1) - math.lgamma(free - nprobe_eff + 1)
+            - math.lgamma(ncells + 1) + math.lgamma(ncells - nprobe_eff + 1))
+    dispatched = n_shards * (1.0 - p_none)
+    K = next_pow2(k)
+    per_shard = {
+        "centroids": whole["centroids"],
+        "scan": whole["scan"] / dispatched,
+        "epilogue": whole["epilogue"] / dispatched,
+        "rescore": whole["rescore"],  # each worker overfetches independently
+        "wire": K * (wire_bytes_per_value + 4),
+    }
+    per_shard["total"] = sum(per_shard.values())
+    return {
+        "shards_dispatched": dispatched,
+        "per_shard": per_shard,
+        "aggregator_wire": dispatched * per_shard["wire"],
+        "fleet_total": dispatched * per_shard["total"],
+        "single_host_total": whole["total"],
+    }
+
+
 def set_unroll(value: bool) -> None:
     _UNROLL[0] = bool(value)
 

@@ -32,6 +32,11 @@ Flags (see README.md "CLI reference"):
   --cache N         user embedding cache capacity (0 disables)
   --mesh            shard the main segment over the host mesh (query-sharded
                     butterfly scoring — the paper's multi-device serving path)
+  --shards S        shard-routed serving (DESIGN.md §13): cut the built index
+                    into S cell-range shard images, restore them into
+                    ShardWorkers and serve through the probe-set router +
+                    butterfly aggregator (needs --ivf-cells > 0; shard
+                    images land under --snapshot-dir or a temp dir)
   --snapshot-dir D  persist the index under D after the corpus build
                     (DESIGN.md §Persistence: versioned, atomic, CRC-stamped)
   --restore         cold-start from the --snapshot-dir snapshot instead of
@@ -71,6 +76,10 @@ def main():
     ap.add_argument("--mesh", action="store_true",
                     help="shard the main segment over the host mesh and score "
                          "it with the query-sharded butterfly path")
+    ap.add_argument("--shards", type=int, default=0,
+                    help="cut the index into this many cell-range shard "
+                         "images and serve through the probe-set router "
+                         "(DESIGN.md §13; needs --ivf-cells > 0; 0 = off)")
     ap.add_argument("--snapshot-dir", default=None,
                     help="persist the built index here (DESIGN.md §Persistence)")
     ap.add_argument("--restore", action="store_true",
@@ -80,6 +89,16 @@ def main():
     args = ap.parse_args()
     if args.restore and not args.snapshot_dir:
         ap.error("--restore needs --snapshot-dir")
+    if args.shards:
+        if not args.ivf_cells:
+            ap.error("--shards needs --ivf-cells > 0 (cells are the "
+                     "partition unit)")
+        if args.mesh:
+            ap.error("--shards and --mesh are alternative scale-out paths; "
+                     "pick one")
+        if args.churn or args.compact_every:
+            ap.error("--shards serves immutable shard images; delta churn "
+                     "is a single-host path (--churn/--compact-every)")
 
     import jax
     import numpy as np
@@ -143,6 +162,27 @@ def main():
             print(f"[serve] snapshot -> {args.snapshot_dir} in "
                   f"{time.perf_counter() - t0:.2f}s (--restore skips the "
                   f"embedding pass and all IVF/PQ training)")
+
+    if args.shards:
+        # Shard-routed serving (DESIGN.md §13): cut cell-range images, restore
+        # each into a self-contained ShardWorker, rebind the engine onto the
+        # probe-set router.  In production each image restores in its own
+        # worker process (tests/test_shards.py proves that path); one process
+        # hosting the whole fleet exercises identical code.
+        import tempfile
+
+        shard_root = (args.snapshot_dir + "-shards" if args.snapshot_dir
+                      else tempfile.mkdtemp(prefix="repro-shards-"))
+        t0 = time.perf_counter()
+        paths = svc.save_shards(shard_root, args.shards)
+        svc.restore_shards(shard_root)
+        r = svc.router
+        print(f"[serve] {len(paths)} shard images -> {shard_root} + routed "
+              f"restore in {time.perf_counter() - t0:.2f}s (zero retraining)")
+        for w in r.workers:
+            print(f"[serve]   shard {w.spec.shard_id}: cells "
+                  f"[{w.spec.cell_lo}, {w.spec.cell_hi}) "
+                  f"{w.packed.shape[0]} slots, {w.n_live} live rows")
 
     # Online: batches of user queries with optional churn/compaction.
     n_users = 4 * args.queries

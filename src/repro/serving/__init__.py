@@ -10,21 +10,43 @@ Layering (each importable on its own):
   service.py  TwoTowerRetrievalService — towers + index + engine + cache,
               the end-to-end recommender flow.
   snapshot.py versioned on-disk save/restore of the full index state —
-              restart without re-embedding or retraining (§Persistence).
+              restart without re-embedding or retraining (§Persistence) —
+              plus per-shard images (save_shards/restore_shard).
+  shards.py   ShardRouter/ShardWorker — cell-range sharding, probe-set
+              routing, butterfly top-k aggregation (§13 Shard-routed
+              serving).
 """
 from repro.serving.cache import EmbeddingCache
 from repro.serving.engine import EngineConfig, QueryEngine
 from repro.serving.index import RetrievalIndex, SearchResult
 from repro.serving.service import ServiceConfig, TwoTowerRetrievalService
-from repro.serving.snapshot import SnapshotError
+from repro.serving.shards import (
+    MissingShardError,
+    ShardRouter,
+    ShardSpec,
+    ShardWorker,
+    aggregate_topk,
+    load_router,
+    plan_shards,
+)
+from repro.serving.snapshot import SnapshotError, restore_shard, save_shards
 
 __all__ = [
     "EmbeddingCache",
     "EngineConfig",
+    "MissingShardError",
     "QueryEngine",
     "RetrievalIndex",
     "SearchResult",
     "ServiceConfig",
+    "ShardRouter",
+    "ShardSpec",
+    "ShardWorker",
     "SnapshotError",
     "TwoTowerRetrievalService",
+    "aggregate_topk",
+    "load_router",
+    "plan_shards",
+    "restore_shard",
+    "save_shards",
 ]

@@ -31,7 +31,7 @@ import numpy as np
 
 from repro import accounting
 from repro.core import topk as T
-from repro.serving.index import RetrievalIndex, SearchResult
+from repro.serving.index import SearchResult
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,7 +47,15 @@ class EngineConfig:
 
 
 class QueryEngine:
-    def __init__(self, index: RetrievalIndex, cfg: EngineConfig = EngineConfig(),
+    """Batches queries onto anything with the index search surface.
+
+    ``index`` is duck-typed: a ``RetrievalIndex``, or any object exposing
+    ``search(q, k) -> SearchResult``, ``shape_signature(k) -> tuple`` and
+    ``dim`` — ``serving.shards.ShardRouter`` plugs in here, so a shard fleet
+    serves through the same padding/metering path as a local index.
+    """
+
+    def __init__(self, index, cfg: EngineConfig = EngineConfig(),
                  meter: accounting.ServingMeter | None = None):
         self.index = index
         self.cfg = cfg
@@ -67,8 +75,9 @@ class QueryEngine:
         self._seen_shapes: set = set()
         self._live_main: int | None = None
 
-    def rebind(self, index: RetrievalIndex) -> None:
-        """Point the engine at a replacement index (rebuild or restore).
+    def rebind(self, index) -> None:
+        """Point the engine at a replacement index (rebuild, restore, or a
+        ``ShardRouter`` over restored shard images).
 
         Drops the compile-tracking state: the old index's shape-signature
         keys are meaningless against a new object, and keeping them would

@@ -473,6 +473,23 @@ class RetrievalIndex:
             ncells = (ncells // P) * P
         return ncells
 
+    def effective_nprobe(self) -> int:
+        """``nprobe`` clamped to the TRAINED cell count — the explicit policy.
+
+        The trained count can undershoot ``ivf_cells`` (tiny corpora, mesh
+        rounding — ``_effective_ncells``), so a config or restored snapshot
+        whose ``nprobe`` exceeds it is legal and means "probe every cell":
+        clamp, never raise.  Rationale: ``nprobe > ncells`` has exactly one
+        sensible semantics (the exhaustive probe, exact with an fp32 scan),
+        and a restore must not fail on a config a fresh ``build()`` with the
+        same knobs would happily serve.  A non-positive ``nprobe`` stays a
+        hard config error (``__init__`` asserts).  Pinned by
+        tests/test_snapshot.py::test_restore_nprobe_above_trained_ncells.
+        """
+        if not self._use_ivf():
+            return self.nprobe
+        return min(self.nprobe, self._device_state()["main_ivf"].ncells)
+
     def shape_signature(self, k: int) -> tuple:
         """Everything that determines the compiled shapes of a k-search.
 
@@ -541,14 +558,14 @@ class RetrievalIndex:
             pq_cb, pq_codes = dev["main_pq"]
             return _segment_candidates_ivfpq(
                 q, vecs, ivf, pq_cb, pq_codes, live, ids, k_out=k_out,
-                nprobe=min(self.nprobe, ivf.ncells),
+                nprobe=self.effective_nprobe(),
                 overfetch=self.overfetch, distance=self.distance,
                 impl=self.impl)
         if self._use_ivf():
             ivf = dev["main_ivf"]
             return _segment_candidates_ivf(
                 q, vecs, ivf, dev["main_ivf_q"], live, ids, k_out=k_out,
-                nprobe=min(self.nprobe, ivf.ncells),
+                nprobe=self.effective_nprobe(),
                 overfetch=self.overfetch, distance=self.distance,
                 impl=self.impl)
         if self.scan_dtype != "float32":
@@ -644,7 +661,7 @@ class RetrievalIndex:
         if fn is None:
             fn = KD.make_ivf_query_sharded(
                 self.mesh, query_axis=self.query_axis, db_axis=self.db_axis,
-                k=k_out, nprobe=min(self.nprobe, ivf.ncells),
+                k=k_out, nprobe=self.effective_nprobe(),
                 cell_cap=ivf.cell_cap, distance=self.distance,
                 impl=self.impl, scan_dtype=self.scan_dtype,
                 overfetch=self.overfetch,
@@ -685,7 +702,7 @@ class RetrievalIndex:
         if fn is None:
             fn = KD.make_ivfpq_query_sharded(
                 self.mesh, query_axis=self.query_axis, db_axis=self.db_axis,
-                k=k_out, nprobe=min(self.nprobe, ivf.ncells),
+                k=k_out, nprobe=self.effective_nprobe(),
                 cell_cap=ivf.cell_cap, distance=self.distance,
                 impl=self.impl, overfetch=self.overfetch,
                 wire_dtype=jnp.bfloat16)

@@ -51,6 +51,11 @@ class ServiceConfig:
     # Default snapshot location for save_index()/restore_index() (DESIGN.md
     # §Persistence); None = callers pass a directory explicitly.
     snapshot_dir: str | None = None
+    # Shard-routed serving (DESIGN.md §13): > 0 partitions the packed main
+    # segment into that many cell-range shard images (save_shards) and lets
+    # restore_shards() rebind the engine onto a ShardRouter over their
+    # restored workers.  Requires ivf_cells > 0 — cells ARE the partition.
+    shards: int = 0
 
 
 class TwoTowerRetrievalService:
@@ -196,6 +201,58 @@ class TwoTowerRetrievalService:
         self.index = RetrievalIndex.restore(
             directory, mesh=self.index.mesh, impl=self.svc.impl)
         self.engine.rebind(self.index)
+
+    # -- persistence: shard-routed serving (DESIGN.md §13) ------------------
+
+    def save_shards(self, directory: str | None = None,
+                    n_shards: int | None = None) -> list[str]:
+        """Cut the index into per-shard images under ``directory``.
+
+        Defaults: ``ServiceConfig.snapshot_dir`` / ``ServiceConfig.shards``.
+        Each shard manifest carries this service's tower-params fingerprint,
+        same contract as ``save_index``.
+        """
+        from repro.serving.snapshot import save_shards
+
+        directory = directory if directory is not None else self.svc.snapshot_dir
+        assert directory, "pass a directory or set ServiceConfig.snapshot_dir"
+        n_shards = n_shards if n_shards is not None else self.svc.shards
+        assert n_shards >= 1, "pass n_shards or set ServiceConfig.shards"
+        return save_shards(
+            self.index, directory, n_shards,
+            extra={"params_crc32": self._params_fingerprint()})
+
+    def restore_shards(self, directory: str | None = None,
+                       *, wire_dtype: str | None = None) -> None:
+        """Rebind the engine onto a ShardRouter over restored shard images.
+
+        Same hard-fail contract as ``restore_index``: the shard images'
+        recorded config must match this service's retrieval knobs and their
+        params fingerprint (when present) this service's towers.  Queries
+        then flow engine → router → per-shard workers → butterfly merge.
+        """
+        from repro.serving.shards import load_router
+        from repro.serving.snapshot import SnapshotError, config_signature, shard_dirs
+
+        directory = directory if directory is not None else self.svc.snapshot_dir
+        assert directory, "pass a directory or set ServiceConfig.snapshot_dir"
+        router = load_router(shard_dirs(directory), impl=self.svc.impl,
+                             wire_dtype=wire_dtype)
+        want = dict(config_signature(self.index))
+        if router.config != want:
+            diff = {k: (router.config.get(k), want[k]) for k in want
+                    if router.config.get(k) != want[k]}
+            raise SnapshotError(
+                f"shard images' config does not match ServiceConfig "
+                f"(shards, service): {diff}")
+        stored_fp = router.extra.get("params_crc32")
+        if stored_fp is not None and stored_fp != self._params_fingerprint():
+            raise SnapshotError(
+                f"shard images were embedded by a different model: params "
+                f"fingerprint {stored_fp} != this service's "
+                f"{self._params_fingerprint()} (same --seed / checkpoint?)")
+        self.router = router
+        self.engine.rebind(router)
 
     # -- online: item ingest (delta segment) --------------------------------
 

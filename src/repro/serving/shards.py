@@ -1,0 +1,389 @@
+"""Shard-routed serving: cell-range sharding + probe-set routing + top-k merge.
+
+The scale-out tier of the serving stack (DESIGN.md §13).  The single-host
+IVFADC index already stores the main segment *cell-packed*: cell ``c`` owns
+the contiguous slot range ``[c*cap, (c+1)*cap)``.  That layout makes
+horizontal partitioning free — a shard is a contiguous CELL RANGE
+``[cell_lo, cell_hi)``, i.e. a pure slice of the packed rows, the per-slot
+ids/live masks and the PQ codes, with zero retraining: the coarse quantizer
+(centroids, tiny) replicates to every shard, exactly the FAISS billion-scale
+blueprint (PAPERS.md) and the same partitioning ``make_ivfpq_query_sharded``
+uses across a device mesh, lifted to process granularity.
+
+Three pieces:
+
+* ``ShardWorker`` — one shard's local query: global probe → cell-masked ADC
+  (or scalar) scan of the local slice → exact fp32 rescore → external ids,
+  padded to a sorted length-K run.  The scan body mirrors
+  ``core.distributed.ivfpq_query_sharded_shard`` minus the collectives (a
+  worker is one process, not a mesh participant); stage 1 uses the
+  predicated jnp probe-mask scan — the same reference path the mesh uses
+  off-TPU — because the scalar-prefetch kernels' probe-list contract wants
+  every listed cell in-range, which routing does not guarantee per shard.
+* routing — each query's probe set (from the replicated quantizer) maps to
+  owning shards through a dense cell→shard table; the router dispatches a
+  batch only to shards some query in it probes.  A probed cell owned by no
+  loaded shard raises ``MissingShardError`` — never a silent partial result.
+* ``aggregate_topk`` — the thin aggregator: an explicit XOR-butterfly of
+  bitonic ``merge_topk_sorted`` rounds over the (pow2-padded) shard axis,
+  the SAME round structure, tie-break and optional bf16-wire rounding as
+  ``tree_merge_topk``'s ppermute tree.  Merge order is a function of shard
+  position alone — undispatched shards contribute +inf runs — so the merged
+  (values, ids) are deterministic and bit-stable regardless of which subset
+  of shards actually computed.
+
+``ShardRouter`` duck-types the index surface ``QueryEngine`` needs
+(``search`` / ``shape_signature`` / ``dim``), so the serving engine rebinds
+onto a shard fleet exactly as it rebinds onto a restored index.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import topk as T
+from repro.core.distances import quantize_rows
+from repro.core.ivf import probe_cells
+from repro.core.knn import KNNResult, quantized_scan, rescore, scan_width
+from repro.core.pq import pq_cell_bias
+from repro.serving.index import SearchResult
+from repro.serving.snapshot import SnapshotError
+
+Array = jnp.ndarray
+
+
+class MissingShardError(RuntimeError):
+    """A query's probe set touched a cell owned by no loaded shard."""
+
+
+class ShardSpec(NamedTuple):
+    """One shard's slot in a cell-range partition of ``[0, ncells)``."""
+
+    shard_id: int
+    n_shards: int
+    cell_lo: int
+    cell_hi: int  # exclusive
+
+    @property
+    def ncells_local(self) -> int:
+        return self.cell_hi - self.cell_lo
+
+
+def plan_shards(ncells: int, n_shards: int) -> list[ShardSpec]:
+    """Balanced contiguous cell ranges covering ``[0, ncells)`` exactly.
+
+    Ranges differ by at most one cell; every cell belongs to exactly one
+    shard (the routing property the property tests pin down).
+    """
+    if not 1 <= n_shards <= ncells:
+        raise ValueError(
+            f"need 1 <= n_shards <= ncells, got n_shards={n_shards} "
+            f"ncells={ncells} (a shard must own at least one cell)")
+    bounds = [(i * ncells) // n_shards for i in range(n_shards + 1)]
+    return [ShardSpec(i, n_shards, bounds[i], bounds[i + 1])
+            for i in range(n_shards)]
+
+
+# ---------------------------------------------------------------------------
+# Per-shard local query (the worker side of the mesh shard body).
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "k", "nprobe", "overfetch", "cell_lo", "cell_cap", "distance", "impl",
+    "use_pq"))
+def _shard_topk(q, centroids, packed, ids_of_slot, live, scan_rep, pq_cb, *,
+                k, nprobe, overfetch, cell_lo, cell_cap, distance, impl,
+                use_pq):
+    """One shard's sorted length-K (values, external ids) run for ``q``.
+
+    Mirrors ``ivfpq_query_sharded_shard`` with the collectives removed: the
+    probe runs against the GLOBAL centroids (replicated quantizer), cells
+    rebase by the static ``cell_lo``, and out-of-range probes simply match
+    no local cell in the predicated mask — a shard scores exactly the probed
+    cells it owns.  Dead slots (cell padding, tombstones) die through the
+    replica's hy epilogue, identical to the single-host scan.
+    """
+    S_loc = packed.shape[0]
+    ncells_loc = S_loc // cell_cap
+    K = T.next_pow2(k)
+    cells = probe_cells(q, centroids, nprobe, distance=distance, impl=impl)
+    local = cells - cell_lo
+    probed = jnp.any(
+        local[:, :, None] == jnp.arange(ncells_loc)[None, None, :], axis=1)
+    k_scan = scan_width(S_loc, k, overfetch)
+    if use_pq:
+        cent_loc = jax.lax.slice_in_dim(centroids, cell_lo,
+                                        cell_lo + ncells_loc, axis=0)
+        cbias = pq_cell_bias(q, cent_loc, distance=distance)
+        cand = quantized_scan(
+            q, scan_rep, k_scan, distance=distance, db_live=live,
+            probed=probed, cell_cap=cell_cap, pq_codebook=pq_cb,
+            cell_bias=cbias)
+    else:
+        cand = quantized_scan(
+            q, scan_rep, k_scan, distance=distance, db_live=live,
+            probed=probed, cell_cap=cell_cap)
+    vals, idx = rescore(q, packed, cand.indices, k, distance=distance,
+                        impl=impl)
+    safe = jnp.clip(idx, 0, S_loc - 1)
+    ids = jnp.where(idx >= 0, jnp.take(ids_of_slot, safe), jnp.int32(-1))
+    return T.pad_topk(vals, ids, K)
+
+
+class ShardWorker:
+    """One restored shard image: a cell-range slice + the replicated quantizer.
+
+    Self-contained — a worker process needs nothing but its own shard
+    directory (``snapshot.restore_shard``) to answer ``topk``; the probe
+    against the global centroids runs locally (replicated-quantizer
+    contract), so no worker ever talks to another.
+    """
+
+    def __init__(self, spec: ShardSpec, *, centroids, packed, ids_of_slot,
+                 live, config: dict, parent: dict, pq_cb=None, pq_codes=None,
+                 extra: dict | None = None, impl: str = "jnp"):
+        self.spec = spec
+        self.config = dict(config)
+        self.parent = dict(parent)
+        self.extra = dict(extra or {})
+        self.impl = impl
+        self.centroids = jnp.asarray(centroids, jnp.float32)
+        self.packed = jnp.asarray(packed, jnp.float32)
+        self.ids_of_slot = jnp.asarray(ids_of_slot, jnp.int32)
+        self.live = jnp.asarray(live, bool)
+        if self.packed.shape[0] % max(spec.ncells_local, 1):
+            raise SnapshotError(
+                f"shard {spec.shard_id}: {self.packed.shape[0]} slots do not "
+                f"tile over {spec.ncells_local} cells")
+        self.cell_cap = self.packed.shape[0] // spec.ncells_local
+        self.pq_cb = pq_cb
+        self.pq_codes = pq_codes
+        # Scalar path: the shard's scan replica is a deterministic map of its
+        # packed slice (never training), same policy as snapshot restore.
+        self._scan_rep = (pq_codes if pq_codes is not None else quantize_rows(
+            self.packed, self.config["scan_dtype"],
+            distance=self.config["distance"]))
+
+    @property
+    def dim(self) -> int:
+        return int(self.packed.shape[1])
+
+    @property
+    def n_live(self) -> int:
+        return int(np.asarray(jnp.sum(self.live)))
+
+    def topk(self, queries, k: int, *, nprobe: int | None = None,
+             overfetch: int | None = None) -> KNNResult:
+        """Sorted ascending [m, next_pow2(k)] local top-k (values, ext ids).
+
+        ``nprobe``/``overfetch`` default to the parent config and stay
+        query-time tunable (they change fetch width, not stored state) —
+        the bit-identity test drives both to their exhaustive settings.
+        """
+        q = jnp.asarray(queries, jnp.float32)
+        nprobe = self.config["nprobe"] if nprobe is None else int(nprobe)
+        nprobe = min(nprobe, int(self.centroids.shape[0]))
+        overfetch = (self.config["overfetch"] if overfetch is None
+                     else int(overfetch))
+        vals, ids = _shard_topk(
+            q, self.centroids, self.packed, self.ids_of_slot, self.live,
+            self._scan_rep, self.pq_cb, k=int(k), nprobe=nprobe,
+            overfetch=overfetch, cell_lo=self.spec.cell_lo,
+            cell_cap=self.cell_cap, distance=self.config["distance"],
+            impl=self.impl, use_pq=self.pq_codes is not None)
+        return KNNResult(vals, ids)
+
+
+# ---------------------------------------------------------------------------
+# Thin aggregator: the butterfly merge, shard-position-stable.
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("k", "wire_dtype"))
+def aggregate_topk(vals: Array, ids: Array, k: int, *,
+                   wire_dtype: str | None = None) -> KNNResult:
+    """Merge stacked per-shard sorted runs ``[S, m, K]`` → global ``[m, k]``.
+
+    The same XOR-butterfly as ``tree_merge_topk``, with the shard axis in
+    place of the device axis: log2(S) rounds, each merging position ``i``
+    with position ``i ^ d`` through the bitonic ``merge_topk_sorted`` (a
+    wins ties — merge order is fixed by shard POSITION, not arrival order).
+    ``wire_dtype="bfloat16"`` reproduces the mesh merge's wire semantics:
+    the running buffer is STORED in the wire dtype between rounds while
+    merges compare in fp32, so a future cross-host transport that ships
+    bf16 payloads keeps these exact results.  Non-pow2 shard counts pad
+    with +inf runs — padding is the identity of the merge.
+    """
+    S, m, K = vals.shape
+    Sp = T.next_pow2(S)
+    run_v = vals.astype(jnp.float32)
+    run_i = ids.astype(jnp.int32)
+    if Sp > S:
+        run_v = jnp.concatenate(
+            [run_v, jnp.full((Sp - S, m, K), T.POS_INF, jnp.float32)], axis=0)
+        run_i = jnp.concatenate(
+            [run_i, jnp.full((Sp - S, m, K), -1, jnp.int32)], axis=0)
+    wd = None if wire_dtype is None else jnp.dtype(wire_dtype)
+    if wd is not None:
+        run_v = run_v.astype(wd)
+    d = 1
+    while d < Sp:
+        perm = jnp.asarray([i ^ d for i in range(Sp)])
+        ov = jnp.take(run_v, perm, axis=0)
+        oi = jnp.take(run_i, perm, axis=0)
+        mv, mi = T.merge_topk_sorted(
+            run_v.astype(jnp.float32), run_i, ov.astype(jnp.float32), oi)
+        run_v = mv if wd is None else mv.astype(wd)
+        run_i = mi
+        d *= 2
+    return KNNResult(run_v[0].astype(jnp.float32)[:, :k], run_i[0][:, :k])
+
+
+# ---------------------------------------------------------------------------
+# Router: probe-set → owning shards, dispatch, aggregate.
+# ---------------------------------------------------------------------------
+
+
+class ShardRouter:
+    """Routes query batches to the shards owning their probe sets.
+
+    Assembly-time validation is the fault barrier: shard specs must be
+    pairwise disjoint, agree on the parent snapshot signature and config,
+    and (unless ``strict=False``) cover every cell — violations raise
+    ``SnapshotError`` before anything serves.  With a partial fleet
+    (``strict=False``), coverage is enforced per QUERY instead: a probe
+    into an unowned cell raises ``MissingShardError``, never a silently
+    truncated result set.
+    """
+
+    def __init__(self, workers: Sequence[ShardWorker], *, strict: bool = True,
+                 wire_dtype: str | None = None):
+        if not workers:
+            raise SnapshotError("ShardRouter needs at least one shard worker")
+        workers = sorted(workers, key=lambda w: w.spec.cell_lo)
+        w0 = workers[0]
+        self.config = dict(w0.config)
+        self.parent = dict(w0.parent)
+        self.extra = dict(w0.extra)
+        self.ncells = int(w0.centroids.shape[0])
+        self.n_shards = w0.spec.n_shards
+        seen_ids: set[int] = set()
+        for w in workers:
+            if w.spec.shard_id in seen_ids:
+                raise SnapshotError(
+                    f"duplicate shard id {w.spec.shard_id} in fleet")
+            seen_ids.add(w.spec.shard_id)
+            if w.spec.n_shards != self.n_shards:
+                raise SnapshotError(
+                    f"shard {w.spec.shard_id} belongs to a {w.spec.n_shards}"
+                    f"-way partition, fleet is {self.n_shards}-way")
+            if dict(w.config) != self.config:
+                raise SnapshotError(
+                    f"shard {w.spec.shard_id} config {w.config} != fleet "
+                    f"config {self.config}")
+            if w.parent.get("fingerprint") != self.parent.get("fingerprint"):
+                raise SnapshotError(
+                    f"shard {w.spec.shard_id} parent snapshot signature "
+                    f"{w.parent.get('fingerprint')} != fleet's "
+                    f"{self.parent.get('fingerprint')} — shards from "
+                    f"different parent snapshots cannot serve together")
+            if not 0 <= w.spec.cell_lo < w.spec.cell_hi <= self.ncells:
+                raise SnapshotError(
+                    f"shard {w.spec.shard_id} cell range "
+                    f"[{w.spec.cell_lo}, {w.spec.cell_hi}) outside "
+                    f"[0, {self.ncells})")
+        for a, b in zip(workers, workers[1:]):
+            if b.spec.cell_lo < a.spec.cell_hi:
+                raise SnapshotError(
+                    f"shard cell ranges overlap: shard {a.spec.shard_id} "
+                    f"[{a.spec.cell_lo}, {a.spec.cell_hi}) vs shard "
+                    f"{b.spec.shard_id} [{b.spec.cell_lo}, {b.spec.cell_hi})")
+        covered = sum(w.spec.ncells_local for w in workers)
+        if strict and covered != self.ncells:
+            raise SnapshotError(
+                f"shard set covers {covered}/{self.ncells} cells — an "
+                f"incomplete fleet cannot serve (pass strict=False to route "
+                f"around missing shards and fail per-query instead)")
+        self.workers = list(workers)
+        self.wire_dtype = wire_dtype
+        self.centroids = w0.centroids
+        self.dim = w0.dim
+        self.impl = w0.impl
+        # Dense cell → worker-position table; -1 marks an unowned cell
+        # (possible only under strict=False).
+        owner = np.full(self.ncells, -1, np.int32)
+        for pos, w in enumerate(workers):
+            owner[w.spec.cell_lo:w.spec.cell_hi] = pos
+        self._owner = owner
+
+    @property
+    def n_live(self) -> int:
+        return sum(w.n_live for w in self.workers)
+
+    def owners_of(self, cells: np.ndarray) -> np.ndarray:
+        """Worker position owning each probed cell; loud on unowned cells."""
+        cells = np.asarray(cells)
+        owner = self._owner[np.clip(cells, 0, self.ncells - 1)]
+        bad = (owner < 0) | (cells < 0) | (cells >= self.ncells)
+        if bad.any():
+            missing = np.unique(cells[bad])
+            loaded = [(w.spec.shard_id, w.spec.cell_lo, w.spec.cell_hi)
+                      for w in self.workers]
+            raise MissingShardError(
+                f"probe set hits cells {missing.tolist()} owned by no loaded "
+                f"shard (loaded shard (id, lo, hi) ranges: {loaded}); "
+                f"refusing to serve a silently partial result")
+        return owner
+
+    def probe(self, queries) -> np.ndarray:
+        """[m, nprobe] global probed cell ids (the replicated quantizer)."""
+        q = jnp.asarray(queries, jnp.float32)
+        nprobe = min(self.config["nprobe"], self.ncells)
+        return np.asarray(probe_cells(
+            q, self.centroids, nprobe, distance=self.config["distance"],
+            impl=self.impl))
+
+    def search(self, queries, k: int) -> SearchResult:
+        """Routed top-k: probe → dispatch to owning shards → butterfly merge.
+
+        Dispatch is batch-granular: a shard runs iff ANY query in the batch
+        probes a cell it owns; the rest contribute +inf runs so the merge
+        tree's shape — and therefore the result bits — never depends on the
+        dispatch pattern.
+        """
+        q = jnp.asarray(queries, jnp.float32)
+        m = q.shape[0]
+        K = T.next_pow2(k)
+        dispatched = set(np.unique(self.owners_of(self.probe(q))).tolist())
+        runs_v, runs_i = [], []
+        for pos, w in enumerate(self.workers):
+            if pos in dispatched:
+                r = w.topk(q, k)
+                runs_v.append(r.distances)
+                runs_i.append(r.indices)
+            else:
+                runs_v.append(jnp.full((m, K), T.POS_INF, jnp.float32))
+                runs_i.append(jnp.full((m, K), -1, jnp.int32))
+        vals, ids = aggregate_topk(jnp.stack(runs_v), jnp.stack(runs_i), k,
+                                   wire_dtype=self.wire_dtype)
+        return SearchResult(vals, ids)
+
+    def shape_signature(self, k: int) -> tuple:
+        """Engine compile-tracking key — static once a fleet is loaded."""
+        return (tuple(int(w.packed.shape[0]) for w in self.workers), 0,
+                ("shards", self.n_shards, T.next_pow2(k)))
+
+
+def load_router(shard_dirs: Sequence[str], *, impl: str | None = None,
+                strict: bool = True,
+                wire_dtype: str | None = None) -> ShardRouter:
+    """Restore every shard image in ``shard_dirs`` and assemble the router."""
+    from repro.serving.snapshot import restore_shard
+
+    return ShardRouter([restore_shard(d, impl=impl) for d in shard_dirs],
+                       strict=strict, wire_dtype=wire_dtype)

@@ -290,6 +290,10 @@ def restore_index(directory: str, *, mesh=None, db_axis: str = "model",
     from repro.serving.index import RetrievalIndex
 
     manifest = read_manifest(directory)
+    _expect("shard" not in manifest,
+            f"{directory} is a per-shard image (shard "
+            f"{manifest.get('shard', {}).get('shard_id')}); restore it with "
+            f"restore_shard(), not restore_index()")
     cfg = dict(manifest["config"])
     dim = cfg.pop("dim")
     idx = RetrievalIndex(
@@ -436,3 +440,211 @@ def _preload_trained(idx, directory: str, manifest: dict) -> None:
                 f"{idx._main_vecs.shape}")
         idx._dev["main_q"] = q
         idx._dev_version["main_q"] = idx._main_epoch
+
+
+# -- per-shard images (DESIGN.md §13 Shard-routed serving) -------------------
+#
+# A shard image is the cell-range slice of the packed main segment one
+# ``serving.shards.ShardWorker`` serves: its slot range of packed rows /
+# external ids / liveness (tombstones baked through the packing permutation),
+# the GLOBAL centroids (the replicated coarse quantizer), and — under IVF-PQ —
+# the codebook plus the local code slice.  Each shard directory is fully
+# self-contained: a worker process restores from its own manifest with zero
+# retraining and zero knowledge of its siblings.  The manifest's ``parent``
+# block fingerprints the source index so the router can refuse to assemble
+# shards of different parents into one fleet.
+
+_SHARD = "shard.npz"
+_SHARD_DIR_FMT = "shard-{:03d}"
+
+
+def parent_fingerprint(idx) -> str:
+    """CRC32 identity of the parent index a shard image was cut from.
+
+    Covers the search-determining config, the epoch, and the corpus identity
+    (centroid + external-id bytes) — two indexes that could serve different
+    results fingerprint differently, so mixed-parent fleets are caught at
+    router assembly, not by users noticing wrong neighbors.
+    """
+    ivf = idx._device_state()["main_ivf"]
+    crc = zlib.crc32(
+        json.dumps(config_signature(idx), sort_keys=True).encode())
+    crc = zlib.crc32(
+        str((int(idx._main_epoch), len(idx._main_vecs))).encode(), crc)
+    crc = zlib.crc32(
+        np.ascontiguousarray(np.asarray(ivf.centroids, np.float32)).tobytes(),
+        crc)
+    crc = zlib.crc32(np.ascontiguousarray(idx._main_ids).tobytes(), crc)
+    return f"{crc:08x}"
+
+
+def save_shards(idx, directory: str, n_shards: int, *,
+                extra: dict | None = None) -> list[str]:
+    """Cut ``idx``'s packed main segment into ``n_shards`` shard images.
+
+    Writes ``<directory>/shard-000 … shard-NNN``, one self-contained image
+    per contiguous cell range (``serving.shards.plan_shards``), atomically
+    for the whole fleet (tmp + rename, same policy as ``save_index``).
+    Returns the final shard directory paths in shard-id order.
+
+    Requires an IVF-configured index (cell ranges ARE the partition) with an
+    empty delta — the delta segment is per-host mutable state with no cell
+    structure; ``compact()`` folds it into the sharded layout first.
+    """
+    from repro.core.ivf import packed_live
+    from repro.serving.shards import plan_shards
+
+    _expect(idx._use_ivf(),
+            "cell-range sharding needs an IVF index (ivf_cells > 0 and a "
+            "main segment large enough to train cells)")
+    _expect(idx._delta_n == 0,
+            f"index holds {idx._delta_n} uncompacted delta rows — a shard "
+            f"image covers the packed main segment only; compact() first")
+    dev = idx._device_state()
+    ivf = dev["main_ivf"]
+    ncells, cap = ivf.ncells, ivf.cell_cap
+    specs = plan_shards(ncells, n_shards)
+    centroids = np.asarray(ivf.centroids, np.float32)
+    row_of_slot = np.asarray(ivf.row_of_slot)
+    packed = np.asarray(ivf.packed, np.float32)
+    live_slots = np.asarray(packed_live(ivf, jnp.asarray(idx._main_live)))
+    safe = np.clip(row_of_slot, 0, max(len(idx._main_ids) - 1, 0))
+    ids_of_slot = np.where(row_of_slot >= 0, idx._main_ids[safe],
+                           -1).astype(np.int32)
+    use_pq = idx._use_pq()
+    if use_pq:
+        from repro.core.pq import PQCodes, pq_to_arrays
+
+        cb, codes = dev["main_pq"]
+        codes_np = np.asarray(codes.codes)
+        hy_np = np.asarray(codes.hy)
+    fp = parent_fingerprint(idx)
+
+    tmp = directory.rstrip("/") + f".tmp-{os.getpid()}"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    for spec in specs:
+        sd = os.path.join(tmp, _SHARD_DIR_FMT.format(spec.shard_id))
+        os.makedirs(sd)
+        sl = slice(spec.cell_lo * cap, spec.cell_hi * cap)
+        files: dict[str, dict] = {}
+        _npz_atomic(os.path.join(sd, _SHARD), {
+            "centroids": centroids, "packed": packed[sl],
+            "ids": ids_of_slot[sl], "live": live_slots[sl],
+        })
+        files[_SHARD] = _file_stamp(os.path.join(sd, _SHARD))
+        if use_pq:
+            _npz_atomic(os.path.join(sd, _PQ), pq_to_arrays(
+                cb, PQCodes(codes_np[sl], hy_np[sl])))
+            files[_PQ] = _file_stamp(os.path.join(sd, _PQ))
+        manifest = {
+            "format_version": FORMAT_VERSION,
+            "config": config_signature(idx),
+            "impl": idx.impl,
+            "shard": {"shard_id": spec.shard_id, "n_shards": n_shards,
+                      "cell_lo": spec.cell_lo, "cell_hi": spec.cell_hi,
+                      "cell_cap": int(cap), "ncells": int(ncells),
+                      "pq": bool(use_pq)},
+            "parent": {"fingerprint": fp,
+                       "main_epoch": int(idx._main_epoch),
+                       "rows_main": len(idx._main_vecs)},
+            "extra": dict(extra) if extra else {},
+            "files": files,
+            "complete": True,
+        }
+        with open(os.path.join(sd, _MANIFEST), "w") as f:
+            json.dump(manifest, f, indent=1)
+    old = None
+    if os.path.exists(directory):
+        old = directory.rstrip("/") + f".old-{os.getpid()}"
+        if os.path.exists(old):
+            shutil.rmtree(old)
+        os.rename(directory, old)
+    os.rename(tmp, directory)
+    if old is not None:
+        shutil.rmtree(old)
+    return [os.path.join(directory, _SHARD_DIR_FMT.format(s.shard_id))
+            for s in specs]
+
+
+def shard_dirs(directory: str) -> list[str]:
+    """The shard image directories under a ``save_shards`` root, id-sorted."""
+    try:
+        names = sorted(n for n in os.listdir(directory)
+                       if n.startswith("shard-"))
+    except OSError as e:
+        raise SnapshotError(f"unreadable shard root {directory}: {e}") from e
+    _expect(bool(names), f"no shard-* images under {directory}")
+    return [os.path.join(directory, n) for n in names]
+
+
+def read_shard_manifest(shard_dir: str, *, verify: bool = True) -> dict:
+    """Load + check one shard image's manifest (``read_manifest`` semantics,
+    plus the requirement that this IS a shard image)."""
+    manifest = read_manifest(shard_dir, verify=verify)
+    _expect("shard" in manifest,
+            f"{shard_dir} is a whole-index snapshot, not a per-shard image; "
+            f"restore it with restore_index()")
+    return manifest
+
+
+def restore_shard(shard_dir: str, *, impl: str | None = None):
+    """Rebuild one ``ShardWorker`` from its image — zero training work.
+
+    Loads exactly the shard's slice plus the replicated quantizer; the scan
+    replica (scalar path) is recomputed by the deterministic ``quantize_rows``
+    map, same policy as ``restore_index``.  Geometry that disagrees with the
+    manifest raises ``SnapshotError`` before anything serves.
+    """
+    from repro.serving.shards import ShardSpec, ShardWorker
+
+    manifest = read_shard_manifest(shard_dir)
+    cfg = dict(manifest["config"])
+    sh = manifest["shard"]
+    spec = ShardSpec(int(sh["shard_id"]), int(sh["n_shards"]),
+                     int(sh["cell_lo"]), int(sh["cell_hi"]))
+    cap, ncells = int(sh["cell_cap"]), int(sh["ncells"])
+    dim = cfg["dim"]
+    _expect(0 <= spec.cell_lo < spec.cell_hi <= ncells,
+            f"shard cell range [{spec.cell_lo}, {spec.cell_hi}) outside "
+            f"[0, {ncells})")
+    _expect(spec.n_shards >= 1 and 0 <= spec.shard_id < spec.n_shards,
+            f"shard id {spec.shard_id} outside 0..{spec.n_shards - 1}")
+    n_slots = spec.ncells_local * cap
+    with np.load(os.path.join(shard_dir, _SHARD)) as z:
+        centroids, packed = z["centroids"], z["packed"]
+        ids, live = z["ids"], z["live"]
+    _expect(centroids.shape == (ncells, dim),
+            f"shard centroids shape {centroids.shape} != ({ncells}, {dim})")
+    _expect(packed.shape == (n_slots, dim) and packed.dtype == np.float32,
+            f"shard packed shape/dtype {packed.shape} {packed.dtype} != "
+            f"({n_slots}, {dim}) float32")
+    _expect(ids.shape == (n_slots,) and live.shape == (n_slots,)
+            and live.dtype == bool,
+            f"shard ids/live mismatch: {ids.shape} {live.shape} {live.dtype}"
+            f" vs {n_slots} slots")
+    pq_cb = pq_codes = None
+    if sh.get("pq"):
+        from repro.core.pq import pq_from_arrays
+
+        _expect(_PQ in manifest["files"],
+                "shard manifest configures PQ but has no pq.npz")
+        with np.load(os.path.join(shard_dir, _PQ)) as z:
+            pq_cb, pq_codes = pq_from_arrays({k: z[k] for k in z.files})
+        _expect(pq_cb.m == cfg["pq_m"]
+                and pq_cb.ncodes == 2 ** cfg["pq_nbits"],
+                f"shard PQ geometry ({pq_cb.m}, {pq_cb.ncodes}) != "
+                f"configured ({cfg['pq_m']}, {2 ** cfg['pq_nbits']})")
+        _expect(pq_codes.codes.shape[0] == n_slots,
+                f"shard PQ codes cover {pq_codes.codes.shape[0]} slots, "
+                f"shard has {n_slots}")
+    else:
+        _expect(_PQ not in manifest["files"],
+                "shard carries pq.npz but its manifest says pq=false")
+    return ShardWorker(
+        spec, centroids=centroids, packed=packed, ids_of_slot=ids, live=live,
+        config=cfg, parent=dict(manifest.get("parent", {})),
+        pq_cb=pq_cb, pq_codes=pq_codes,
+        extra=dict(manifest.get("extra", {})),
+        impl=impl if impl is not None else manifest.get("impl", "jnp"))

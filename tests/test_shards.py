@@ -1,0 +1,354 @@
+"""repro.serving.shards: cell-range sharding, routing, thin-aggregator merge.
+
+The contract under test (DESIGN.md §13):
+
+* **zero-retraining distribution** — per-shard images restored in FRESH
+  subprocesses (``core.kmeans.lloyd`` tripwired) answer local top-k, and the
+  parent-side butterfly aggregate of those runs is BIT-identical (values and
+  ids) to the single-host index's ``search`` when the probe set and overfetch
+  span the corpus, and reaches recall@10 >= 0.95 at serving defaults;
+* **routing is a partition** — every probed cell maps to exactly one owning
+  shard and the dispatched set covers the probe set, for arbitrary cell-range
+  partitions (property test); a probe into an unowned cell raises
+  ``MissingShardError``, never a silently partial result;
+* **the aggregator is exact and dispatch-stable** — ``aggregate_topk`` equals
+  a flat sort of the concatenated per-shard candidates, including
+  duplicate-distance ties and +inf/-1 tombstone entries, for random shard
+  counts and k (property test), and skipping undispatched shards does not
+  change a single result bit;
+* **assembly is the fault barrier** — overlapping cell ranges, mixed parent
+  snapshot signatures, or an incomplete strict fleet raise ``SnapshotError``
+  before anything serves.
+"""
+import json
+import os
+import shutil
+from types import SimpleNamespace
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import topk as T
+from repro.core.knn import knn_query
+from repro.data.synthetic import clustered_vectors
+from repro.serving import (MissingShardError, RetrievalIndex, ShardRouter,
+                           ShardSpec, ShardWorker, SnapshotError,
+                           aggregate_topk, load_router, plan_shards)
+from repro.serving.snapshot import restore_shard, save_shards, shard_dirs
+
+N, D, K, NCELLS, NSHARDS = 2048, 32, 10, 16, 4
+# nprobe = ncells and an overfetch window spanning the corpus: both the
+# routed and the single-host path degenerate to the exact rescored top-k
+# over every live row — the bit-identity regime (DESIGN.md §13).
+EXHAUSTIVE = dict(ivf_cells=NCELLS, nprobe=NCELLS, pq_m=8, overfetch=128)
+DEFAULTS = dict(nprobe=8, overfetch=4)  # serving defaults for the recall bar
+
+
+@pytest.fixture(scope="module")
+def fleet(tmp_path_factory):
+    """One exhaustive-config IVFADC index + its 4-way shard image fleet."""
+    vecs = clustered_vectors(N, D, seed=7)
+    idx = RetrievalIndex.build(np.arange(N), vecs, **EXHAUSTIVE)
+    q = clustered_vectors(24, D, seed=9)
+    root = str(tmp_path_factory.mktemp("shards") / "fleet")
+    paths = save_shards(idx, root, NSHARDS)
+    return SimpleNamespace(idx=idx, vecs=vecs, q=q, root=root, paths=paths)
+
+
+def _assert_bit_identical(a, b):
+    np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
+    np.testing.assert_array_equal(np.asarray(a.distances),
+                                  np.asarray(b.distances))
+
+
+def _recall(got_ids, want_ids):
+    return np.mean([len(set(g) & set(w)) / len(w)
+                    for g, w in zip(np.asarray(got_ids), np.asarray(want_ids))])
+
+
+# -- the headline: multi-process restore + route + aggregate -----------------
+
+
+def test_multiprocess_shard_restore_routes_bit_identical(fleet, tmp_path):
+    """Each shard restores in a FRESH process (zero retraining — Lloyd is
+    tripwired), answers local top-k at both the exhaustive and the
+    serving-default knobs; the parent-side aggregate is bit-identical to the
+    single-host search and clears the recall bar."""
+    from conftest import run_with_devices
+
+    qfile = str(tmp_path / "q.npz")
+    np.savez(qfile, q=fleet.q)
+    outs = []
+    for sd in fleet.paths:
+        out = str(tmp_path / (os.path.basename(sd) + "-runs.npz"))
+        outs.append(out)
+        run_with_devices(f"""
+            import numpy as np
+            import repro.core.kmeans as KM
+            def _tripwire(*a, **kw):
+                raise AssertionError("training entered on shard restore")
+            KM.lloyd = _tripwire
+            from repro.serving.snapshot import restore_shard
+            w = restore_shard({sd!r})
+            with np.load({qfile!r}) as z:
+                q = z["q"]
+            ex = w.topk(q, {K})  # config knobs: nprobe=ncells, spanning scan
+            de = w.topk(q, {K}, nprobe={DEFAULTS["nprobe"]},
+                        overfetch={DEFAULTS["overfetch"]})
+            np.savez({out!r},
+                     ev=np.asarray(ex.distances), ei=np.asarray(ex.indices),
+                     dv=np.asarray(de.distances), di=np.asarray(de.indices))
+            print("shard", w.spec.shard_id, "restored,", w.n_live, "live")
+        """, n_devices=1)
+
+    runs = [dict(np.load(o)) for o in outs]
+    # Exhaustive knobs: the aggregate must be bit-identical to single-host.
+    got = aggregate_topk(jnp.stack([r["ev"] for r in runs]),
+                         jnp.stack([r["ei"] for r in runs]), K)
+    want = fleet.idx.search(fleet.q, K)
+    np.testing.assert_array_equal(np.asarray(got.indices),
+                                  np.asarray(want.ids))
+    np.testing.assert_array_equal(np.asarray(got.distances),
+                                  np.asarray(want.distances))
+    # Serving-default knobs: approximate, but above the serving recall bar.
+    de = aggregate_topk(jnp.stack([r["dv"] for r in runs]),
+                        jnp.stack([r["di"] for r in runs]), K)
+    exact = knn_query(jnp.asarray(fleet.q), jnp.asarray(fleet.vecs), K)
+    assert _recall(de.indices, exact.indices) >= 0.95
+
+
+def test_router_matches_single_host_bit_identical(fleet):
+    router = load_router(shard_dirs(fleet.root))
+    assert router.n_live == len(fleet.idx)
+    got = router.search(fleet.q, K)
+    _assert_bit_identical(fleet.idx.search(fleet.q, K), got)
+
+
+def test_router_through_query_engine(fleet):
+    """The router duck-types the index surface the engine batches onto."""
+    from repro.serving import EngineConfig, QueryEngine
+
+    router = load_router(shard_dirs(fleet.root))
+    eng = QueryEngine(router, EngineConfig(k=K, min_batch=8, max_batch=64))
+    got = eng.search(fleet.q, K)
+    _assert_bit_identical(fleet.idx.search(fleet.q, K), got)
+    assert eng.meter.summary()["compile_batches"] >= 1
+
+
+def test_dispatch_skip_is_bit_stable_and_recall_holds(fleet, tmp_path):
+    """At serving defaults (partial probe sets) the router skips shards no
+    query probes; the skipped shards' +inf runs must not change one bit vs
+    aggregating every worker's actual run.  Non-pow2 fleet (S=3) on purpose:
+    the aggregator pads to 4."""
+    idx = RetrievalIndex.build(np.arange(N), fleet.vecs,
+                               ivf_cells=NCELLS, pq_m=8, **DEFAULTS)
+    root = str(tmp_path / "fleet3")
+    save_shards(idx, root, 3)
+    router = load_router(shard_dirs(root))
+    got = router.search(fleet.q, K)
+    runs = [w.topk(fleet.q, K) for w in router.workers]
+    full = aggregate_topk(jnp.stack([r.distances for r in runs]),
+                          jnp.stack([r.indices for r in runs]), K)
+    np.testing.assert_array_equal(np.asarray(got.ids), np.asarray(full.indices))
+    np.testing.assert_array_equal(np.asarray(got.distances),
+                                  np.asarray(full.distances))
+    exact = knn_query(jnp.asarray(fleet.q), jnp.asarray(fleet.vecs), K)
+    assert _recall(got.ids, exact.indices) >= 0.95
+
+
+# -- property tests ----------------------------------------------------------
+
+
+def _tiny_worker(spec, ncells, fingerprint="f0"):
+    cap, d = 2, 4
+    cfg = dict(dim=d, distance="sqeuclidean", scan_dtype="float32",
+               overfetch=4, ivf_cells=ncells, nprobe=4, pq_m=0, pq_nbits=8)
+    n_loc = spec.ncells_local * cap
+    return ShardWorker(spec,
+                       centroids=np.zeros((ncells, d), np.float32),
+                       packed=np.zeros((n_loc, d), np.float32),
+                       ids_of_slot=np.arange(n_loc, dtype=np.int32),
+                       live=np.ones(n_loc, bool), config=cfg,
+                       parent={"fingerprint": fingerprint})
+
+
+@hypothesis.settings(max_examples=25, deadline=None)
+@hypothesis.given(n_shards=st.integers(1, NCELLS),
+                  seed=st.integers(0, 100_000), use_plan=st.booleans())
+def test_routing_partition_unique_owner_and_coverage(n_shards, seed, use_plan):
+    """Every cell has exactly one owner; the dispatched shards cover the
+    probe set — for planned AND arbitrary random cell-range partitions."""
+    rng = np.random.default_rng(seed)
+    if use_plan:
+        specs = plan_shards(NCELLS, n_shards)
+    else:
+        cuts = sorted(rng.choice(np.arange(1, NCELLS), size=n_shards - 1,
+                                 replace=False).tolist())
+        bounds = [0] + cuts + [NCELLS]
+        specs = [ShardSpec(i, n_shards, bounds[i], bounds[i + 1])
+                 for i in range(n_shards)]
+    # Exactly one owning shard per cell, straight off the spec ranges.
+    for c in range(NCELLS):
+        assert sum(s.cell_lo <= c < s.cell_hi for s in specs) == 1
+    router = ShardRouter([_tiny_worker(s, NCELLS) for s in specs])
+    probe = rng.integers(0, NCELLS, size=(3, rng.integers(1, 8)))
+    owners = router.owners_of(probe)
+    assert owners.shape == probe.shape
+    for c, o in zip(probe.ravel(), owners.ravel()):
+        w = router.workers[o].spec
+        assert w.cell_lo <= c < w.cell_hi
+    covered = set()
+    for o in np.unique(owners):
+        w = router.workers[o].spec
+        covered.update(range(w.cell_lo, w.cell_hi))
+    assert set(probe.ravel().tolist()) <= covered
+
+
+@hypothesis.settings(max_examples=30, deadline=None)
+@hypothesis.given(n_shards=st.integers(1, 6), m=st.integers(1, 3),
+                  k=st.sampled_from([1, 3, 4, 7, 10]),
+                  seed=st.integers(0, 100_000), wire=st.booleans())
+def test_aggregate_matches_flat_sort(n_shards, m, k, seed, wire):
+    """Butterfly merge == flat sort of the concatenated per-shard runs, with
+    heavy duplicate-distance ties, +inf/-1 tombstone entries, random shard
+    counts (incl. non-pow2) and k; bf16 wire storage included (the drawn
+    values are bf16-exact, so the flat-sort oracle still applies bitwise)."""
+    K = T.next_pow2(k)
+    rng = np.random.default_rng(seed)
+    vals = rng.integers(0, 5, size=(n_shards, m, K)).astype(np.float32)
+    ids = (np.arange(n_shards)[:, None, None] * 1000
+           + np.arange(m)[None, :, None] * 100
+           + np.arange(K)[None, None, :]).astype(np.int32)
+    dead = rng.random((n_shards, m, K)) < 0.3
+    vals[dead] = np.inf
+    ids[dead] = -1
+    order = np.argsort(vals, axis=-1, kind="stable")
+    vals = np.take_along_axis(vals, order, axis=-1)
+    ids = np.take_along_axis(ids, order, axis=-1)
+    got = aggregate_topk(jnp.asarray(vals), jnp.asarray(ids), k,
+                         wire_dtype="bfloat16" if wire else None)
+    gv, gi = np.asarray(got.distances), np.asarray(got.indices)
+    assert gv.shape == gi.shape == (m, k)
+    for j in range(m):
+        flat = np.sort(vals[:, j, :].ravel(), kind="stable")
+        np.testing.assert_array_equal(gv[j], flat[:k])
+        # Each returned (value, id) pair is an actual input entry, no entry
+        # returned more often than it occurs (ties resolve to SOME real id).
+        from collections import Counter
+
+        pool = Counter(zip(vals[:, j, :].ravel().tolist(),
+                           ids[:, j, :].ravel().tolist()))
+        for v, i in zip(gv[j].tolist(), gi[j].tolist()):
+            assert pool[(v, i)] > 0, (v, i)
+            pool[(v, i)] -= 1
+
+
+# -- fault paths -------------------------------------------------------------
+
+
+def _tamper_shard_manifest(sd, fn):
+    path = os.path.join(sd, "manifest.json")
+    with open(path) as f:
+        m = json.load(f)
+    fn(m)
+    with open(path, "w") as f:
+        json.dump(m, f)
+
+
+def test_overlapping_cell_ranges_raise(fleet, tmp_path):
+    root = str(tmp_path / "fleet")
+    shutil.copytree(fleet.root, root)
+    dirs = shard_dirs(root)
+    # Shift shard 1's range onto shard 0's (same width: per-shard geometry
+    # still self-consistent, so only the fleet-level check can catch it).
+    _tamper_shard_manifest(
+        dirs[1], lambda m: m["shard"].update(cell_lo=2, cell_hi=6))
+    with pytest.raises(SnapshotError, match="overlap"):
+        load_router(dirs, strict=False)
+
+
+def test_mixed_parent_snapshots_raise(fleet, tmp_path):
+    other = RetrievalIndex.build(np.arange(N),
+                                 clustered_vectors(N, D, seed=23),
+                                 **EXHAUSTIVE)
+    root = str(tmp_path / "other")
+    save_shards(other, root, NSHARDS)
+    mixed = [fleet.paths[0]] + shard_dirs(root)[1:]
+    with pytest.raises(SnapshotError, match="parent snapshot signature"):
+        load_router(mixed)
+
+
+def test_incomplete_fleet_strict_raises_lazy_fails_per_query(fleet):
+    with pytest.raises(SnapshotError, match="covers"):
+        load_router(fleet.paths[:-1])
+    router = load_router(fleet.paths[:-1], strict=False)
+    # Exhaustive config: every query probes every cell, so any query hits
+    # the missing shard's range — loud, never a silently partial top-k.
+    with pytest.raises(MissingShardError, match="owned by no loaded shard"):
+        router.search(fleet.q, K)
+
+
+def test_save_shards_guards(fleet, tmp_path):
+    flat = RetrievalIndex.build(np.arange(256),
+                                clustered_vectors(256, 16, seed=3))
+    with pytest.raises(SnapshotError, match="IVF"):
+        save_shards(flat, str(tmp_path / "flat"), 2)
+    churned = RetrievalIndex.build(np.arange(N), fleet.vecs, **EXHAUSTIVE)
+    churned.upsert([N + 1], np.zeros((1, D), np.float32))
+    with pytest.raises(SnapshotError, match="compact"):
+        save_shards(churned, str(tmp_path / "delta"), 2)
+    with pytest.raises(ValueError, match="n_shards"):
+        plan_shards(NCELLS, 0)
+    with pytest.raises(ValueError, match="n_shards"):
+        plan_shards(NCELLS, NCELLS + 1)
+
+
+def test_restore_shard_roundtrips_geometry(fleet):
+    w = restore_shard(fleet.paths[1])
+    assert w.spec == ShardSpec(1, NSHARDS, 4, 8)
+    assert w.dim == D and w.pq_codes is not None
+    assert w.packed.shape[0] == w.spec.ncells_local * w.cell_cap
+
+
+# -- service layer -----------------------------------------------------------
+
+
+def test_service_shards_roundtrip_and_config_mismatch(tmp_path):
+    import jax
+
+    from repro.configs import registry as REG
+    from repro.models.nn import split_params
+    from repro.serving import ServiceConfig, TwoTowerRetrievalService
+
+    arch = REG.get("two-tower-retrieval")
+    cfg = arch.smoke_config()
+    values, _ = split_params(arch.init_params(jax.random.PRNGKey(0), cfg))
+    root = str(tmp_path / "shards")
+    svc = TwoTowerRetrievalService(
+        values, cfg, ServiceConfig(k=5, ivf_cells=8, nprobe=8, shards=2,
+                                   snapshot_dir=root))
+    rng = np.random.default_rng(1)
+    n = 512
+    fields = rng.integers(0, min(cfg.i_sizes()),
+                          size=(n, cfg.n_item_fields)).astype(np.int32)
+    svc.build_corpus(np.arange(n), fields)
+    ukeys = np.arange(7)
+    ufields = rng.integers(0, min(cfg.u_sizes()),
+                           size=(7, cfg.n_user_fields)).astype(np.int32)
+    paths = svc.save_shards()
+    assert len(paths) == 2
+    svc.restore_shards()
+    assert isinstance(svc.engine.index, ShardRouter)
+    ids, scores = svc.recommend(ukeys, ufields)
+    assert ids.shape == (7, 5) and np.all(ids >= 0)
+
+    # A service with different retrieval knobs must refuse the images.
+    svc2 = TwoTowerRetrievalService(
+        values, cfg, ServiceConfig(k=5, ivf_cells=8, nprobe=4,
+                                   snapshot_dir=root))
+    svc2.build_corpus(np.arange(n), fields)
+    with pytest.raises(SnapshotError, match="config does not match"):
+        svc2.restore_shards()

@@ -137,6 +137,23 @@ def test_empty_delta_and_no_churn_roundtrip(tmp_path):
     assert restored._delta_n == 0 and len(restored) == 300
 
 
+def test_restore_nprobe_above_trained_ncells(tmp_path):
+    """``nprobe`` > the trained cell count clamps — explicitly, through
+    ``effective_nprobe`` — and the clamp survives the snapshot round-trip
+    (a restored index must not probe cells the quantizer never trained)."""
+    idx, q = _churned_index(dict(ivf_cells=16, nprobe=64), seed=17)
+    assert idx._effective_ncells() == 16
+    assert idx.nprobe == 64 and idx.effective_nprobe() == 16
+    # Clamped probing IS exhaustive probing: same bits as nprobe == ncells.
+    ref, _ = _churned_index(dict(ivf_cells=16, nprobe=16), seed=17)
+    _assert_bit_identical(ref.search(q, 10), idx.search(q, 10))
+    snap = str(tmp_path / "snap")
+    idx.save(snap)
+    restored = RetrievalIndex.restore(snap)
+    assert restored.nprobe == 64 and restored.effective_nprobe() == 16
+    _assert_bit_identical(idx.search(q, 10), restored.search(q, 10))
+
+
 # -- hard-fail paths ---------------------------------------------------------
 
 
