@@ -21,7 +21,7 @@ import time
 
 
 SUITES = ("table1", "scaling", "kernels", "selection", "serving", "ivf",
-          "pq", "snapshot", "shards")
+          "pq", "snapshot", "shards", "faults")
 
 
 def run_suite(name: str, smoke: bool) -> None:
@@ -85,6 +85,14 @@ def run_suite(name: str, smoke: bool) -> None:
                                  nprobe=8, shard_counts=(4,))
         else:
             serving.shards_sweep()
+    elif name == "faults":
+        from benchmarks import serving
+        if smoke:
+            serving.faults_sweep(corpus=2048, d=32, k=10, ncells=16,
+                                 nprobe=8, n_shards=4,
+                                 fault_rates=(0.0, 0.1), rounds=4)
+        else:
+            serving.faults_sweep()
     else:
         raise SystemExit(f"unknown suite {name!r}; have {SUITES}")
 

@@ -346,6 +346,121 @@ def shards_sweep(corpus: int = 8192, d: int = 64, k: int = 10,
              f"single_host_bytes={m['single_host_total']:.3e}")
 
 
+def faults_sweep(corpus: int = 4096, d: int = 32, k: int = 10,
+                 ncells: int = 32, nprobe: int = 8, overfetch: int = 8,
+                 n_shards: int = 4, replica_counts=(1, 2),
+                 fault_rates=(0.0, 0.05, 0.1, 0.2), n_queries: int = 64,
+                 rounds: int = 10):
+    """Availability under injected faults (DESIGN.md §14): recall/coverage
+    vs fault rate per replication factor, plus the kill-one-replica rows.
+
+    Two scenarios over one sharded IVF fleet, both on a ``VirtualClock`` so
+    latency spikes and retry backoff advance deterministic virtual time:
+
+    * **Bernoulli faults** — every worker behind a seeded ``FaultPolicy``
+      injecting transient failures / latency spikes (discarded past the
+      deadline) / torn results at the given per-call rate; the row reports
+      measured recall@k vs the healthy fleet, measured mean coverage,
+      dispatch/failure counts, and ``accounting.replicated_fleet_model``'s
+      predicted coverage next to them.  Faulted rows key their recall as
+      ``recall_deg@k`` — intentionally degraded, not a regression for the
+      CI recall gate.
+    * **Replica kill** — one worker of every shard permanently dead from
+      call 0.  R=2 must serve IDENTICAL results to the healthy fleet
+      (failover is bit-invisible — the acceptance criterion); R=1 under
+      ``degraded="partial"`` serves with coverage < 1 and reports it.
+    """
+    import os
+    import shutil
+    import tempfile
+
+    from repro import accounting
+    from repro.data.synthetic import clustered_vectors
+    from repro.serving import (CallPolicy, FaultPolicy, FaultyWorker,
+                               RetrievalIndex, ShardRouter, VirtualClock,
+                               inject_faults, load_fleet)
+    from repro.serving.snapshot import save_shards
+
+    rng = np.random.default_rng(41)
+    vecs = clustered_vectors(corpus, d, seed=31)
+    q = clustered_vectors(n_queries, d, seed=32)
+    kw = dict(ivf_cells=ncells, nprobe=nprobe, overfetch=overfetch)
+    idx = RetrievalIndex.build(np.arange(corpus), vecs, **kw)
+    eff_cells = idx._effective_ncells()
+    S = min(n_shards, eff_cells)
+
+    tmp = tempfile.mkdtemp(prefix="repro-faults-")
+    policy = CallPolicy(deadline_s=0.04, max_attempts=4)
+    try:
+        root = os.path.join(tmp, "fleet")
+        save_shards(idx, root, S, replicas=max(replica_counts))
+        # The availability baseline is the ROUTED healthy fleet: what a
+        # faulted fleet is measured against is itself minus the faults.
+        healthy_ids = np.asarray(load_fleet(root, replicas=1)
+                                 .search(q, k).ids)
+        for R in replica_counts:
+            for f in fault_rates:
+                vc = VirtualClock()
+                meter = accounting.ServingMeter()
+                router = load_fleet(
+                    root, replicas=R, degraded="partial", call_policy=policy,
+                    meter=meter, clock=vc.now, sleep=vc.sleep)
+                if f > 0.0:
+                    router = inject_faults(router, rate=f, seed=23, clock=vc)
+                router.search(q, k)  # compile/warm batch, unmetered timing
+                covs, recalls, secs = [], [], []
+                for _ in range(rounds):
+                    t0 = time.perf_counter()
+                    r = router.search(q, k)
+                    secs.append(time.perf_counter() - t0)
+                    covs.append(float(np.mean(r.coverage)))
+                    recalls.append(_recall_at_k(np.asarray(r.ids),
+                                                healthy_ids))
+                model = accounting.replicated_fleet_model(
+                    S, R, fault_rate=f,
+                    shards_dispatched=accounting.shard_bytes_per_query(
+                        corpus, d, S, k=k, overfetch=overfetch,
+                        ncells=eff_cells, nprobe=min(nprobe, eff_cells),
+                    )["shards_dispatched"])
+                sh = meter.shard_summary()
+                xs = sorted(secs)
+                p99 = xs[min(len(xs) - 1, int(round(0.99 * (len(xs) - 1))))]
+                # Degraded rows key recall as recall_deg@k: the drop is the
+                # fault injection working, not a quality regression — the CI
+                # recall floor gates only healthy-path recall@k rows.
+                rkey = f"recall@{k}" if f == 0.0 else f"recall_deg@{k}"
+                emit(f"faults_r{R}_f{int(f * 100):02d}",
+                     float(np.mean(secs)),
+                     f"{rkey}={float(np.mean(recalls)):.4f};"
+                     f"coverage={float(np.mean(covs)):.4f};"
+                     f"model_coverage={model['expected_coverage']:.4f};"
+                     f"p99_ms={p99 * 1e3:.2f};"
+                     f"dispatches={sh['calls']};failures={sh['failures']};"
+                     f"shards={S};replicas={R};rate={f};rounds={rounds}")
+
+        # Replica-kill rows: replica 0 of EVERY shard permanently dead.
+        for R in replica_counts:
+            vc = VirtualClock()
+            meter = accounting.ServingMeter()
+            router = load_fleet(
+                root, replicas=R, degraded="partial", call_policy=policy,
+                meter=meter, clock=vc.now, sleep=vc.sleep)
+            dead = [FaultyWorker(w, FaultPolicy.die_at(0), clock=vc)
+                    if w.spec.replica == 0 else w for w in router.workers]
+            router = ShardRouter(
+                dead, strict=router.strict, degraded="partial",
+                call_policy=policy, meter=meter, clock=vc.now, sleep=vc.sleep)
+            r = router.search(q, k)
+            ident = bool(np.array_equal(np.asarray(r.ids), healthy_ids))
+            rkey = f"recall@{k}" if R > 1 else f"recall_deg@{k}"
+            emit(f"faults_kill_r{R}", 0.0,
+                 f"{rkey}={_recall_at_k(np.asarray(r.ids), healthy_ids):.4f};"
+                 f"coverage={float(np.mean(r.coverage)):.4f};"
+                 f"bit_identical={int(ident)};shards={S};replicas={R}")
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
 def main(corpus: int = 8192, d: int = 64, k: int = 10,
          batch_sizes=(8, 64, 256), batches: int = 12, churn: int = 512,
          scan_dtypes=("float32", "bfloat16", "int8"), overfetch: int = 4):
@@ -399,6 +514,11 @@ if __name__ == "__main__":
                     help="run the shard-routed serving sweep: routed "
                          "qps/p99/recall per shard count + the modeled "
                          "10^8-row fleet (DESIGN.md §13)")
+    ap.add_argument("--faults", action="store_true",
+                    help="run the availability-under-faults sweep: "
+                         "recall/coverage/p99 vs injected fault rate per "
+                         "replication factor + the replica-kill bit-identity "
+                         "rows (DESIGN.md §14)")
     ap.add_argument("--corpus", type=int, default=8192)
     ap.add_argument("--d", type=int, default=64)
     ap.add_argument("--k", type=int, default=10)
@@ -408,7 +528,10 @@ if __name__ == "__main__":
     ap.add_argument("--nprobe", type=int, default=8)
     a = ap.parse_args()
     print("name,us_per_call,derived")
-    if a.shards:
+    if a.faults:
+        faults_sweep(a.corpus, a.d, a.k, ncells=a.ivf_cells,
+                     nprobe=a.nprobe, overfetch=a.overfetch)
+    elif a.shards:
         shards_sweep(a.corpus, a.d, a.k, (8, 64), a.batches,
                      ncells=a.ivf_cells, nprobe=a.nprobe,
                      overfetch=a.overfetch)

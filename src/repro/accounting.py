@@ -157,6 +157,40 @@ def shard_bytes_per_query(n_rows: int, d: int, n_shards: int, *,
     }
 
 
+def replicated_fleet_model(n_shards: int, replicas: int, *,
+                           shards_dispatched: float,
+                           fault_rate: float = 0.0) -> dict:
+    """Availability/storage model of an R-replicated fleet (DESIGN.md §14).
+
+    Under independent per-call worker failures at probability ``fault_rate``
+    (the ``FaultPolicy.bernoulli`` harness), a dispatched shard is lost only
+    when ALL ``replicas`` of it fail — probability ``f^R`` — so
+      * ``p_shard_served``     = 1 − f^R,
+      * ``p_query_complete``   = (1 − f^R)^dispatched (every dispatched
+        shard of the query's probe set served — coverage 1.0),
+      * ``expected_coverage``  ≈ 1 − f^R (each probed cell's owner is served
+        independently in expectation),
+      * ``storage_factor``     = R (replication is routing-level: R workers
+        hold the same image, so fleet bytes scale by R while per-query scan
+        bytes do NOT — exactly one replica per shard computes), and
+      * ``dispatch_factor``    = 1/(1 − f) expected attempts per served call
+        (geometric retries, capped by the router's attempt budget).
+
+    This is the model the ``faults`` bench sweep prints next to measured
+    coverage/recall so the availability claims stay auditable.
+    """
+    assert replicas >= 1 and 0.0 <= fault_rate < 1.0, (replicas, fault_rate)
+    f = float(fault_rate)
+    p_lost = f ** replicas
+    return {
+        "p_shard_served": 1.0 - p_lost,
+        "p_query_complete": (1.0 - p_lost) ** shards_dispatched,
+        "expected_coverage": 1.0 - p_lost,
+        "storage_factor": float(replicas),
+        "dispatch_factor": 1.0 / (1.0 - f),
+    }
+
+
 def set_unroll(value: bool) -> None:
     _UNROLL[0] = bool(value)
 
@@ -175,6 +209,9 @@ class ServingMeter:
         self._sizes: list[int] = []
         self._secs: list[float] = []
         self._compile_secs: list[float] = []
+        # Per-worker dispatch accounting (the shard router's failover path):
+        # worker key -> [calls, failures, total seconds, last error].
+        self._shard: dict[str, list] = {}
 
     def record(self, batch_size: int, seconds: float, *, compile_batch: bool = False) -> None:
         if compile_batch:
@@ -182,6 +219,30 @@ class ServingMeter:
             return
         self._sizes.append(int(batch_size))
         self._secs.append(float(seconds))
+
+    def record_shard_call(self, worker: str, seconds: float, *, ok: bool,
+                          error: str | None = None) -> None:
+        """One shard-dispatch attempt (including failed/retried ones)."""
+        s = self._shard.setdefault(str(worker), [0, 0, 0.0, None])
+        s[0] += 1
+        s[2] += float(seconds)
+        if not ok:
+            s[1] += 1
+            s[3] = error
+
+    def shard_summary(self) -> dict:
+        """Per-worker calls/failures/latency + fleet failover totals."""
+        workers = {
+            key: {"calls": c, "failures": f,
+                  "error_rate": f / c if c else 0.0,
+                  "mean_ms": secs / c * 1e3 if c else float("nan"),
+                  "last_error": err}
+            for key, (c, f, secs, err) in sorted(self._shard.items())
+        }
+        calls = sum(w["calls"] for w in workers.values())
+        failures = sum(w["failures"] for w in workers.values())
+        return {"workers": workers, "calls": calls, "failures": failures,
+                "error_rate": failures / calls if calls else 0.0}
 
     @property
     def n_batches(self) -> int:
@@ -206,7 +267,7 @@ class ServingMeter:
         return self.n_queries / total if total > 0 else float("nan")
 
     def summary(self) -> dict:
-        return {
+        out = {
             "batches": self.n_batches,
             "queries": self.n_queries,
             "qps": self.qps(),
@@ -217,3 +278,8 @@ class ServingMeter:
             "compile_batches": len(self._compile_secs),
             "compile_s": sum(self._compile_secs),
         }
+        if self._shard:
+            sh = self.shard_summary()
+            out["shard_calls"] = sh["calls"]
+            out["shard_failures"] = sh["failures"]
+        return out

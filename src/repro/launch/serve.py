@@ -37,6 +37,14 @@ Flags (see README.md "CLI reference"):
                     ShardWorkers and serve through the probe-set router +
                     butterfly aggregator (needs --ivf-cells > 0; shard
                     images land under --snapshot-dir or a temp dir)
+  --replicas R      fault-tolerance tier (DESIGN.md §14): restore each shard
+                    image into R independent workers with per-query failover
+                    and per-worker health tracking (needs --shards)
+  --fault-rate F    chaos demo: wrap every worker in a seeded Bernoulli
+                    FaultPolicy injecting failures/latency/garbage at rate F
+                    and report coverage + health afterwards (needs --shards)
+  --degraded P      "refuse" (default: a lost shard raises the structured
+                    error) | "partial" (serve survivors, report coverage)
   --snapshot-dir D  persist the index under D after the corpus build
                     (DESIGN.md §Persistence: versioned, atomic, CRC-stamped)
   --restore         cold-start from the --snapshot-dir snapshot instead of
@@ -80,6 +88,17 @@ def main():
                     help="cut the index into this many cell-range shard "
                          "images and serve through the probe-set router "
                          "(DESIGN.md §13; needs --ivf-cells > 0; 0 = off)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="workers per shard cell range with per-query "
+                         "failover (DESIGN.md §14; needs --shards)")
+    ap.add_argument("--fault-rate", type=float, default=0.0,
+                    help="inject seeded worker faults at this per-call rate "
+                         "(chaos demo; needs --shards)")
+    ap.add_argument("--degraded", choices=("refuse", "partial"),
+                    default="refuse",
+                    help="what a shard with all replicas dead costs: refuse "
+                         "= structured error, partial = serve survivors "
+                         "with per-query coverage")
     ap.add_argument("--snapshot-dir", default=None,
                     help="persist the built index here (DESIGN.md §Persistence)")
     ap.add_argument("--restore", action="store_true",
@@ -99,6 +118,13 @@ def main():
         if args.churn or args.compact_every:
             ap.error("--shards serves immutable shard images; delta churn "
                      "is a single-host path (--churn/--compact-every)")
+    if not args.shards and (args.replicas != 1 or args.fault_rate):
+        ap.error("--replicas/--fault-rate need --shards (they are fleet "
+                 "properties)")
+    if args.replicas < 1:
+        ap.error("--replicas must be >= 1")
+    if not 0.0 <= args.fault_rate < 1.0:
+        ap.error("--fault-rate must be in [0, 1)")
 
     import jax
     import numpy as np
@@ -121,7 +147,8 @@ def main():
                     scan_dtype=args.scan_dtype, overfetch=args.overfetch,
                     ivf_cells=args.ivf_cells, nprobe=args.nprobe,
                     pq_m=args.pq_m, pq_nbits=args.pq_nbits,
-                    snapshot_dir=args.snapshot_dir)
+                    snapshot_dir=args.snapshot_dir,
+                    replicas=args.replicas, degraded=args.degraded)
     mesh = None
     if args.mesh:
         from repro.launch.mesh import make_host_mesh
@@ -178,17 +205,30 @@ def main():
         svc.restore_shards(shard_root)
         r = svc.router
         print(f"[serve] {len(paths)} shard images -> {shard_root} + routed "
-              f"restore in {time.perf_counter() - t0:.2f}s (zero retraining)")
+              f"restore in {time.perf_counter() - t0:.2f}s (zero retraining; "
+              f"{r.n_replicas} replica(s)/shard, degraded={r.degraded!r})")
         for w in r.workers:
-            print(f"[serve]   shard {w.spec.shard_id}: cells "
+            print(f"[serve]   {w.key}: cells "
                   f"[{w.spec.cell_lo}, {w.spec.cell_hi}) "
                   f"{w.packed.shape[0]} slots, {w.n_live} live rows")
+        if args.fault_rate:
+            # Chaos demo (DESIGN.md §14): every worker behind a seeded
+            # Bernoulli FaultPolicy — failures/latency/garbage at the given
+            # per-call rate; the router fails over / degrades through them.
+            from repro.serving import inject_faults
+
+            svc.router = inject_faults(r, rate=args.fault_rate,
+                                       seed=args.seed)
+            svc.engine.rebind(svc.router)
+            print(f"[serve] fault injection armed: rate={args.fault_rate} "
+                  f"seed={args.seed}")
 
     # Online: batches of user queries with optional churn/compaction.
     n_users = 4 * args.queries
     user_pool = rng.integers(
         0, user_lim, size=(n_users, cfg.n_user_fields)).astype(np.int32)
     next_item = args.corpus
+    refused = 0
     for b in range(args.batches):
         n_rep = int(args.queries * args.repeat_frac)
         keys = np.concatenate([
@@ -200,7 +240,21 @@ def main():
             rng.integers(0, user_lim,
                          size=(args.queries - n_rep, cfg.n_user_fields)),
         ]).astype(np.int32)
-        ids, scores = svc.recommend(keys, fields)
+        if args.fault_rate:
+            # Under degraded="refuse" a lost shard refuses the whole batch —
+            # that IS the contract; count it instead of crashing the demo.
+            from repro.serving import MissingShardError
+
+            try:
+                ids, scores = svc.recommend(keys, fields)
+            except MissingShardError as e:
+                refused += 1
+                print(f"[serve] batch {b} refused: shards "
+                      f"{list(e.shard_ids)} unavailable "
+                      f"({len(e.attempts)} failover attempts)")
+                continue
+        else:
+            ids, scores = svc.recommend(keys, fields)
 
         if args.churn:
             churn_ids = np.arange(next_item, next_item + args.churn)
@@ -226,6 +280,17 @@ def main():
           f"cache hit-rate={st['cache']['hit_rate']:.2f} "
           f"({st['cache']['hits']}/{st['cache']['hits'] + st['cache']['misses']})")
     print(f"[serve] top-1 sample: ids={ids[0, :5]} score={scores[0, :5].round(3)}")
+    fleet = st.get("fleet")
+    if fleet is not None and (args.fault_rate or args.replicas > 1):
+        d = fleet["dispatch"]
+        print(f"[serve] fleet: {fleet['n_shards']} shards x "
+              f"{fleet['replicas']} replicas, degraded={fleet['degraded']!r}"
+              f"; dispatches={d['calls']} failures={d['failures']} "
+              f"(error rate {d['error_rate']:.3f}); refused batches="
+              f"{refused}")
+        for key, h in fleet["health"].items():
+            print(f"[serve]   {key}: {h['state']} "
+                  f"(ok={h['successes']} fail={h['failures']})")
 
 
 if __name__ == "__main__":

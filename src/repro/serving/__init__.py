@@ -11,29 +11,64 @@ Layering (each importable on its own):
               the end-to-end recommender flow.
   snapshot.py versioned on-disk save/restore of the full index state —
               restart without re-embedding or retraining (§Persistence) —
-              plus per-shard images (save_shards/restore_shard).
+              plus per-shard images (save_shards/restore_shard) and the
+              replicated-fleet manifest (read_fleet_manifest).
   shards.py   ShardRouter/ShardWorker — cell-range sharding, probe-set
               routing, butterfly top-k aggregation (§13 Shard-routed
-              serving).
+              serving), replica failover + degraded serving (§14).
+  health.py   HealthTracker/CallPolicy — per-worker health state machine
+              and the deadline/retry/backoff failover call wrapper (§14).
+  faults.py   FaultPolicy/FaultyWorker/VirtualClock — deterministic seeded
+              fault injection for chaos tests and the --fault-rate demo.
 """
 from repro.serving.cache import EmbeddingCache
 from repro.serving.engine import EngineConfig, QueryEngine
+from repro.serving.faults import (
+    FaultInjectionError,
+    FaultPolicy,
+    FaultyWorker,
+    VirtualClock,
+    inject_faults,
+)
+from repro.serving.health import (
+    CallPolicy,
+    HealthConfig,
+    HealthState,
+    HealthTracker,
+    run_with_failover,
+)
 from repro.serving.index import RetrievalIndex, SearchResult
 from repro.serving.service import ServiceConfig, TwoTowerRetrievalService
 from repro.serving.shards import (
     MissingShardError,
     ShardRouter,
     ShardSpec,
+    ShardUnavailableError,
     ShardWorker,
+    TornResultError,
     aggregate_topk,
+    load_fleet,
     load_router,
     plan_shards,
+    validate_run,
 )
-from repro.serving.snapshot import SnapshotError, restore_shard, save_shards
+from repro.serving.snapshot import (
+    SnapshotError,
+    read_fleet_manifest,
+    restore_shard,
+    save_shards,
+)
 
 __all__ = [
+    "CallPolicy",
     "EmbeddingCache",
     "EngineConfig",
+    "FaultInjectionError",
+    "FaultPolicy",
+    "FaultyWorker",
+    "HealthConfig",
+    "HealthState",
+    "HealthTracker",
     "MissingShardError",
     "QueryEngine",
     "RetrievalIndex",
@@ -41,12 +76,20 @@ __all__ = [
     "ServiceConfig",
     "ShardRouter",
     "ShardSpec",
+    "ShardUnavailableError",
     "ShardWorker",
     "SnapshotError",
+    "TornResultError",
     "TwoTowerRetrievalService",
+    "VirtualClock",
     "aggregate_topk",
+    "inject_faults",
+    "load_fleet",
     "load_router",
     "plan_shards",
+    "read_fleet_manifest",
     "restore_shard",
+    "run_with_failover",
     "save_shards",
+    "validate_run",
 ]

@@ -103,13 +103,26 @@ class QueryEngine:
         if len(q) == 0:  # nothing to score, nothing to meter
             return SearchResult(jnp.zeros((0, k), jnp.float32),
                                 jnp.zeros((0, k), jnp.int32))
-        out_v, out_i = [], []
+        out_v, out_i, out_c, out_s = [], [], [], []
         for s in range(0, len(q), self.cfg.max_batch):
             chunk = q[s : s + self.cfg.max_batch]
             r = self._search_padded(chunk, k)
             out_v.append(r.distances)
             out_i.append(r.ids)
-        return SearchResult(jnp.concatenate(out_v), jnp.concatenate(out_i))
+            if r.coverage is not None:
+                out_c.append(r.coverage)
+            if r.shard_status is not None:
+                out_s.append(r.shard_status)
+        # Degraded-serving accounting rides along: per-query coverage
+        # concatenates chunk-wise; per-shard status folds worst-wins.
+        coverage = np.concatenate(out_c) if len(out_c) == len(out_v) else None
+        status = None
+        if out_s:
+            from repro.serving.shards import merge_shard_status
+
+            status = merge_shard_status(out_s)
+        return SearchResult(jnp.concatenate(out_v), jnp.concatenate(out_i),
+                            coverage=coverage, shard_status=status)
 
     def _search_padded(self, chunk: np.ndarray, k: int) -> SearchResult:
         m = len(chunk)
@@ -129,9 +142,13 @@ class QueryEngine:
         self._seen_shapes.add(shape_key)
         t0 = time.perf_counter()
         res = self.index.search(qp, k)
-        res = jax.block_until_ready(res)
+        # Block on the array legs only: coverage is host numpy and
+        # shard_status is plain python — neither has device futures.
+        jax.block_until_ready((res.distances, res.ids))
         self.meter.record(m, time.perf_counter() - t0, compile_batch=cold)
-        return SearchResult(res.distances[:m], res.ids[:m])
+        cov = None if res.coverage is None else res.coverage[:m]
+        return SearchResult(res.distances[:m], res.ids[:m], coverage=cov,
+                            shard_status=res.shard_status)
 
     # -- micro-batch queue --------------------------------------------------
 

@@ -50,6 +50,11 @@ _MIN_DELTA_CAP = 64
 class SearchResult(NamedTuple):
     distances: Array  # [m, k] ascending
     ids: Array  # [m, k] int32 external ids, -1 past the live count
+    # Fault-tolerance accounting (DESIGN.md §14), populated by ShardRouter
+    # (all-ones coverage on a healthy fleet); None on single-host paths, so
+    # the 2-tuple construction/unpacking everywhere else keeps working.
+    coverage: np.ndarray | None = None  # [m] fraction of probed cells served
+    shard_status: tuple | None = None  # ((shard_id, "ok|skipped|failed"),...)
 
 
 @functools.partial(jax.jit, static_argnames=("k_out", "distance", "impl"))

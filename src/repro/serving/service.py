@@ -56,6 +56,15 @@ class ServiceConfig:
     # restore_shards() rebind the engine onto a ShardRouter over their
     # restored workers.  Requires ivf_cells > 0 — cells ARE the partition.
     shards: int = 0
+    # Fault-tolerance tier (DESIGN.md §14): each cell range owned by
+    # ``replicas`` workers with per-query failover; ``degraded`` decides
+    # what a shard with ALL replicas exhausted costs — "refuse" raises the
+    # structured error, "partial" serves survivors with explicit per-query
+    # coverage; ``deadline_s`` is the per-shard-dispatch wall budget (None =
+    # unbounded, the compile-friendly default).
+    replicas: int = 1
+    degraded: str = "refuse"
+    deadline_s: float | None = None
 
 
 class TwoTowerRetrievalService:
@@ -205,12 +214,15 @@ class TwoTowerRetrievalService:
     # -- persistence: shard-routed serving (DESIGN.md §13) ------------------
 
     def save_shards(self, directory: str | None = None,
-                    n_shards: int | None = None) -> list[str]:
+                    n_shards: int | None = None,
+                    *, replicas: int | None = None) -> list[str]:
         """Cut the index into per-shard images under ``directory``.
 
-        Defaults: ``ServiceConfig.snapshot_dir`` / ``ServiceConfig.shards``.
-        Each shard manifest carries this service's tower-params fingerprint,
-        same contract as ``save_index``.
+        Defaults: ``ServiceConfig.snapshot_dir`` / ``ServiceConfig.shards`` /
+        ``ServiceConfig.replicas`` (recorded in the fleet manifest; images
+        are stored once — replication is routing-level).  Each shard
+        manifest carries this service's tower-params fingerprint, same
+        contract as ``save_index``.
         """
         from repro.serving.snapshot import save_shards
 
@@ -218,26 +230,36 @@ class TwoTowerRetrievalService:
         assert directory, "pass a directory or set ServiceConfig.snapshot_dir"
         n_shards = n_shards if n_shards is not None else self.svc.shards
         assert n_shards >= 1, "pass n_shards or set ServiceConfig.shards"
+        replicas = replicas if replicas is not None else self.svc.replicas
         return save_shards(
-            self.index, directory, n_shards,
+            self.index, directory, n_shards, replicas=replicas,
             extra={"params_crc32": self._params_fingerprint()})
 
     def restore_shards(self, directory: str | None = None,
-                       *, wire_dtype: str | None = None) -> None:
-        """Rebind the engine onto a ShardRouter over restored shard images.
+                       *, wire_dtype: str | None = None,
+                       replicas: int | None = None) -> None:
+        """Rebind the engine onto a ShardRouter over a restored shard fleet.
 
         Same hard-fail contract as ``restore_index``: the shard images'
         recorded config must match this service's retrieval knobs and their
-        params fingerprint (when present) this service's towers.  Queries
-        then flow engine → router → per-shard workers → butterfly merge.
+        params fingerprint (when present) this service's towers.  The fleet
+        manifest's replication factor (override with ``replicas``) expands
+        each image into R independent workers; the router runs this
+        service's degraded policy and per-dispatch deadline, and feeds its
+        per-worker attempt records into the engine meter.  Queries then
+        flow engine → router → failover dispatch → butterfly merge.
         """
-        from repro.serving.shards import load_router
-        from repro.serving.snapshot import SnapshotError, config_signature, shard_dirs
+        from repro.serving.health import CallPolicy
+        from repro.serving.shards import load_fleet
+        from repro.serving.snapshot import SnapshotError, config_signature
 
         directory = directory if directory is not None else self.svc.snapshot_dir
         assert directory, "pass a directory or set ServiceConfig.snapshot_dir"
-        router = load_router(shard_dirs(directory), impl=self.svc.impl,
-                             wire_dtype=wire_dtype)
+        router = load_fleet(
+            directory, impl=self.svc.impl, wire_dtype=wire_dtype,
+            replicas=replicas, degraded=self.svc.degraded,
+            call_policy=CallPolicy(deadline_s=self.svc.deadline_s),
+            meter=self.meter)
         want = dict(config_signature(self.index))
         if router.config != want:
             diff = {k: (router.config.get(k), want[k]) for k in want
@@ -298,10 +320,20 @@ class TwoTowerRetrievalService:
         return np.asarray(res.ids), scores
 
     def stats(self) -> dict:
-        return {
+        out = {
             "index_rows": len(self.index),
             "index_dead": self.index.n_dead,
             "cache": self.user_cache.stats(),
             "serving": self.e2e_meter.summary(),
             "engine": self.meter.summary(),
         }
+        router = getattr(self, "router", None)
+        if router is not None:
+            out["fleet"] = {
+                "n_shards": router.n_shards,
+                "replicas": router.n_replicas,
+                "degraded": router.degraded,
+                "health": router.health.summary(),
+                "dispatch": self.meter.shard_summary(),
+            }
+        return out

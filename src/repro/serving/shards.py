@@ -1,16 +1,17 @@
 """Shard-routed serving: cell-range sharding + probe-set routing + top-k merge.
 
-The scale-out tier of the serving stack (DESIGN.md §13).  The single-host
-IVFADC index already stores the main segment *cell-packed*: cell ``c`` owns
-the contiguous slot range ``[c*cap, (c+1)*cap)``.  That layout makes
-horizontal partitioning free — a shard is a contiguous CELL RANGE
-``[cell_lo, cell_hi)``, i.e. a pure slice of the packed rows, the per-slot
-ids/live masks and the PQ codes, with zero retraining: the coarse quantizer
-(centroids, tiny) replicates to every shard, exactly the FAISS billion-scale
-blueprint (PAPERS.md) and the same partitioning ``make_ivfpq_query_sharded``
-uses across a device mesh, lifted to process granularity.
+The scale-out tier of the serving stack (DESIGN.md §13), plus its
+fault-tolerance tier (DESIGN.md §14).  The single-host IVFADC index already
+stores the main segment *cell-packed*: cell ``c`` owns the contiguous slot
+range ``[c*cap, (c+1)*cap)``.  That layout makes horizontal partitioning
+free — a shard is a contiguous CELL RANGE ``[cell_lo, cell_hi)``, i.e. a
+pure slice of the packed rows, the per-slot ids/live masks and the PQ codes,
+with zero retraining: the coarse quantizer (centroids, tiny) replicates to
+every shard, exactly the FAISS billion-scale blueprint (PAPERS.md) and the
+same partitioning ``make_ivfpq_query_sharded`` uses across a device mesh,
+lifted to process granularity.
 
-Three pieces:
+Pieces:
 
 * ``ShardWorker`` — one shard's local query: global probe → cell-masked ADC
   (or scalar) scan of the local slice → exact fp32 rescore → external ids,
@@ -21,16 +22,29 @@ Three pieces:
   off-TPU — because the scalar-prefetch kernels' probe-list contract wants
   every listed cell in-range, which routing does not guarantee per shard.
 * routing — each query's probe set (from the replicated quantizer) maps to
-  owning shards through a dense cell→shard table; the router dispatches a
-  batch only to shards some query in it probes.  A probed cell owned by no
-  loaded shard raises ``MissingShardError`` — never a silent partial result.
+  owning REPLICA GROUPS through a dense cell→group table; the router
+  dispatches a batch only to groups some query in it probes.  Within a
+  group the replica is chosen load-aware (least-outstanding, then health
+  rank, then round-robin rotation), and every dispatch runs through the
+  deadline/retry/backoff failover wrapper (serving/health.py) with
+  per-worker health state and torn-result validation (``validate_run``).
+* degradation — a probed cell owned by no loaded shard, or a shard whose
+  replicas are ALL exhausted within the deadline budget, is governed by the
+  ``degraded`` policy: ``"refuse"`` (default) raises a structured
+  ``MissingShardError``/``ShardUnavailableError`` carrying the offending
+  cells, shard ids and per-replica attempts — never a silent partial
+  result; ``"partial"`` serves the surviving shards' merge and reports the
+  damage explicitly — ``SearchResult.coverage`` (per-query fraction of
+  probed cells actually served) and ``SearchResult.shard_status``.
 * ``aggregate_topk`` — the thin aggregator: an explicit XOR-butterfly of
   bitonic ``merge_topk_sorted`` rounds over the (pow2-padded) shard axis,
   the SAME round structure, tie-break and optional bf16-wire rounding as
   ``tree_merge_topk``'s ppermute tree.  Merge order is a function of shard
-  position alone — undispatched shards contribute +inf runs — so the merged
-  (values, ids) are deterministic and bit-stable regardless of which subset
-  of shards actually computed.
+  position alone — undispatched (or failed) shards contribute +inf runs —
+  so the merged (values, ids) are deterministic and bit-stable regardless
+  of which subset of shards actually computed.  That +inf-identity is what
+  makes both failover (a replica's run is bit-equal to its peer's) and
+  degraded serving (a dead shard's run is the merge identity) exact.
 
 ``ShardRouter`` duck-types the index surface ``QueryEngine`` needs
 (``search`` / ``shape_signature`` / ``dim``), so the serving engine rebinds
@@ -39,6 +53,8 @@ onto a shard fleet exactly as it rebinds onto a restored index.
 from __future__ import annotations
 
 import functools
+import random
+import time
 from typing import NamedTuple, Sequence
 
 import jax
@@ -50,42 +66,80 @@ from repro.core.distances import quantize_rows
 from repro.core.ivf import probe_cells
 from repro.core.knn import KNNResult, quantized_scan, rescore, scan_width
 from repro.core.pq import pq_cell_bias
+from repro.serving.health import (Attempt, CallPolicy, HealthConfig,
+                                  HealthState, HealthTracker,
+                                  run_with_failover)
 from repro.serving.index import SearchResult
 from repro.serving.snapshot import SnapshotError
 
 Array = jnp.ndarray
 
+DEGRADED_POLICIES = ("refuse", "partial")
+
 
 class MissingShardError(RuntimeError):
-    """A query's probe set touched a cell owned by no loaded shard."""
+    """A query's probe set touched a cell the fleet cannot serve.
+
+    Structured for callers and tests (DESIGN.md §14): ``cells`` are the
+    offending probed cell ids, ``shard_ids`` the shard positions involved,
+    ``attempts`` the per-replica ``health.Attempt`` records of whatever
+    failover was tried before giving up (empty when no shard owned the
+    cells at all).
+    """
+
+    def __init__(self, message: str, *, cells: Sequence[int] = (),
+                 shard_ids: Sequence[int] = (),
+                 attempts: Sequence[Attempt] = ()):
+        super().__init__(message)
+        self.cells = tuple(int(c) for c in cells)
+        self.shard_ids = tuple(int(s) for s in shard_ids)
+        self.attempts = tuple(attempts)
+
+
+class ShardUnavailableError(MissingShardError):
+    """Every replica of a dispatched shard failed within the deadline."""
+
+
+class TornResultError(RuntimeError):
+    """A worker reply failed result validation (garbage/torn run)."""
 
 
 class ShardSpec(NamedTuple):
-    """One shard's slot in a cell-range partition of ``[0, ncells)``."""
+    """One worker's slot in a replicated cell-range partition of
+    ``[0, ncells)``: replica ``replica`` (of ``n_replicas``) of cell range
+    ``[cell_lo, cell_hi)`` — all replicas of a range serve identical data."""
 
     shard_id: int
     n_shards: int
     cell_lo: int
     cell_hi: int  # exclusive
+    replica: int = 0
+    n_replicas: int = 1
 
     @property
     def ncells_local(self) -> int:
         return self.cell_hi - self.cell_lo
 
 
-def plan_shards(ncells: int, n_shards: int) -> list[ShardSpec]:
-    """Balanced contiguous cell ranges covering ``[0, ncells)`` exactly.
+def plan_shards(ncells: int, n_shards: int,
+                replicas: int = 1) -> list[ShardSpec]:
+    """Balanced contiguous cell ranges covering ``[0, ncells)`` exactly,
+    each owned by ``replicas`` workers.
 
     Ranges differ by at most one cell; every cell belongs to exactly one
-    shard (the routing property the property tests pin down).
+    RANGE (the routing property the property tests pin down), and every
+    range appears once per replica — ``n_shards * replicas`` specs total,
+    ordered by (shard_id, replica).
     """
     if not 1 <= n_shards <= ncells:
         raise ValueError(
             f"need 1 <= n_shards <= ncells, got n_shards={n_shards} "
             f"ncells={ncells} (a shard must own at least one cell)")
+    if replicas < 1:
+        raise ValueError(f"need replicas >= 1, got {replicas}")
     bounds = [(i * ncells) // n_shards for i in range(n_shards + 1)]
-    return [ShardSpec(i, n_shards, bounds[i], bounds[i + 1])
-            for i in range(n_shards)]
+    return [ShardSpec(i, n_shards, bounds[i], bounds[i + 1], r, replicas)
+            for i in range(n_shards) for r in range(replicas)]
 
 
 # ---------------------------------------------------------------------------
@@ -170,6 +224,11 @@ class ShardWorker:
             distance=self.config["distance"]))
 
     @property
+    def key(self) -> str:
+        """Stable worker identity for health/metering: shard + replica."""
+        return f"s{self.spec.shard_id}r{self.spec.replica}"
+
+    @property
     def dim(self) -> int:
         return int(self.packed.shape[1])
 
@@ -199,6 +258,31 @@ class ShardWorker:
         return KNNResult(vals, ids)
 
 
+def validate_run(run: KNNResult, m: int, K: int) -> KNNResult:
+    """Reject torn/garbage worker replies before they can reach the merge.
+
+    A faulty worker that RAISES is easy; one that returns a half-written or
+    corrupt buffer is the failure mode that silently serves wrong neighbors.
+    Checks: value/id geometry is exactly [m, K] on both legs, ids are
+    integral, values are NaN-free and each row is ascending (the sorted-run
+    contract the bitonic merge requires).  Violations raise
+    ``TornResultError`` — the failover wrapper treats that exactly like a
+    worker exception.  +inf padding (id -1) is valid by construction.
+    """
+    vals = np.asarray(run.distances)
+    ids = np.asarray(run.indices)
+    if vals.shape != (m, K) or ids.shape != (m, K):
+        raise TornResultError(
+            f"run geometry {vals.shape}/{ids.shape} != ({m}, {K})")
+    if not np.issubdtype(ids.dtype, np.integer):
+        raise TornResultError(f"run ids dtype {ids.dtype} is not integral")
+    if np.isnan(vals).any():
+        raise TornResultError("run values contain NaN")
+    if K > 1 and not np.all(vals[:, 1:] >= vals[:, :-1]):
+        raise TornResultError("run values are not ascending-sorted")
+    return run
+
+
 # ---------------------------------------------------------------------------
 # Thin aggregator: the butterfly merge, shard-position-stable.
 # ---------------------------------------------------------------------------
@@ -217,7 +301,9 @@ def aggregate_topk(vals: Array, ids: Array, k: int, *,
     the running buffer is STORED in the wire dtype between rounds while
     merges compare in fp32, so a future cross-host transport that ships
     bf16 payloads keeps these exact results.  Non-pow2 shard counts pad
-    with +inf runs — padding is the identity of the merge.
+    with +inf runs — padding is the identity of the merge, which is also
+    what makes degraded serving exact: a failed shard's +inf run merges to
+    exactly the flat-sort top-k of the surviving runs (property-tested).
     """
     S, m, K = vals.shape
     Sp = T.next_pow2(S)
@@ -245,91 +331,172 @@ def aggregate_topk(vals: Array, ids: Array, k: int, *,
 
 
 # ---------------------------------------------------------------------------
-# Router: probe-set → owning shards, dispatch, aggregate.
+# Router: probe-set → owning replica groups, failover dispatch, aggregate.
 # ---------------------------------------------------------------------------
+
+_STATUS_RANK = {"failed": 3, "missing": 2, "ok": 1, "skipped": 0}
+
+
+def merge_shard_status(statuses: Sequence[tuple]) -> tuple:
+    """Fold per-chunk ``shard_status`` tuples into one (worst status wins).
+
+    The engine chunks big batches; a shard that failed in ANY chunk must
+    read as failed in the merged report, while one that was merely skipped
+    everywhere stays skipped.
+    """
+    worst: dict[int, str] = {}
+    for chunk in statuses:
+        for sid, st in chunk:
+            if _STATUS_RANK[st] > _STATUS_RANK.get(worst.get(sid, "skipped"),
+                                                   0):
+                worst[sid] = st
+    return tuple(sorted(worst.items()))
 
 
 class ShardRouter:
-    """Routes query batches to the shards owning their probe sets.
+    """Routes query batches to the replica groups owning their probe sets.
 
-    Assembly-time validation is the fault barrier: shard specs must be
-    pairwise disjoint, agree on the parent snapshot signature and config,
-    and (unless ``strict=False``) cover every cell — violations raise
-    ``SnapshotError`` before anything serves.  With a partial fleet
-    (``strict=False``), coverage is enforced per QUERY instead: a probe
-    into an unowned cell raises ``MissingShardError``, never a silently
-    truncated result set.
+    Assembly-time validation is the first fault barrier: worker specs must
+    form pairwise-disjoint cell ranges (replicas of a range must agree on
+    it exactly), agree on the parent snapshot signature and config, and
+    (unless ``strict=False``) cover every cell — ALL violations are
+    collected and raised together in one ``SnapshotError`` (a torn
+    ``save_shards`` that mixed two fleets reports every inconsistent
+    shard, not just the first) before anything serves.
+
+    Query time is the second barrier (DESIGN.md §14): every dispatch runs
+    through the deadline/retry failover wrapper with per-worker health
+    state, torn-result validation, and load-aware replica choice.  What a
+    lost shard costs is the ``degraded`` policy's call: ``"refuse"``
+    raises structured errors, ``"partial"`` serves the surviving merge
+    with per-query ``coverage`` + per-shard status reported on the
+    ``SearchResult``.
     """
 
     def __init__(self, workers: Sequence[ShardWorker], *, strict: bool = True,
-                 wire_dtype: str | None = None):
+                 wire_dtype: str | None = None, degraded: str = "refuse",
+                 call_policy: CallPolicy | None = None,
+                 health_cfg: HealthConfig | None = None,
+                 meter=None, seed: int = 0,
+                 clock=time.monotonic, sleep=time.sleep):
         if not workers:
             raise SnapshotError("ShardRouter needs at least one shard worker")
-        workers = sorted(workers, key=lambda w: w.spec.cell_lo)
+        if degraded not in DEGRADED_POLICIES:
+            raise ValueError(
+                f"degraded={degraded!r} not in {DEGRADED_POLICIES}")
+        workers = sorted(workers,
+                         key=lambda w: (w.spec.cell_lo, w.spec.replica))
         w0 = workers[0]
         self.config = dict(w0.config)
         self.parent = dict(w0.parent)
         self.extra = dict(w0.extra)
         self.ncells = int(w0.centroids.shape[0])
         self.n_shards = w0.spec.n_shards
-        seen_ids: set[int] = set()
+        self.strict = bool(strict)
+        self.degraded = degraded
+        self.call_policy = call_policy if call_policy is not None \
+            else CallPolicy()
+        self.health = HealthTracker(health_cfg if health_cfg is not None
+                                    else HealthConfig())
+        self.meter = meter
+        self.seed = int(seed)
+        self._rng = random.Random(self.seed)
+        self._clock = clock
+        self._sleep = sleep
+        # Collect EVERY assembly violation before raising: a torn fleet
+        # (mixed parents, shifted ranges) is diagnosed in one pass.
+        problems: list[str] = []
+        seen_ids: set[tuple[int, int]] = set()
         for w in workers:
-            if w.spec.shard_id in seen_ids:
-                raise SnapshotError(
-                    f"duplicate shard id {w.spec.shard_id} in fleet")
-            seen_ids.add(w.spec.shard_id)
+            wid = (w.spec.shard_id, w.spec.replica)
+            if wid in seen_ids:
+                problems.append(
+                    f"duplicate shard id {w.spec.shard_id} replica "
+                    f"{w.spec.replica} in fleet")
+            seen_ids.add(wid)
             if w.spec.n_shards != self.n_shards:
-                raise SnapshotError(
+                problems.append(
                     f"shard {w.spec.shard_id} belongs to a {w.spec.n_shards}"
                     f"-way partition, fleet is {self.n_shards}-way")
             if dict(w.config) != self.config:
-                raise SnapshotError(
+                problems.append(
                     f"shard {w.spec.shard_id} config {w.config} != fleet "
                     f"config {self.config}")
             if w.parent.get("fingerprint") != self.parent.get("fingerprint"):
-                raise SnapshotError(
-                    f"shard {w.spec.shard_id} parent snapshot signature "
+                problems.append(
+                    f"shard {w.spec.shard_id} (replica {w.spec.replica}) "
+                    f"parent snapshot signature "
                     f"{w.parent.get('fingerprint')} != fleet's "
                     f"{self.parent.get('fingerprint')} — shards from "
                     f"different parent snapshots cannot serve together")
             if not 0 <= w.spec.cell_lo < w.spec.cell_hi <= self.ncells:
-                raise SnapshotError(
+                problems.append(
                     f"shard {w.spec.shard_id} cell range "
                     f"[{w.spec.cell_lo}, {w.spec.cell_hi}) outside "
                     f"[0, {self.ncells})")
-        for a, b in zip(workers, workers[1:]):
-            if b.spec.cell_lo < a.spec.cell_hi:
-                raise SnapshotError(
-                    f"shard cell ranges overlap: shard {a.spec.shard_id} "
-                    f"[{a.spec.cell_lo}, {a.spec.cell_hi}) vs shard "
-                    f"{b.spec.shard_id} [{b.spec.cell_lo}, {b.spec.cell_hi})")
-        covered = sum(w.spec.ncells_local for w in workers)
+        # Replica groups: workers sharing an identical cell range.  Distinct
+        # ranges must be pairwise disjoint; a partially-overlapping range is
+        # a torn fleet, not a replica.
+        self.workers = list(workers)
+        groups: list[list[int]] = []
+        ranges: list[tuple[int, int]] = []
+        for i, w in enumerate(workers):
+            rng_ = (w.spec.cell_lo, w.spec.cell_hi)
+            if ranges and rng_ == ranges[-1]:
+                groups[-1].append(i)
+            else:
+                ranges.append(rng_)
+                groups.append([i])
+        for (alo, ahi), (blo, bhi) in zip(ranges, ranges[1:]):
+            if blo < ahi:
+                problems.append(
+                    f"shard cell ranges overlap: [{alo}, {ahi}) vs "
+                    f"[{blo}, {bhi})")
+        covered = sum(hi - lo for lo, hi in ranges)
         if strict and covered != self.ncells:
-            raise SnapshotError(
+            problems.append(
                 f"shard set covers {covered}/{self.ncells} cells — an "
                 f"incomplete fleet cannot serve (pass strict=False to route "
                 f"around missing shards and fail per-query instead)")
-        self.workers = list(workers)
+        if problems:
+            raise SnapshotError(
+                f"{len(problems)} fleet assembly violation(s):\n  "
+                + "\n  ".join(problems))
+        self.groups = groups
+        self.n_replicas = max(len(g) for g in groups)
         self.wire_dtype = wire_dtype
         self.centroids = w0.centroids
         self.dim = w0.dim
         self.impl = w0.impl
-        # Dense cell → worker-position table; -1 marks an unowned cell
+        # Dense cell → replica-group table; -1 marks an unowned cell
         # (possible only under strict=False).
         owner = np.full(self.ncells, -1, np.int32)
-        for pos, w in enumerate(workers):
-            owner[w.spec.cell_lo:w.spec.cell_hi] = pos
+        for gid, (lo, hi) in enumerate(ranges):
+            owner[lo:hi] = gid
         self._owner = owner
+        self._outstanding = {w.key: 0 for w in self.workers}
+        self._rr = [0] * len(groups)
 
     @property
     def n_live(self) -> int:
-        return sum(w.n_live for w in self.workers)
+        # Replicas serve identical rows — count each range once (via its
+        # first replica), not once per copy.
+        return sum(self.workers[g[0]].n_live for g in self.groups)
+
+    # -- routing ------------------------------------------------------------
+
+    def _group_of(self, cells: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """(owning group per cell, bad-cell mask) — no raising here."""
+        cells = np.asarray(cells)
+        gid = self._owner[np.clip(cells, 0, self.ncells - 1)]
+        bad = (gid < 0) | (cells < 0) | (cells >= self.ncells)
+        return np.where(bad, -1, gid), bad
 
     def owners_of(self, cells: np.ndarray) -> np.ndarray:
-        """Worker position owning each probed cell; loud on unowned cells."""
+        """Worker position (the group's first replica) owning each probed
+        cell; loud on unowned cells regardless of the degraded policy."""
         cells = np.asarray(cells)
-        owner = self._owner[np.clip(cells, 0, self.ncells - 1)]
-        bad = (owner < 0) | (cells < 0) | (cells >= self.ncells)
+        gid, bad = self._group_of(cells)
         if bad.any():
             missing = np.unique(cells[bad])
             loaded = [(w.spec.shard_id, w.spec.cell_lo, w.spec.cell_hi)
@@ -337,8 +504,10 @@ class ShardRouter:
             raise MissingShardError(
                 f"probe set hits cells {missing.tolist()} owned by no loaded "
                 f"shard (loaded shard (id, lo, hi) ranges: {loaded}); "
-                f"refusing to serve a silently partial result")
-        return owner
+                f"refusing to serve a silently partial result",
+                cells=missing)
+        return np.asarray([self.groups[g][0] for g in gid.ravel()],
+                          np.int32).reshape(gid.shape)
 
     def probe(self, queries) -> np.ndarray:
         """[m, nprobe] global probed cell ids (the replicated quantizer)."""
@@ -348,42 +517,177 @@ class ShardRouter:
             q, self.centroids, nprobe, distance=self.config["distance"],
             impl=self.impl))
 
-    def search(self, queries, k: int) -> SearchResult:
-        """Routed top-k: probe → dispatch to owning shards → butterfly merge.
+    # -- replica choice + failover dispatch ---------------------------------
 
-        Dispatch is batch-granular: a shard runs iff ANY query in the batch
-        probes a cell it owns; the rest contribute +inf runs so the merge
-        tree's shape — and therefore the result bits — never depends on the
-        dispatch pattern.
+    def _replica_order(self, gid: int) -> list[int]:
+        """Admitted replicas of group ``gid``, best-first.
+
+        Load-aware: least outstanding calls first (matters to concurrent
+        callers), then health rank (healthy before probation before
+        degraded), then a per-group round-robin rotation so equal replicas
+        share traffic instead of pinning it on replica 0.
+        """
+        group = self.groups[gid]
+        n = len(group)
+        rot = self._rr[gid]
+        self._rr[gid] = (rot + 1) % n
+        rank = {HealthState.HEALTHY: 0, HealthState.PROBATION: 1,
+                HealthState.DEGRADED: 2}
+        admitted = []
+        for j, widx in enumerate(group):
+            key = self.workers[widx].key
+            if not self.health.admissible(key):
+                continue
+            admitted.append((self._outstanding[key],
+                             rank[self.health.state(key)],
+                             (j - rot) % n, widx))
+        return [widx for *_, widx in sorted(admitted)]
+
+    def _dispatch(self, gid: int, q, k: int, m: int,
+                  K: int) -> tuple[KNNResult | None, list[Attempt]]:
+        """One group's failover call: ordered replicas through the
+        deadline/retry wrapper, replies validated before acceptance."""
+        candidates = []
+        for widx in self._replica_order(gid):
+            w = self.workers[widx]
+
+            def thunk(w=w):
+                self._outstanding[w.key] += 1
+                try:
+                    return validate_run(w.topk(q, k), m, K)
+                finally:
+                    self._outstanding[w.key] -= 1
+
+            candidates.append((w.key, thunk))
+        out, attempts = run_with_failover(
+            candidates, policy=self.call_policy, tracker=self.health,
+            clock=self._clock, sleep=self._sleep, uniform=self._rng.random)
+        if self.meter is not None:
+            for a in attempts:
+                self.meter.record_shard_call(a.worker, a.seconds,
+                                             ok=a.error is None,
+                                             error=a.error)
+        return out, attempts
+
+    # -- search -------------------------------------------------------------
+
+    def search(self, queries, k: int) -> SearchResult:
+        """Routed top-k: probe → failover dispatch → butterfly merge.
+
+        Dispatch is batch-granular: a replica group runs iff ANY query in
+        the batch probes a cell it owns; the rest contribute +inf runs so
+        the merge tree's shape — and therefore the result bits — never
+        depends on the dispatch pattern.  Failover inside a group is
+        bit-invisible (replicas serve identical data); a group that fails
+        outright follows the ``degraded`` policy.
         """
         q = jnp.asarray(queries, jnp.float32)
         m = q.shape[0]
         K = T.next_pow2(k)
-        dispatched = set(np.unique(self.owners_of(self.probe(q))).tolist())
+        self.health.tick()
+        probe = self.probe(q)
+        gid, bad = self._group_of(probe)
+        if bad.any() and self.degraded == "refuse":
+            self.owners_of(probe)  # raises the structured MissingShardError
+        dispatched = set(int(g) for g in np.unique(gid) if g >= 0)
         runs_v, runs_i = [], []
-        for pos, w in enumerate(self.workers):
-            if pos in dispatched:
-                r = w.topk(q, k)
+        status: list[str] = []
+        failed: dict[int, list[Attempt]] = {}
+        inf_v = jnp.full((m, K), T.POS_INF, jnp.float32)
+        inf_i = jnp.full((m, K), -1, jnp.int32)
+        for g in range(len(self.groups)):
+            if g not in dispatched:
+                status.append("skipped")
+                runs_v.append(inf_v)
+                runs_i.append(inf_i)
+                continue
+            r, attempts = self._dispatch(g, q, int(k), int(m), K)
+            if r is None:
+                status.append("failed")
+                failed[g] = attempts
+                runs_v.append(inf_v)
+                runs_i.append(inf_i)
+            else:
+                status.append("ok")
                 runs_v.append(r.distances)
                 runs_i.append(r.indices)
-            else:
-                runs_v.append(jnp.full((m, K), T.POS_INF, jnp.float32))
-                runs_i.append(jnp.full((m, K), -1, jnp.int32))
+        if failed and self.degraded == "refuse":
+            sids = sorted(self.workers[self.groups[g][0]].spec.shard_id
+                          for g in failed)
+            cells = np.unique(probe[np.isin(gid, list(failed))])
+            attempts = [a for ats in failed.values() for a in ats]
+            raise ShardUnavailableError(
+                f"all replicas of shard(s) {sids} exhausted within the "
+                f"deadline budget (probed cells {cells.tolist()}; "
+                f"{len(attempts)} attempt(s): "
+                f"{[(a.worker, a.error) for a in attempts]}); "
+                f"degraded='refuse' — pass degraded='partial' to serve "
+                f"surviving shards with explicit coverage",
+                cells=cells, shard_ids=sids, attempts=attempts)
+        # Per-query coverage: the fraction of probed cells actually served.
+        ok_gids = np.asarray([st == "ok" or st == "skipped"
+                              for st in status])  # skipped == nothing probed
+        served = (gid >= 0) & ~bad
+        if failed:
+            served &= ~np.isin(gid, list(failed))
+        coverage = served.mean(axis=1).astype(np.float32)
         vals, ids = aggregate_topk(jnp.stack(runs_v), jnp.stack(runs_i), k,
                                    wire_dtype=self.wire_dtype)
-        return SearchResult(vals, ids)
+        shard_status = tuple(
+            (int(self.workers[g[0]].spec.shard_id), status[i])
+            for i, g in enumerate(self.groups))
+        return SearchResult(vals, ids, coverage=coverage,
+                            shard_status=shard_status)
 
     def shape_signature(self, k: int) -> tuple:
         """Engine compile-tracking key — static once a fleet is loaded."""
-        return (tuple(int(w.packed.shape[0]) for w in self.workers), 0,
-                ("shards", self.n_shards, T.next_pow2(k)))
+        return (tuple(int(self.workers[g[0]].packed.shape[0])
+                      for g in self.groups), 0,
+                ("shards", self.n_shards, self.n_replicas, T.next_pow2(k)))
 
 
 def load_router(shard_dirs: Sequence[str], *, impl: str | None = None,
-                strict: bool = True,
-                wire_dtype: str | None = None) -> ShardRouter:
-    """Restore every shard image in ``shard_dirs`` and assemble the router."""
+                strict: bool = True, wire_dtype: str | None = None,
+                **router_kw) -> ShardRouter:
+    """Restore every shard image in ``shard_dirs`` and assemble the router.
+
+    Each directory contributes ONE worker (replica 0 of its range); use
+    ``load_fleet`` to restore a replicated fleet from a ``save_shards``
+    root with a fleet manifest.  Extra keyword arguments (``degraded``,
+    ``call_policy``, ``health_cfg``, ``meter``, ...) pass through to
+    ``ShardRouter``.
+    """
     from repro.serving.snapshot import restore_shard
 
     return ShardRouter([restore_shard(d, impl=impl) for d in shard_dirs],
-                       strict=strict, wire_dtype=wire_dtype)
+                       strict=strict, wire_dtype=wire_dtype, **router_kw)
+
+
+def load_fleet(directory: str, *, replicas: int | None = None,
+               impl: str | None = None, strict: bool = True,
+               wire_dtype: str | None = None, **router_kw) -> ShardRouter:
+    """Restore a replicated fleet from a ``save_shards`` root.
+
+    The fleet manifest (``fleet.json``) records the partition arity and
+    replication factor; ``replicas`` overrides the recorded factor (e.g.
+    restore an R=2 fleet at R=1 to save memory in a degraded environment).
+    Every replica is restored INDEPENDENTLY from the shard image — each
+    worker owns its own arrays, exactly as separate replica processes
+    would — and stamped with its replica id.  Roots written before fleet
+    manifests existed load as R=1.
+    """
+    from repro.serving.snapshot import (read_fleet_manifest, restore_shard,
+                                        shard_dirs)
+
+    manifest = read_fleet_manifest(directory)
+    R = int(manifest.get("replicas", 1)) if replicas is None else int(replicas)
+    if R < 1:
+        raise SnapshotError(f"fleet needs replicas >= 1, got {R}")
+    workers = []
+    for d in shard_dirs(directory):
+        for r in range(R):
+            w = restore_shard(d, impl=impl)
+            w.spec = w.spec._replace(replica=r, n_replicas=R)
+            workers.append(w)
+    return ShardRouter(workers, strict=strict, wire_dtype=wire_dtype,
+                       **router_kw)

@@ -456,6 +456,7 @@ def _preload_trained(idx, directory: str, manifest: dict) -> None:
 
 _SHARD = "shard.npz"
 _SHARD_DIR_FMT = "shard-{:03d}"
+_FLEET = "fleet.json"
 
 
 def parent_fingerprint(idx) -> str:
@@ -478,13 +479,17 @@ def parent_fingerprint(idx) -> str:
     return f"{crc:08x}"
 
 
-def save_shards(idx, directory: str, n_shards: int, *,
+def save_shards(idx, directory: str, n_shards: int, *, replicas: int = 1,
                 extra: dict | None = None) -> list[str]:
     """Cut ``idx``'s packed main segment into ``n_shards`` shard images.
 
     Writes ``<directory>/shard-000 … shard-NNN``, one self-contained image
     per contiguous cell range (``serving.shards.plan_shards``), atomically
-    for the whole fleet (tmp + rename, same policy as ``save_index``).
+    for the whole fleet (tmp + rename, same policy as ``save_index``), plus
+    a root ``fleet.json`` manifest recording the partition arity, the
+    replication factor and the parent fingerprint.  Replication is a
+    ROUTING property, not a storage one: each cell range is stored once;
+    ``load_fleet`` restores ``replicas`` independent workers per image.
     Returns the final shard directory paths in shard-id order.
 
     Requires an IVF-configured index (cell ranges ARE the partition) with an
@@ -500,6 +505,7 @@ def save_shards(idx, directory: str, n_shards: int, *,
     _expect(idx._delta_n == 0,
             f"index holds {idx._delta_n} uncompacted delta rows — a shard "
             f"image covers the packed main segment only; compact() first")
+    _expect(replicas >= 1, f"need replicas >= 1, got {replicas}")
     dev = idx._device_state()
     ivf = dev["main_ivf"]
     ncells, cap = ivf.ncells, ivf.cell_cap
@@ -555,6 +561,16 @@ def save_shards(idx, directory: str, n_shards: int, *,
         }
         with open(os.path.join(sd, _MANIFEST), "w") as f:
             json.dump(manifest, f, indent=1)
+    # Fleet manifest LAST (same ordering discipline as per-snapshot
+    # manifests): a root without one is either pre-replication or torn.
+    with open(os.path.join(tmp, _FLEET), "w") as f:
+        json.dump({
+            "format_version": FORMAT_VERSION,
+            "n_shards": int(n_shards),
+            "replicas": int(replicas),
+            "parent_fingerprint": fp,
+            "complete": True,
+        }, f, indent=1)
     old = None
     if os.path.exists(directory):
         old = directory.rstrip("/") + f".old-{os.getpid()}"
@@ -566,6 +582,35 @@ def save_shards(idx, directory: str, n_shards: int, *,
         shutil.rmtree(old)
     return [os.path.join(directory, _SHARD_DIR_FMT.format(s.shard_id))
             for s in specs]
+
+
+def read_fleet_manifest(directory: str) -> dict:
+    """The root fleet manifest of a ``save_shards`` directory.
+
+    Roots written before fleet manifests existed (or assembled by hand from
+    individual shard images) load as an unreplicated fleet: the absence of
+    ``fleet.json`` is back-compat, not an error — but a PRESENT manifest
+    that is torn, version-skewed, or disagrees with the shard images raises
+    ``SnapshotError``.
+    """
+    path = os.path.join(directory, _FLEET)
+    if not os.path.exists(path):
+        return {"n_shards": len(shard_dirs(directory)), "replicas": 1}
+    try:
+        with open(path) as f:
+            manifest = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        raise SnapshotError(f"unreadable fleet manifest {path}: {e}") from e
+    _expect(bool(manifest.get("complete")),
+            f"incomplete fleet manifest (torn save?) at {directory}")
+    ver = manifest.get("format_version")
+    _expect(ver == FORMAT_VERSION,
+            f"fleet format_version {ver} != supported {FORMAT_VERSION}")
+    n_found = len(shard_dirs(directory))
+    _expect(int(manifest.get("n_shards", -1)) == n_found,
+            f"fleet manifest says {manifest.get('n_shards')} shards, root "
+            f"holds {n_found} shard-* images — torn fleet")
+    return manifest
 
 
 def shard_dirs(directory: str) -> list[str]:

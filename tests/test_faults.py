@@ -1,0 +1,649 @@
+"""Fault-tolerant shard fleet: failover, deadlines, degraded serving, chaos.
+
+The contract under test (DESIGN.md §14):
+
+* **failover is bit-invisible** — with R=2 replicas and one worker of every
+  shard permanently dead, ``ShardRouter.search`` returns results
+  bit-identical to the healthy fleet (replicas serve identical data; the
+  merge is keyed on shard position, not on which replica computed);
+* **degradation is explicit, never silent** — with ALL replicas of a shard
+  dead, ``degraded="refuse"`` raises a structured ``ShardUnavailableError``
+  (offending cells, shard ids, per-replica attempts) and
+  ``degraded="partial"`` serves the survivors with per-query ``coverage``
+  < 1 and per-shard status on the ``SearchResult``;
+* **the call path heals** — transient failures retry with backoff inside
+  the attempt budget; replies landing past the deadline are discarded and
+  counted as failures; torn/garbage replies are caught by result
+  validation and fail over exactly like raised errors; per-worker health
+  walks healthy → degraded → ejected → probation → healthy;
+* **chaos is reproducible** — the seeded ``FaultPolicy`` schedule plus the
+  ``VirtualClock`` make every test here deterministic bit-for-bit;
+* **assembly reports everything** — a torn ``save_shards`` root (mixed
+  parent fingerprints) raises ONE ``SnapshotError`` naming every
+  inconsistent shard, not just the first.
+"""
+import json
+import os
+import shutil
+from types import SimpleNamespace
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import topk as T
+from repro.serving import (CallPolicy, FaultPolicy, FaultyWorker,
+                           HealthConfig, HealthState, HealthTracker,
+                           MissingShardError, RetrievalIndex, ShardRouter,
+                           ShardUnavailableError, SnapshotError,
+                           TornResultError, VirtualClock, aggregate_topk,
+                           inject_faults, load_fleet, load_router,
+                           read_fleet_manifest, run_with_failover,
+                           validate_run)
+from repro.accounting import ServingMeter, replicated_fleet_model
+from repro.data.synthetic import clustered_vectors
+from repro.serving.faults import GARBAGE_KINDS, _garbage_result
+from repro.serving.snapshot import save_shards, shard_dirs
+
+N, D, K, NCELLS, NSHARDS = 1024, 16, 10, 8, 4
+CFG = dict(ivf_cells=NCELLS, nprobe=4, overfetch=8)
+
+
+@pytest.fixture(scope="module")
+def fleet(tmp_path_factory):
+    """One IVF index, its R=2 shard fleet root, and the healthy baseline."""
+    vecs = clustered_vectors(N, D, seed=5)
+    idx = RetrievalIndex.build(np.arange(N), vecs, **CFG)
+    q = clustered_vectors(24, D, seed=6)
+    root = str(tmp_path_factory.mktemp("faults") / "fleet")
+    save_shards(idx, root, NSHARDS, replicas=2)
+    base = load_fleet(root, replicas=1).search(q, K)
+    return SimpleNamespace(idx=idx, vecs=vecs, q=q, root=root, base=base)
+
+
+def _assert_bit_identical(a, b):
+    np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
+    np.testing.assert_array_equal(np.asarray(a.distances),
+                                  np.asarray(b.distances))
+
+
+def _router(root, *, replicas=1, degraded="refuse", policy=None, vc=None,
+            meter=None, kill=(), fault=None):
+    """A fleet router on a VirtualClock, optionally with workers killed
+    (permanent death from call 0) or given a specific FaultPolicy."""
+    vc = vc if vc is not None else VirtualClock()
+    policy = policy if policy is not None else CallPolicy()
+    r = load_fleet(root, replicas=replicas, degraded=degraded,
+                   call_policy=policy, meter=meter, clock=vc.now,
+                   sleep=vc.sleep)
+    if kill or fault:
+        workers = []
+        for w in r.workers:
+            if w.key in kill:
+                workers.append(FaultyWorker(w, FaultPolicy.die_at(0),
+                                            clock=vc))
+            elif fault is not None and w.key in fault:
+                workers.append(FaultyWorker(w, fault[w.key], clock=vc))
+            else:
+                workers.append(w)
+        r = ShardRouter(workers, strict=True, degraded=degraded,
+                        call_policy=policy, meter=meter, clock=vc.now,
+                        sleep=vc.sleep)
+    return r, vc
+
+
+# -- the headline: replica failover is bit-invisible -------------------------
+
+
+def test_failover_bit_identical_with_one_replica_killed(fleet):
+    """R=2, replica 0 of EVERY shard permanently dead: every query still
+    returns bits identical to the healthy fleet — failover, zero
+    degradation — and the dead workers end up ejected."""
+    kill = {f"s{s}r0" for s in range(NSHARDS)}
+    router, _ = _router(fleet.root, replicas=2, kill=kill)
+    got = router.search(fleet.q, K)
+    _assert_bit_identical(fleet.base, got)
+    assert np.all(np.asarray(got.coverage) == 1.0)
+    assert all(st_ in ("ok", "skipped") for _, st_ in got.shard_status)
+    # Hammer it: repeated batches keep failing over, bits never move.
+    for _ in range(3):
+        _assert_bit_identical(fleet.base, router.search(fleet.q, K))
+    # The dead replicas are out of the serving rotation (degraded or
+    # ejected — once degraded, health rank routes around them, so they may
+    # never accumulate to the ejection bar); the survivors stay healthy.
+    h = router.health.summary()
+    assert all(h[k]["state"] in ("degraded", "ejected")
+               for k in kill if k in h)
+    assert all(h[f"s{s}r1"]["state"] == "healthy" for s in range(NSHARDS)
+               if f"s{s}r1" in h)
+
+
+def test_healthy_fleet_reports_full_coverage(fleet):
+    router, _ = _router(fleet.root, replicas=2)
+    got = router.search(fleet.q, K)
+    _assert_bit_identical(fleet.base, got)
+    cov = np.asarray(got.coverage)
+    assert cov.shape == (len(fleet.q),) and np.all(cov == 1.0)
+    assert dict(got.shard_status).keys() == set(range(NSHARDS))
+
+
+# -- degraded serving: refuse vs partial -------------------------------------
+
+
+def test_all_replicas_dead_refuse_raises_structured(fleet):
+    """Both replicas of shard 1 dead + degraded="refuse": the structured
+    error names the shard, the probed cells, and the failover attempts."""
+    router, _ = _router(fleet.root, replicas=2, kill={"s1r0", "s1r1"})
+    with pytest.raises(ShardUnavailableError) as ei:
+        router.search(fleet.q, K)
+    e = ei.value
+    assert e.shard_ids == (1,)
+    lo, hi = router.workers[router.groups[1][0]].spec.cell_lo, \
+        router.workers[router.groups[1][0]].spec.cell_hi
+    assert e.cells and all(lo <= c < hi for c in e.cells)
+    assert len(e.attempts) >= 2  # both replicas were actually tried
+    assert {a.worker for a in e.attempts} == {"s1r0", "s1r1"}
+    assert all(a.error for a in e.attempts)
+    assert isinstance(e, MissingShardError)  # callers catch one type
+
+
+def test_all_replicas_dead_partial_serves_with_coverage(fleet):
+    router, _ = _router(fleet.root, replicas=2, degraded="partial",
+                        kill={"s1r0", "s1r1"})
+    got = router.search(fleet.q, K)
+    cov = np.asarray(got.coverage)
+    assert cov.shape == (len(fleet.q),)
+    assert cov.min() < 1.0  # some query probed the dead shard's cells
+    assert dict(got.shard_status)[1] == "failed"
+    # Coverage is per query: a query probing only surviving cells is whole.
+    probe = router.probe(fleet.q)
+    gid, _ = router._group_of(probe)
+    untouched = ~np.any(gid == 1, axis=1)
+    if untouched.any():
+        assert np.all(cov[untouched] == 1.0)
+        np.testing.assert_array_equal(
+            np.asarray(got.ids)[untouched],
+            np.asarray(fleet.base.ids)[untouched])
+    # Served neighbors are exactly the merge of the surviving shards: every
+    # returned id must come from a live shard's cell range (or be -1 pad).
+    ids = np.asarray(got.ids)
+    assert np.all((ids >= -1) & (ids < N))
+
+
+def test_degraded_policy_validated(fleet):
+    with pytest.raises(ValueError, match="degraded"):
+        load_fleet(fleet.root, degraded="shrug")
+
+
+def test_unowned_cells_structured_error(fleet):
+    """strict=False with a missing shard: the refuse path names the
+    unowned cells (satellite: structured context on MissingShardError)."""
+    dirs = shard_dirs(fleet.root)
+    router = load_router(dirs[:-1], strict=False)
+    with pytest.raises(MissingShardError, match="owned by no loaded shard") \
+            as ei:
+        router.search(fleet.q, K)
+    missing = router.workers[-1].spec  # last loaded shard is s2; s3 absent
+    assert ei.value.cells  # the offending cell ids ride on the error
+    assert all(c >= missing.cell_hi for c in ei.value.cells)
+
+
+# -- the call path: retries, deadlines, torn results -------------------------
+
+
+def test_transient_failures_recover_via_retry(fleet):
+    """fail-next-2 on a single-replica shard: the bounded retry loop eats
+    both failures and the result is bit-identical; health walks
+    DEGRADED -> HEALTHY on the following successes."""
+    meter = ServingMeter()
+    router, _ = _router(fleet.root, replicas=1, meter=meter,
+                        fault={"s0r0": FaultPolicy.fail_next(2)})
+    got = router.search(fleet.q, K)
+    _assert_bit_identical(fleet.base, got)
+    assert np.all(np.asarray(got.coverage) == 1.0)
+    sh = meter.shard_summary()["workers"]["s0r0"]
+    assert sh["calls"] == 3 and sh["failures"] == 2
+    assert "FaultInjectionError" in sh["last_error"]
+    assert router.health.state("s0r0") is HealthState.DEGRADED
+    router.search(fleet.q, K)
+    router.search(fleet.q, K)
+    assert router.health.state("s0r0") is HealthState.HEALTHY
+
+
+def test_garbage_replies_fail_over_like_errors(fleet):
+    """Every torn-result flavor must be caught by validate_run on the
+    dispatch path — a garbage reply retries and the final bits are
+    healthy, never the garbage."""
+    for kind in GARBAGE_KINDS:
+        meter = ServingMeter()
+        router, _ = _router(fleet.root, replicas=1, meter=meter,
+                            fault={"s2r0": FaultPolicy.garbage(kind)})
+        got = router.search(fleet.q, K)
+        _assert_bit_identical(fleet.base, got)
+        sh = meter.shard_summary()["workers"]["s2r0"]
+        assert sh["failures"] == 1 and "TornResultError" in sh["last_error"]
+
+
+def test_validate_run_catches_each_garbage_kind():
+    m, Kp = 3, T.next_pow2(K)
+    for kind in GARBAGE_KINDS:
+        with pytest.raises(TornResultError):
+            validate_run(_garbage_result(kind, m, Kp), m, Kp)
+    # A legitimate padded run passes.
+    from repro.core.knn import KNNResult
+
+    ok = KNNResult(jnp.broadcast_to(jnp.arange(Kp, dtype=jnp.float32),
+                                    (m, Kp)),
+                   jnp.zeros((m, Kp), jnp.int32))
+    assert validate_run(ok, m, Kp) is ok
+
+
+def test_deadline_discards_late_reply():
+    """A reply landing after the budget is a failure — discarded, recorded
+    against the worker — even though the thunk 'succeeded'."""
+    vc = VirtualClock()
+    tracker = HealthTracker()
+
+    def slow():
+        vc.advance(0.1)
+        return "late"
+
+    out, attempts = run_with_failover(
+        [("w", slow)], policy=CallPolicy(deadline_s=0.05, max_attempts=3),
+        tracker=tracker, clock=vc.now, sleep=vc.sleep)
+    assert out is None
+    assert len(attempts) == 1 and attempts[0].error == "deadline exceeded"
+    assert tracker.state("w") is HealthState.DEGRADED
+
+
+def test_deadline_budget_stops_backoff():
+    """Backoff that cannot fit the remaining budget is not slept."""
+    vc = VirtualClock()
+    calls = []
+
+    def failing():
+        calls.append(vc.now())
+        raise RuntimeError("nope")
+
+    policy = CallPolicy(deadline_s=0.001, max_attempts=10,
+                        backoff_base_s=0.01, jitter_frac=0.0)
+    out, attempts = run_with_failover([("w", failing)], policy=policy,
+                                      tracker=HealthTracker(),
+                                      clock=vc.now, sleep=vc.sleep)
+    assert out is None
+    assert len(attempts) == 1  # attempt 2's 10ms backoff breaks the budget
+    assert vc.now() == 0.0  # and was never slept
+
+
+def test_latency_spike_fails_batch_then_routes_around(fleet):
+    """Replica 0 of shard 0 answers 50ms late against a 40ms deadline: the
+    first batch loses shard 0 (late reply discarded), and the NEXT batch
+    routes to the healthy replica first — full coverage, healthy bits."""
+    vc = VirtualClock()
+    policy = CallPolicy(deadline_s=0.04, max_attempts=4)
+    router, vc = _router(fleet.root, replicas=2, degraded="partial",
+                         policy=policy, vc=vc,
+                         fault={"s0r0": FaultPolicy.latency(0.05)})
+    got = router.search(fleet.q, K)
+    assert dict(got.shard_status)[0] == "failed"
+    assert np.asarray(got.coverage).min() < 1.0
+    assert router.health.state("s0r0") is HealthState.DEGRADED
+    # Next batch: health rank puts s0r1 first; s0r0 is never consulted.
+    got2 = router.search(fleet.q, K)
+    _assert_bit_identical(fleet.base, got2)
+    assert np.all(np.asarray(got2.coverage) == 1.0)
+
+
+def test_backoff_schedule():
+    p = CallPolicy(backoff_base_s=0.01, backoff_mult=2.0, backoff_max_s=0.05,
+                   jitter_frac=0.0)
+    assert p.backoff_s(1, 0.7) == 0.0  # first attempt: no backoff
+    assert p.backoff_s(2, 0.0) == pytest.approx(0.01)
+    assert p.backoff_s(3, 0.0) == pytest.approx(0.02)
+    assert p.backoff_s(4, 0.0) == pytest.approx(0.04)
+    assert p.backoff_s(9, 0.0) == pytest.approx(0.05)  # capped
+    jit = CallPolicy(backoff_base_s=0.01, jitter_frac=0.5)
+    assert jit.backoff_s(2, 1.0) == pytest.approx(0.015)
+
+
+# -- health state machine ----------------------------------------------------
+
+
+def test_health_state_machine_walk():
+    cfg = HealthConfig(degrade_after=1, eject_after=3, probation_after=2,
+                       recover_after=2)
+    t = HealthTracker(cfg)
+    assert t.state("w") is HealthState.HEALTHY and t.admissible("w")
+    t.record_failure("w")
+    assert t.state("w") is HealthState.DEGRADED and t.admissible("w")
+    t.record_success("w")
+    assert t.state("w") is HealthState.DEGRADED  # 1 < recover_after
+    t.record_success("w")
+    assert t.state("w") is HealthState.HEALTHY
+    for _ in range(3):
+        t.record_failure("w")
+    assert t.state("w") is HealthState.EJECTED and not t.admissible("w")
+    t.tick()
+    assert not t.admissible("w")  # cooldown not served yet
+    t.tick()
+    assert t.admissible("w")  # probation trial admitted
+    assert t.state("w") is HealthState.PROBATION
+    t.record_failure("w")  # trial failed: straight back out
+    assert t.state("w") is HealthState.EJECTED
+    t.tick(), t.tick()
+    assert t.admissible("w")
+    t.record_success("w")  # trial passed
+    assert t.state("w") is HealthState.HEALTHY
+
+
+def test_ejected_worker_rejoins_through_probation(fleet):
+    """A worker that fails transiently past the ejection bar is ejected,
+    sits out the cooldown (receiving ZERO traffic), then rejoins through
+    a single probation trial — end to end through real router batches.
+    R=1 so the router must keep consulting the sole worker."""
+    cfg = HealthConfig(degrade_after=1, eject_after=2, probation_after=2,
+                       recover_after=1)
+    vc = VirtualClock()
+    r = load_fleet(fleet.root, replicas=1, degraded="partial",
+                   health_cfg=cfg, call_policy=CallPolicy(max_attempts=1),
+                   clock=vc.now, sleep=vc.sleep)
+    fault = {"s0r0": FaultPolicy.fail_next(2)}
+    workers = [FaultyWorker(w, fault[w.key], clock=vc) if w.key in fault
+               else w for w in r.workers]
+    router = ShardRouter(workers, degraded="partial", health_cfg=cfg,
+                         call_policy=CallPolicy(max_attempts=1),
+                         clock=vc.now, sleep=vc.sleep)
+    faulty = next(w for w in router.workers if w.key == "s0r0")
+    # Batch 1 (tick 1): fail #1 -> DEGRADED; shard 0 lost for the batch.
+    assert np.asarray(router.search(fleet.q, K).coverage).min() < 1.0
+    assert router.health.state("s0r0") is HealthState.DEGRADED
+    # Batch 2 (tick 2): degraded but admitted -> fail #2 -> EJECTED.
+    router.search(fleet.q, K)
+    assert router.health.state("s0r0") is HealthState.EJECTED
+    calls_at_ejection = faulty.calls
+    # Batch 3 (tick 3): cooldown not served (3 - 2 < probation_after=2):
+    # the ejected worker receives no traffic at all.
+    router.search(fleet.q, K)
+    assert faulty.calls == calls_at_ejection
+    assert router.health.state("s0r0") is HealthState.EJECTED
+    # Batch 4 (tick 4): probation trial admitted; the fault budget is
+    # spent, the trial succeeds -> HEALTHY, full coverage, healthy bits.
+    got = router.search(fleet.q, K)
+    assert router.health.state("s0r0") is HealthState.HEALTHY
+    _assert_bit_identical(fleet.base, got)
+    assert np.all(np.asarray(got.coverage) == 1.0)
+
+
+# -- chaos: seeded schedules are reproducible bit-for-bit --------------------
+
+
+def test_seeded_chaos_is_reproducible(fleet):
+    def run_once():
+        vc = VirtualClock()
+        meter = ServingMeter()
+        router, _ = _router(fleet.root, replicas=2, degraded="partial",
+                            policy=CallPolicy(deadline_s=0.04), vc=vc,
+                            meter=meter)
+        router = inject_faults(router, rate=0.3, seed=7, clock=vc)
+        out = []
+        for _ in range(4):
+            r = router.search(fleet.q, K)
+            out.append((np.asarray(r.ids).copy(),
+                        np.asarray(r.coverage).copy(), r.shard_status))
+        return out, router.health.summary(), vc.now(), \
+            meter.shard_summary()["failures"]
+
+    a, ah, at, af = run_once()
+    b, bh, bt, bf = run_once()
+    for (ai, ac, as_), (bi, bc, bs_) in zip(a, b):
+        np.testing.assert_array_equal(ai, bi)
+        np.testing.assert_array_equal(ac, bc)
+        assert as_ == bs_
+    assert ah == bh and at == bt and af == bf
+
+
+def test_fault_policy_schedules():
+    p = FaultPolicy.fail_next(2)
+    assert [f.kind if f else None for f in map(p.next_fault, range(4))] == \
+        ["fail", "fail", None, None]
+    p = FaultPolicy.die_at(2)
+    assert [f.kind if f else None for f in map(p.next_fault, range(4))] == \
+        [None, None, "die", "die"]
+    p = FaultPolicy.latency(0.5, every=2, start=1)
+    kinds = [f.kind if f else None for f in map(p.next_fault, range(5))]
+    assert kinds == [None, "latency", None, "latency", None]
+    # Bernoulli streams are pure functions of (seed, call order).
+    pa = FaultPolicy.bernoulli(0.5, seed=3)
+    pb = FaultPolicy.bernoulli(0.5, seed=3)
+    a = [pa.next_fault(i) for i in range(32)]
+    b = [pb.next_fault(i) for i in range(32)]
+    assert a == b
+    assert any(f is not None for f in a) and any(f is None for f in a)
+    assert [f for f in map(FaultPolicy.none().next_fault, range(8))
+            if f is not None] == []
+
+
+# -- satellite: torn save_shards reports ALL inconsistent shards -------------
+
+
+def test_torn_fleet_reports_all_inconsistent_shards(fleet, tmp_path):
+    """A torn save (crash between shard writes leaving images from two
+    parents) raises ONE SnapshotError naming EVERY inconsistent shard."""
+    other = RetrievalIndex.build(np.arange(N),
+                                 clustered_vectors(N, D, seed=29), **CFG)
+    old_root = str(tmp_path / "old")
+    save_shards(other, old_root, NSHARDS)
+    root = str(tmp_path / "torn")
+    shutil.copytree(fleet.root, root)
+    # Crash narrative: shard-000 was rewritten from the new parent, the
+    # rest still hold the old fleet -> relative to shard-000, shards 1..3
+    # are ALL inconsistent and every one must be named.
+    for i in (1, 2, 3):
+        shutil.rmtree(os.path.join(root, f"shard-{i:03d}"))
+        shutil.copytree(os.path.join(old_root, f"shard-{i:03d}"),
+                        os.path.join(root, f"shard-{i:03d}"))
+    with pytest.raises(SnapshotError, match="parent snapshot signature") \
+            as ei:
+        load_router(shard_dirs(root))
+    msg = str(ei.value)
+    assert msg.count("parent snapshot signature") == 3
+    for i in (1, 2, 3):
+        assert f"shard {i} " in msg
+    assert "3 fleet assembly violation(s)" in msg
+
+
+def test_assembly_collects_mixed_violation_kinds(fleet, tmp_path):
+    """Different violation kinds (overlap + mixed parent) surface together
+    in one error, not first-wins."""
+    root = str(tmp_path / "multi")
+    shutil.copytree(fleet.root, root)
+    dirs = shard_dirs(root)
+
+    def tamper(sd, fn):
+        path = os.path.join(sd, "manifest.json")
+        with open(path) as f:
+            m = json.load(f)
+        fn(m)
+        with open(path, "w") as f:
+            json.dump(m, f)
+
+    tamper(dirs[1], lambda m: m["shard"].update(cell_lo=1, cell_hi=3))
+    tamper(dirs[3], lambda m: m["parent"].update(fingerprint="deadbeef"))
+    with pytest.raises(SnapshotError) as ei:
+        load_router(dirs, strict=False)
+    msg = str(ei.value)
+    assert "overlap" in msg and "parent snapshot signature" in msg
+
+
+# -- satellite: aggregate_topk under dropped-shard degradation ---------------
+
+
+@hypothesis.settings(max_examples=30, deadline=None)
+@hypothesis.given(n_shards=st.integers(2, 6), m=st.integers(1, 3),
+                  k=st.sampled_from([1, 3, 7, 10]),
+                  seed=st.integers(0, 100_000), wire=st.booleans(),
+                  drop_seed=st.integers(0, 100_000))
+def test_aggregate_degraded_subset_is_flat_sort_of_survivors(
+        n_shards, m, k, seed, wire, drop_seed):
+    """Dropping ANY subset of shard runs (replaced by the +inf sentinel the
+    degraded path emits) yields exactly the flat-sort top-k of the
+    surviving runs — under duplicate-distance ties, bf16 wire storage and
+    non-pow2 shard counts.  This is why partial results are well-defined:
+    a dead shard's run is the merge identity."""
+    Kp = T.next_pow2(k)
+    rng = np.random.default_rng(seed)
+    vals = rng.integers(0, 5, size=(n_shards, m, Kp)).astype(np.float32)
+    ids = (np.arange(n_shards)[:, None, None] * 1000
+           + np.arange(m)[None, :, None] * 100
+           + np.arange(Kp)[None, None, :]).astype(np.int32)
+    dead = rng.random((n_shards, m, Kp)) < 0.3
+    vals[dead] = np.inf
+    ids[dead] = -1
+    order = np.argsort(vals, axis=-1, kind="stable")
+    vals = np.take_along_axis(vals, order, axis=-1)
+    ids = np.take_along_axis(ids, order, axis=-1)
+    drop = np.random.default_rng(drop_seed).random(n_shards) < 0.5
+    mv, mi = vals.copy(), ids.copy()
+    mv[drop] = np.inf
+    mi[drop] = -1
+    got = aggregate_topk(jnp.asarray(mv), jnp.asarray(mi), k,
+                         wire_dtype="bfloat16" if wire else None)
+    gv, gi = np.asarray(got.distances), np.asarray(got.indices)
+    surv = vals[~drop]
+    for j in range(m):
+        flat = (np.sort(surv[:, j, :].ravel(), kind="stable")
+                if len(surv) else np.empty(0, np.float32))
+        want = np.full(k, np.inf, np.float32)
+        want[: min(k, len(flat))] = flat[:k]
+        np.testing.assert_array_equal(gv[j], want)
+        # Every returned entry is a real surviving entry (or the pad).
+        from collections import Counter
+
+        pool = Counter(zip(mv[:, j, :].ravel().tolist(),
+                           mi[:, j, :].ravel().tolist()))
+        pool[(float("inf"), -1)] += k  # pad rows of the pow2 padding
+        for v, i in zip(gv[j].tolist(), gi[j].tolist()):
+            assert pool[(v, i)] > 0, (v, i)
+            pool[(v, i)] -= 1
+
+
+# -- replicated fleet persistence --------------------------------------------
+
+
+def test_fleet_manifest_roundtrip(fleet):
+    m = read_fleet_manifest(fleet.root)
+    assert m["n_shards"] == NSHARDS and m["replicas"] == 2
+    router = load_fleet(fleet.root)
+    assert router.n_replicas == 2 and len(router.workers) == 2 * NSHARDS
+    keys = {w.key for w in router.workers}
+    assert keys == {f"s{s}r{r}" for s in range(NSHARDS) for r in range(2)}
+    # Replicas are independent restores of the same image: same bits,
+    # different arrays.
+    g0 = [router.workers[i] for i in router.groups[0]]
+    np.testing.assert_array_equal(np.asarray(g0[0].packed),
+                                  np.asarray(g0[1].packed))
+    assert g0[0].packed is not g0[1].packed
+    # Storage is counted once per range, not once per replica.
+    assert router.n_live == len(fleet.idx)
+    # The recorded factor can be overridden at restore time.
+    assert load_fleet(fleet.root, replicas=1).n_replicas == 1
+    assert load_fleet(fleet.root, replicas=3).n_replicas == 3
+
+
+def test_fleet_manifest_torn_root_raises(fleet, tmp_path):
+    root = str(tmp_path / "torn")
+    shutil.copytree(fleet.root, root)
+    shutil.rmtree(os.path.join(root, f"shard-{NSHARDS - 1:03d}"))
+    with pytest.raises(SnapshotError, match="torn fleet"):
+        read_fleet_manifest(root)
+
+
+def test_fleet_root_without_manifest_loads_unreplicated(fleet, tmp_path):
+    """Pre-replication roots (no fleet.json) stay loadable at R=1."""
+    root = str(tmp_path / "legacy")
+    shutil.copytree(fleet.root, root)
+    os.remove(os.path.join(root, "fleet.json"))
+    m = read_fleet_manifest(root)
+    assert m["replicas"] == 1
+    router = load_fleet(root)
+    assert router.n_replicas == 1
+    _assert_bit_identical(fleet.base, router.search(fleet.q, K))
+
+
+# -- engine + service integration --------------------------------------------
+
+
+def test_coverage_propagates_through_engine_chunking(fleet):
+    """The engine chunks big batches; per-query coverage must concatenate
+    and per-shard status must fold worst-wins across chunks."""
+    from repro.serving import EngineConfig, QueryEngine
+
+    router, _ = _router(fleet.root, replicas=1, degraded="partial",
+                        kill={"s1r0"})
+    eng = QueryEngine(router, EngineConfig(k=K, min_batch=8, max_batch=8))
+    got = eng.search(fleet.q, K)  # 24 queries -> 3 chunks of 8
+    cov = np.asarray(got.coverage)
+    assert cov.shape == (len(fleet.q),)
+    assert cov.min() < 1.0
+    assert dict(got.shard_status)[1] == "failed"
+    direct = router.search(fleet.q, K)
+    np.testing.assert_array_equal(cov, np.asarray(direct.coverage))
+    np.testing.assert_array_equal(np.asarray(got.ids),
+                                  np.asarray(direct.ids))
+
+
+def test_service_restores_replicated_fleet(tmp_path):
+    import jax
+
+    from repro.configs import registry as REG
+    from repro.models.nn import split_params
+    from repro.serving import ServiceConfig, TwoTowerRetrievalService
+
+    arch = REG.get("two-tower-retrieval")
+    cfg = arch.smoke_config()
+    values, _ = split_params(arch.init_params(jax.random.PRNGKey(0), cfg))
+    root = str(tmp_path / "shards")
+    svc = TwoTowerRetrievalService(
+        values, cfg, ServiceConfig(k=5, ivf_cells=8, nprobe=8, shards=2,
+                                   replicas=2, degraded="partial",
+                                   snapshot_dir=root))
+    rng = np.random.default_rng(1)
+    n = 512
+    fields = rng.integers(0, min(cfg.i_sizes()),
+                          size=(n, cfg.n_item_fields)).astype(np.int32)
+    svc.build_corpus(np.arange(n), fields)
+    svc.save_shards()
+    assert read_fleet_manifest(root)["replicas"] == 2
+    svc.restore_shards()
+    assert svc.router.n_replicas == 2
+    assert svc.router.degraded == "partial"
+    ukeys = np.arange(7)
+    ufields = rng.integers(0, min(cfg.u_sizes()),
+                           size=(7, cfg.n_user_fields)).astype(np.int32)
+    ids, scores = svc.recommend(ukeys, ufields)
+    assert ids.shape == (7, 5) and np.all(ids >= 0)
+    st_ = svc.stats()
+    assert st_["fleet"]["replicas"] == 2
+    assert st_["fleet"]["dispatch"]["calls"] > 0
+    assert all(h["state"] == "healthy"
+               for h in st_["fleet"]["health"].values())
+
+
+# -- the analytic availability model -----------------------------------------
+
+
+def test_replicated_fleet_model_sanity():
+    m1 = replicated_fleet_model(4, 1, shards_dispatched=3.0, fault_rate=0.1)
+    m2 = replicated_fleet_model(4, 2, shards_dispatched=3.0, fault_rate=0.1)
+    m3 = replicated_fleet_model(4, 3, shards_dispatched=3.0, fault_rate=0.1)
+    # Availability is monotone in R; storage pays linearly for it.
+    assert m1["p_query_complete"] < m2["p_query_complete"] \
+        < m3["p_query_complete"]
+    assert m1["expected_coverage"] == pytest.approx(0.9)
+    assert m2["expected_coverage"] == pytest.approx(0.99)
+    assert m2["storage_factor"] == 2.0
+    healthy = replicated_fleet_model(4, 2, shards_dispatched=3.0)
+    assert healthy["p_query_complete"] == 1.0
+    assert healthy["dispatch_factor"] == 1.0
