@@ -21,7 +21,7 @@ import time
 
 
 SUITES = ("table1", "scaling", "kernels", "selection", "serving", "ivf",
-          "pq", "snapshot", "shards", "faults")
+          "pq", "snapshot", "shards", "faults", "rpc")
 
 
 def run_suite(name: str, smoke: bool) -> None:
@@ -93,6 +93,13 @@ def run_suite(name: str, smoke: bool) -> None:
                                  fault_rates=(0.0, 0.1), rounds=4)
         else:
             serving.faults_sweep()
+    elif name == "rpc":
+        from benchmarks import serving
+        if smoke:
+            serving.rpc_sweep(corpus=2048, d=32, k=10, batch_sizes=(8, 64),
+                              batches=4, ncells=16, nprobe=8, n_shards=2)
+        else:
+            serving.rpc_sweep()
     else:
         raise SystemExit(f"unknown suite {name!r}; have {SUITES}")
 

@@ -461,6 +461,100 @@ def faults_sweep(corpus: int = 4096, d: int = 32, k: int = 10,
         shutil.rmtree(tmp, ignore_errors=True)
 
 
+def rpc_sweep(corpus: int = 8192, d: int = 64, k: int = 10,
+              batch_sizes=(8, 64), batches: int = 8, ncells: int = 64,
+              nprobe: int = 8, overfetch: int = 8, n_shards: int = 2):
+    """Process-worker transport (DESIGN.md §15): the RPC tax, measured.
+
+    Three groups of rows over ONE sharded IVF fleet:
+
+    * **inproc vs proc** — the same routed search through in-process
+      workers and through real worker processes behind the wire protocol:
+      qps/p50/p99 + recall@k per batch size for each backend.  The delta
+      IS the transport cost (frame codec + Unix-socket hop + one fp32
+      query block per dispatched shard); recall must not move at all,
+      because the proc backend is bit-identical by contract.
+    * **the analytic wire model** — ``accounting.rpc_bytes_per_batch`` at
+      the measured batch sizes, fp32 and bf16 value wires, so the measured
+      overhead sits next to the bytes that explain it.
+    * **crash recovery timeline** — R=2 proc fleet, one replica of every
+      shard SIGKILLed mid-stream: the kill batch (served bit-identical
+      through failover), then the respawn batch (supervisor restores the
+      corpses from their snapshot images), each with wall clock — the
+      serving-availability number a real deployment cares about.
+    """
+    import os
+    import shutil
+    import tempfile
+
+    from repro import accounting
+    from repro.data.synthetic import clustered_vectors
+    from repro.serving import RetrievalIndex, load_fleet
+    from repro.serving.snapshot import save_shards
+
+    rng = np.random.default_rng(47)
+    vecs = clustered_vectors(corpus, d, seed=43)
+    q = clustered_vectors(max(batch_sizes), d, seed=44)
+    base = RetrievalIndex.build(np.arange(corpus), vecs, impl="fused")
+    exact_ids = np.asarray(base.search(q, k).ids)
+    idx = RetrievalIndex.build(np.arange(corpus), vecs,
+                               ivf_cells=ncells, nprobe=nprobe,
+                               overfetch=overfetch)
+    eff_cells = idx._effective_ncells()
+    S = min(n_shards, eff_cells)
+    tmp = tempfile.mkdtemp(prefix="repro-rpc-bench-")
+    try:
+        root = os.path.join(tmp, "fleet")
+        save_shards(idx, root, S, replicas=2)
+        for backend in ("inproc", "proc"):
+            router = load_fleet(root, replicas=1, workers=backend)
+            try:
+                sweep(f"rpc_{backend}", router, k, d, batch_sizes, batches,
+                      rng, recall_vs=exact_ids, queries=q,
+                      extra=f"shards={S};workers={backend}")
+            finally:
+                if router.supervisor is not None:
+                    router.supervisor.shutdown(drain=False)
+
+        for wire, wb in (("fp32", 4), ("bf16", 2)):
+            m = accounting.rpc_bytes_per_batch(
+                max(batch_sizes), d, k=k, shards_dispatched=float(S),
+                wire_bytes_per_value=wb)
+            emit(f"rpc_model_{wire}_b{max(batch_sizes)}", 0.0,
+                 f"request={m['request']:.0f};reply={m['reply']:.0f};"
+                 f"fleet_total={m['fleet_total']:.0f};"
+                 f"per_query={m['per_query']:.1f};shards={S}")
+
+        # Crash-recovery timeline on real processes.
+        healthy_ids = None
+        router = load_fleet(root, replicas=2, workers="proc",
+                            degraded="partial")
+        sup = router.supervisor
+        try:
+            healthy_ids = np.asarray(router.search(q, k).ids)  # warm fleet
+            for w in sup.workers:
+                if w.spec.replica == 0:
+                    w.kill()  # SIGKILL one live replica of EVERY shard
+            t0 = time.perf_counter()
+            r = router.search(q, k)  # broken pipes discovered mid-batch
+            t_kill = time.perf_counter() - t0
+            ident = bool(np.array_equal(np.asarray(r.ids), healthy_ids))
+            t0 = time.perf_counter()
+            r2 = router.search(q, k)  # poll respawns the corpses here
+            t_respawn = time.perf_counter() - t0
+            ident2 = bool(np.array_equal(np.asarray(r2.ids), healthy_ids))
+            emit("rpc_kill_recovery", t_kill,
+                 f"bit_identical={int(ident and ident2)};"
+                 f"coverage={float(np.mean(r.coverage)):.4f};"
+                 f"kill_batch_ms={t_kill * 1e3:.1f};"
+                 f"respawn_batch_ms={t_respawn * 1e3:.1f};"
+                 f"respawns={sup.respawns};shards={S};replicas=2")
+        finally:
+            sup.shutdown(drain=False)
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
 def main(corpus: int = 8192, d: int = 64, k: int = 10,
          batch_sizes=(8, 64, 256), batches: int = 12, churn: int = 512,
          scan_dtypes=("float32", "bfloat16", "int8"), overfetch: int = 4):
@@ -519,6 +613,10 @@ if __name__ == "__main__":
                          "recall/coverage/p99 vs injected fault rate per "
                          "replication factor + the replica-kill bit-identity "
                          "rows (DESIGN.md §14)")
+    ap.add_argument("--rpc", action="store_true",
+                    help="run the process-worker transport sweep: inproc vs "
+                         "proc qps/p99, the analytic wire-bytes model, and "
+                         "the SIGKILL crash-recovery timeline (DESIGN.md §15)")
     ap.add_argument("--corpus", type=int, default=8192)
     ap.add_argument("--d", type=int, default=64)
     ap.add_argument("--k", type=int, default=10)
@@ -528,7 +626,10 @@ if __name__ == "__main__":
     ap.add_argument("--nprobe", type=int, default=8)
     a = ap.parse_args()
     print("name,us_per_call,derived")
-    if a.faults:
+    if a.rpc:
+        rpc_sweep(a.corpus, a.d, a.k, ncells=a.ivf_cells, nprobe=a.nprobe,
+                  overfetch=a.overfetch)
+    elif a.faults:
         faults_sweep(a.corpus, a.d, a.k, ncells=a.ivf_cells,
                      nprobe=a.nprobe, overfetch=a.overfetch)
     elif a.shards:

@@ -157,6 +157,50 @@ def shard_bytes_per_query(n_rows: int, d: int, n_shards: int, *,
     }
 
 
+def rpc_bytes_per_batch(m: int, d: int, *, k: int = 10,
+                        shards_dispatched: float = 1.0,
+                        wire_bytes_per_value: int = 4) -> dict:
+    """Analytic wire traffic of the RPC hop per search batch (DESIGN.md §15).
+
+    The process-worker transport ships, per dispatched shard,
+      * ``request``  — one QUERY frame: the fixed header + JSON meta
+        overhead plus the [m, d] fp32 query block (the replicated-quantizer
+        contract means the FULL batch goes to every dispatched shard — the
+        worker probes locally and masks; queries are the one payload that
+        scales with d),
+      * ``reply``    — one RESULT frame: overhead plus the sorted [m, K]
+        run, K = next_pow2(k) entries of ``wire_bytes_per_value`` value
+        bytes (4 = fp32 exact, 2 = the bf16 wire ``aggregate_topk``
+        already rounds to) + 4 id bytes.
+    Frame overhead is taken from the transport's own framing (header +
+    meta), so the model tracks the implementation rather than guessing.
+    ``shards_dispatched`` (from ``shard_bytes_per_query``) scales both to
+    the expected fan-out.  The asymmetry is the architecture's point: the
+    request is O(m·d) but the reply is O(m·K) — the aggregator stays thin
+    because workers never ship candidates, only merged runs.
+    """
+    from repro.core.topk import next_pow2
+    from repro.serving.transport import frame_overhead_bytes
+
+    assert m >= 1 and d >= 1 and shards_dispatched >= 0.0, (m, d)
+    K = next_pow2(k)
+    req_overhead = frame_overhead_bytes(
+        {"seq": 10 ** 9, "k": int(k), "nprobe": 10 ** 4, "overfetch": 10 ** 4},
+        n_arrays=1)
+    rep_overhead = frame_overhead_bytes({"seq": 10 ** 9}, n_arrays=2)
+    request = req_overhead + m * d * 4
+    reply = rep_overhead + m * K * (wire_bytes_per_value + 4)
+    return {
+        "request": request,
+        "reply": reply,
+        "per_shard": request + reply,
+        "fleet_request": shards_dispatched * request,
+        "fleet_reply": shards_dispatched * reply,
+        "fleet_total": shards_dispatched * (request + reply),
+        "per_query": shards_dispatched * (request + reply) / m,
+    }
+
+
 def replicated_fleet_model(n_shards: int, replicas: int, *,
                            shards_dispatched: float,
                            fault_rate: float = 0.0) -> dict:

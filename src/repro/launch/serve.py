@@ -45,6 +45,16 @@ Flags (see README.md "CLI reference"):
                     and report coverage + health afterwards (needs --shards)
   --degraded P      "refuse" (default: a lost shard raises the structured
                     error) | "partial" (serve survivors, report coverage)
+  --workers B       "inproc" (default: the restored fleet lives in this
+                    process) | "proc" (DESIGN.md §15: one supervised OS
+                    process per replica behind the RPC transport — real
+                    crash detection, heartbeats, snapshot respawn; needs
+                    --shards)
+  --heartbeat-s S   idle seconds before the supervisor PING-probes a proc
+                    worker (0 disables; needs --workers proc)
+  --queue-depth N   per-worker bound on abandoned in-flight requests before
+                    calls fail over with BackpressureError (needs
+                    --workers proc)
   --snapshot-dir D  persist the index under D after the corpus build
                     (DESIGN.md §Persistence: versioned, atomic, CRC-stamped)
   --restore         cold-start from the --snapshot-dir snapshot instead of
@@ -99,6 +109,18 @@ def main():
                     help="what a shard with all replicas dead costs: refuse "
                          "= structured error, partial = serve survivors "
                          "with per-query coverage")
+    ap.add_argument("--workers", choices=("inproc", "proc"),
+                    default="inproc",
+                    help="worker backend (DESIGN.md §15): inproc = restored "
+                         "fleet in this process; proc = one supervised OS "
+                         "process per replica over the RPC transport "
+                         "(needs --shards)")
+    ap.add_argument("--heartbeat-s", type=float, default=5.0,
+                    help="idle seconds before a proc worker is PING-probed "
+                         "(0 = no heartbeat; needs --workers proc)")
+    ap.add_argument("--queue-depth", type=int, default=8,
+                    help="per-proc-worker in-flight request bound before "
+                         "BackpressureError (needs --workers proc)")
     ap.add_argument("--snapshot-dir", default=None,
                     help="persist the built index here (DESIGN.md §Persistence)")
     ap.add_argument("--restore", action="store_true",
@@ -121,6 +143,13 @@ def main():
     if not args.shards and (args.replicas != 1 or args.fault_rate):
         ap.error("--replicas/--fault-rate need --shards (they are fleet "
                  "properties)")
+    if args.workers == "proc" and not args.shards:
+        ap.error("--workers proc needs --shards (process workers serve "
+                 "shard images)")
+    if args.queue_depth < 1:
+        ap.error("--queue-depth must be >= 1")
+    if args.heartbeat_s < 0:
+        ap.error("--heartbeat-s must be >= 0")
     if args.replicas < 1:
         ap.error("--replicas must be >= 1")
     if not 0.0 <= args.fault_rate < 1.0:
@@ -148,7 +177,9 @@ def main():
                     ivf_cells=args.ivf_cells, nprobe=args.nprobe,
                     pq_m=args.pq_m, pq_nbits=args.pq_nbits,
                     snapshot_dir=args.snapshot_dir,
-                    replicas=args.replicas, degraded=args.degraded)
+                    replicas=args.replicas, degraded=args.degraded,
+                    workers=args.workers, heartbeat_s=args.heartbeat_s,
+                    queue_depth=args.queue_depth)
     mesh = None
     if args.mesh:
         from repro.launch.mesh import make_host_mesh
@@ -204,13 +235,16 @@ def main():
         paths = svc.save_shards(shard_root, args.shards)
         svc.restore_shards(shard_root)
         r = svc.router
+        backend = "proc" if r.supervisor is not None else "inproc"
         print(f"[serve] {len(paths)} shard images -> {shard_root} + routed "
               f"restore in {time.perf_counter() - t0:.2f}s (zero retraining; "
-              f"{r.n_replicas} replica(s)/shard, degraded={r.degraded!r})")
+              f"{r.n_replicas} replica(s)/shard, workers={backend!r}, "
+              f"degraded={r.degraded!r})")
         for w in r.workers:
+            pid = f" pid={w.pid}" if backend == "proc" else ""
             print(f"[serve]   {w.key}: cells "
                   f"[{w.spec.cell_lo}, {w.spec.cell_hi}) "
-                  f"{w.packed.shape[0]} slots, {w.n_live} live rows")
+                  f"{w.n_slots} slots, {w.n_live} live rows{pid}")
         if args.fault_rate:
             # Chaos demo (DESIGN.md §14): every worker behind a seeded
             # Bernoulli FaultPolicy — failures/latency/garbage at the given
@@ -291,6 +325,13 @@ def main():
         for key, h in fleet["health"].items():
             print(f"[serve]   {key}: {h['state']} "
                   f"(ok={h['successes']} fail={h['failures']})")
+        sup = fleet.get("supervisor")
+        if sup is not None:
+            print(f"[serve] supervisor: {sup['respawns']} respawn(s), "
+                  f"heartbeat={sup['heartbeat_s']}s "
+                  f"queue_depth={sup['queue_depth']}")
+    # A proc fleet's workers are real OS processes: drain and reap them.
+    svc.shutdown_shards()
 
 
 if __name__ == "__main__":

@@ -20,6 +20,12 @@ Layering (each importable on its own):
               and the deadline/retry/backoff failover call wrapper (§14).
   faults.py   FaultPolicy/FaultyWorker/VirtualClock — deterministic seeded
               fault injection for chaos tests and the --fault-rate demo.
+  transport.py  the RPC wire protocol — CRC-framed versioned binary frames,
+              the bf16-optional result wire, and the structured-error codec
+              (§15 Process-isolated workers).
+  supervisor.py  WorkerSupervisor/ProcWorker — one OS process per replica,
+              heartbeat liveness, crash detection, snapshot respawn into
+              PROBATION, bounded in-flight queues, graceful drain (§15).
 """
 from repro.serving.cache import EmbeddingCache
 from repro.serving.engine import EngineConfig, QueryEngine
@@ -58,8 +64,23 @@ from repro.serving.snapshot import (
     restore_shard,
     save_shards,
 )
+from repro.serving.supervisor import (
+    ProcWorker,
+    SupervisorConfig,
+    WorkerSupervisor,
+)
+from repro.serving.transport import (
+    BackpressureError,
+    RemoteWorkerError,
+    WireError,
+    WorkerCrashedError,
+    WorkerTimeoutError,
+    decode_error,
+    encode_error,
+)
 
 __all__ = [
+    "BackpressureError",
     "CallPolicy",
     "EmbeddingCache",
     "EngineConfig",
@@ -70,7 +91,9 @@ __all__ = [
     "HealthState",
     "HealthTracker",
     "MissingShardError",
+    "ProcWorker",
     "QueryEngine",
+    "RemoteWorkerError",
     "RetrievalIndex",
     "SearchResult",
     "ServiceConfig",
@@ -79,10 +102,17 @@ __all__ = [
     "ShardUnavailableError",
     "ShardWorker",
     "SnapshotError",
+    "SupervisorConfig",
     "TornResultError",
     "TwoTowerRetrievalService",
     "VirtualClock",
+    "WireError",
+    "WorkerCrashedError",
+    "WorkerSupervisor",
+    "WorkerTimeoutError",
     "aggregate_topk",
+    "decode_error",
+    "encode_error",
     "inject_faults",
     "load_fleet",
     "load_router",

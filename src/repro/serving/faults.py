@@ -71,12 +71,17 @@ class VirtualClock:
 
 
 class Fault(NamedTuple):
-    kind: str  # "fail" | "die" | "latency" | "garbage"
+    kind: str  # "fail" | "die" | "latency" | "garbage" | "kill"
     latency_s: float = 0.0
     garbage: str = ""  # for kind="garbage": shape|unsorted|nan|ids
 
 
 GARBAGE_KINDS = ("shape", "unsorted", "nan", "ids")
+
+# "kill" SIGKILLs a live worker PROCESS mid-batch (DESIGN.md §15) — it needs
+# a worker with a real pid (the proc backend's ProcWorker.kill); the other
+# kinds simulate failures in-process and work on any backend.
+FAULT_KINDS = ("fail", "die", "latency", "garbage", "kill")
 
 
 class FaultPolicy:
@@ -100,7 +105,7 @@ class FaultPolicy:
         self._rng = random.Random(seed)
         assert 0.0 <= self.rate <= 1.0, self.rate
         for k in self.kinds:
-            assert k in ("fail", "die", "latency", "garbage"), k
+            assert k in FAULT_KINDS, k
 
     # -- constructors (the failure taxonomy) --------------------------------
 
@@ -131,6 +136,13 @@ class FaultPolicy:
         """Call ``at`` returns a torn/garbage result of the given kind."""
         assert kind in GARBAGE_KINDS, kind
         return cls({int(at): Fault("garbage", garbage=kind)})
+
+    @classmethod
+    def kill_at(cls, call: int = 0) -> "FaultPolicy":
+        """Call ``call`` SIGKILLs the worker PROCESS mid-batch, then lets
+        the (now doomed) call proceed — the wire discovers the death as a
+        broken pipe, the failure mode a simulated exception cannot reach."""
+        return cls({int(call): Fault("kill")})
 
     @classmethod
     def bernoulli(cls, rate: float, *, seed: int = 0,
@@ -213,6 +225,19 @@ class FaultyWorker:
         if fault.kind in ("fail", "die"):
             raise FaultInjectionError(
                 f"injected {fault.kind} on {self.inner.key} call {call}")
+        if fault.kind == "kill":
+            # Real process death, not a simulated raise: SIGKILL the live
+            # worker, then forward the call — the transport layer finds a
+            # corpse (broken pipe / EOF mid-frame) exactly as an uncommanded
+            # crash would present, and the supervisor respawns at the next
+            # poll.  Only proc-backend workers expose kill().
+            kill = getattr(self.inner, "kill", None)
+            if kill is None:
+                raise FaultInjectionError(
+                    f"kill fault on {self.inner.key}: worker has no process "
+                    f"to kill (use the workers='proc' backend)")
+            kill()
+            return self.inner.topk(queries, k, **kw)
         if fault.kind == "latency":
             if self.clock is not None:
                 self.clock.advance(fault.latency_s)
@@ -259,4 +284,5 @@ def inject_faults(router, *, rate: float, seed: int = 0,
         degraded=router.degraded, call_policy=router.call_policy,
         health_cfg=router.health.cfg, meter=router.meter, seed=router.seed,
         clock=clock.now if clock is not None else router._clock,
-        sleep=clock.sleep if clock is not None else router._sleep)
+        sleep=clock.sleep if clock is not None else router._sleep,
+        supervisor=router.supervisor)

@@ -180,6 +180,22 @@ class HealthTracker:
         elif w.consec_fail >= self.cfg.degrade_after:
             w.state = HealthState.DEGRADED
 
+    def mark_respawned(self, key: str) -> None:
+        """A supervisor replaced this worker's process: re-admit on trial.
+
+        A fresh process restored from snapshot serves the same bits as its
+        predecessor but has an unproven runtime (cold caches, possibly the
+        same environmental cause that killed it), so it enters PROBATION —
+        one trial call decides re-admission, exactly like a replica
+        returning from ejection — rather than jumping straight to HEALTHY.
+        Consecutive counters reset (they described the dead process);
+        lifetime failure/success totals are kept for the summary.
+        """
+        w = self._get(key)
+        w.state = HealthState.PROBATION
+        w.consec_fail = 0
+        w.consec_ok = 0
+
     def summary(self) -> dict:
         return {
             key: {"state": str(w.state), "failures": w.failures,

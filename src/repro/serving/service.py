@@ -65,6 +65,13 @@ class ServiceConfig:
     replicas: int = 1
     degraded: str = "refuse"
     deadline_s: float | None = None
+    # Process-isolation tier (DESIGN.md §15): "inproc" hosts the restored
+    # fleet in this process; "proc" spawns one supervised OS process per
+    # replica behind the RPC transport, with ``heartbeat_s`` idle liveness
+    # probes and a ``queue_depth``-bounded per-worker in-flight budget.
+    workers: str = "inproc"
+    heartbeat_s: float = 5.0
+    queue_depth: int = 8
 
 
 class TwoTowerRetrievalService:
@@ -255,26 +262,48 @@ class TwoTowerRetrievalService:
 
         directory = directory if directory is not None else self.svc.snapshot_dir
         assert directory, "pass a directory or set ServiceConfig.snapshot_dir"
+        supervisor_cfg = None
+        if self.svc.workers == "proc":
+            from repro.serving.supervisor import SupervisorConfig
+
+            supervisor_cfg = SupervisorConfig(
+                heartbeat_s=self.svc.heartbeat_s,
+                queue_depth=self.svc.queue_depth)
         router = load_fleet(
             directory, impl=self.svc.impl, wire_dtype=wire_dtype,
             replicas=replicas, degraded=self.svc.degraded,
             call_policy=CallPolicy(deadline_s=self.svc.deadline_s),
-            meter=self.meter)
-        want = dict(config_signature(self.index))
-        if router.config != want:
-            diff = {k: (router.config.get(k), want[k]) for k in want
-                    if router.config.get(k) != want[k]}
-            raise SnapshotError(
-                f"shard images' config does not match ServiceConfig "
-                f"(shards, service): {diff}")
-        stored_fp = router.extra.get("params_crc32")
-        if stored_fp is not None and stored_fp != self._params_fingerprint():
-            raise SnapshotError(
-                f"shard images were embedded by a different model: params "
-                f"fingerprint {stored_fp} != this service's "
-                f"{self._params_fingerprint()} (same --seed / checkpoint?)")
+            meter=self.meter, workers=self.svc.workers,
+            supervisor_cfg=supervisor_cfg)
+        try:
+            want = dict(config_signature(self.index))
+            if router.config != want:
+                diff = {k: (router.config.get(k), want[k]) for k in want
+                        if router.config.get(k) != want[k]}
+                raise SnapshotError(
+                    f"shard images' config does not match ServiceConfig "
+                    f"(shards, service): {diff}")
+            stored_fp = router.extra.get("params_crc32")
+            if stored_fp is not None \
+                    and stored_fp != self._params_fingerprint():
+                raise SnapshotError(
+                    f"shard images were embedded by a different model: "
+                    f"params fingerprint {stored_fp} != this service's "
+                    f"{self._params_fingerprint()} (same --seed / "
+                    f"checkpoint?)")
+        except BaseException:
+            # A refused fleet must not leak its worker processes.
+            if router.supervisor is not None:
+                router.supervisor.shutdown(drain=False)
+            raise
         self.router = router
         self.engine.rebind(router)
+
+    def shutdown_shards(self, *, drain: bool = True) -> None:
+        """Stop a proc-backend fleet's worker processes (no-op otherwise)."""
+        router = getattr(self, "router", None)
+        if router is not None and router.supervisor is not None:
+            router.supervisor.shutdown(drain=drain)
 
     # -- online: item ingest (delta segment) --------------------------------
 
@@ -333,7 +362,11 @@ class TwoTowerRetrievalService:
                 "n_shards": router.n_shards,
                 "replicas": router.n_replicas,
                 "degraded": router.degraded,
+                "workers": ("proc" if router.supervisor is not None
+                            else "inproc"),
                 "health": router.health.summary(),
                 "dispatch": self.meter.shard_summary(),
             }
+            if router.supervisor is not None:
+                out["fleet"]["supervisor"] = router.supervisor.summary()
         return out

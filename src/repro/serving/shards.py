@@ -76,6 +76,12 @@ Array = jnp.ndarray
 
 DEGRADED_POLICIES = ("refuse", "partial")
 
+# Worker backends a fleet can restore onto (DESIGN.md §15): "inproc" hosts
+# every ShardWorker in the router's process (the default, and the test
+# oracle); "proc" spawns one supervised OS process per replica behind the
+# RPC transport — same routing, health and merge code, real process death.
+WORKER_BACKENDS = ("inproc", "proc")
+
 
 class MissingShardError(RuntimeError):
     """A query's probe set touched a cell the fleet cannot serve.
@@ -233,6 +239,12 @@ class ShardWorker:
         return int(self.packed.shape[1])
 
     @property
+    def n_slots(self) -> int:
+        """Packed slots this shard serves — the backend-independent size
+        surface (a ProcWorker knows its slot count without holding rows)."""
+        return int(self.packed.shape[0])
+
+    @property
     def n_live(self) -> int:
         return int(np.asarray(jnp.sum(self.live)))
 
@@ -378,7 +390,7 @@ class ShardRouter:
                  call_policy: CallPolicy | None = None,
                  health_cfg: HealthConfig | None = None,
                  meter=None, seed: int = 0,
-                 clock=time.monotonic, sleep=time.sleep):
+                 clock=time.monotonic, sleep=time.sleep, supervisor=None):
         if not workers:
             raise SnapshotError("ShardRouter needs at least one shard worker")
         if degraded not in DEGRADED_POLICIES:
@@ -399,6 +411,10 @@ class ShardRouter:
         self.health = HealthTracker(health_cfg if health_cfg is not None
                                     else HealthConfig())
         self.meter = meter
+        # Process-worker tier (DESIGN.md §15): when the fleet runs as real
+        # OS processes, the supervisor's crash-detect/heartbeat/respawn pass
+        # runs once per search batch, before dispatch.
+        self.supervisor = supervisor
         self.seed = int(seed)
         self._rng = random.Random(self.seed)
         self._clock = clock
@@ -585,6 +601,11 @@ class ShardRouter:
         m = q.shape[0]
         K = T.next_pow2(k)
         self.health.tick()
+        if self.supervisor is not None:
+            # Crash-detect + heartbeat + respawn BEFORE dispatch: a worker
+            # that died since the last batch re-enters routing as PROBATION
+            # rather than eating this batch's retry budget.
+            self.supervisor.poll(self.health)
         probe = self.probe(q)
         gid, bad = self._group_of(probe)
         if bad.any() and self.degraded == "refuse":
@@ -641,7 +662,7 @@ class ShardRouter:
 
     def shape_signature(self, k: int) -> tuple:
         """Engine compile-tracking key — static once a fleet is loaded."""
-        return (tuple(int(self.workers[g[0]].packed.shape[0])
+        return (tuple(int(self.workers[g[0]].n_slots)
                       for g in self.groups), 0,
                 ("shards", self.n_shards, self.n_replicas, T.next_pow2(k)))
 
@@ -665,29 +686,59 @@ def load_router(shard_dirs: Sequence[str], *, impl: str | None = None,
 
 def load_fleet(directory: str, *, replicas: int | None = None,
                impl: str | None = None, strict: bool = True,
-               wire_dtype: str | None = None, **router_kw) -> ShardRouter:
+               wire_dtype: str | None = None, workers: str = "inproc",
+               supervisor_cfg=None, **router_kw) -> ShardRouter:
     """Restore a replicated fleet from a ``save_shards`` root.
 
     The fleet manifest (``fleet.json``) records the partition arity and
     replication factor; ``replicas`` overrides the recorded factor (e.g.
     restore an R=2 fleet at R=1 to save memory in a degraded environment).
-    Every replica is restored INDEPENDENTLY from the shard image — each
-    worker owns its own arrays, exactly as separate replica processes
-    would — and stamped with its replica id.  Roots written before fleet
-    manifests existed load as R=1.
+    Roots written before fleet manifests existed load as R=1.
+
+    ``workers`` selects the backend (DESIGN.md §15).  ``"inproc"`` restores
+    every replica INDEPENDENTLY into this process — each worker owns its
+    own arrays, exactly as separate replica processes would.  ``"proc"``
+    spawns one supervised OS process per replica over the RPC transport
+    (serving/supervisor.py): the router gets duck-typed ``ProcWorker``
+    handles plus the supervisor hook, so crash detection, heartbeats and
+    snapshot-respawn run as part of every search; ``supervisor_cfg`` (a
+    ``supervisor.SupervisorConfig``) sets heartbeat/queue-depth/timeouts,
+    and the router's ``call_policy.deadline_s`` bounds the real socket
+    waits.  Shut a proc fleet down with ``router.supervisor.shutdown()``.
     """
     from repro.serving.snapshot import (read_fleet_manifest, restore_shard,
                                         shard_dirs)
 
+    if workers not in WORKER_BACKENDS:
+        raise ValueError(f"workers={workers!r} not in {WORKER_BACKENDS}")
+    if workers == "proc":
+        from repro.serving.supervisor import (SupervisorConfig,
+                                              WorkerSupervisor)
+
+        policy = router_kw.get("call_policy")
+        sup = WorkerSupervisor(
+            supervisor_cfg if supervisor_cfg is not None
+            else SupervisorConfig(),
+            impl=impl, wire_dtype=wire_dtype,
+            deadline_s=policy.deadline_s if policy is not None else None)
+        try:
+            fleet = sup.spawn_fleet(directory, replicas=replicas)
+            return ShardRouter(fleet, strict=strict, wire_dtype=wire_dtype,
+                               supervisor=sup, **router_kw)
+        except BaseException:
+            # A fleet that failed to spawn or assemble must not leak its
+            # already-started worker processes.
+            sup.shutdown(drain=False)
+            raise
     manifest = read_fleet_manifest(directory)
     R = int(manifest.get("replicas", 1)) if replicas is None else int(replicas)
     if R < 1:
         raise SnapshotError(f"fleet needs replicas >= 1, got {R}")
-    workers = []
+    fleet = []
     for d in shard_dirs(directory):
         for r in range(R):
             w = restore_shard(d, impl=impl)
             w.spec = w.spec._replace(replica=r, n_replicas=R)
-            workers.append(w)
-    return ShardRouter(workers, strict=strict, wire_dtype=wire_dtype,
+            fleet.append(w)
+    return ShardRouter(fleet, strict=strict, wire_dtype=wire_dtype,
                        **router_kw)

@@ -34,7 +34,8 @@ import numpy as np
 import pytest
 
 from repro.core import topk as T
-from repro.serving import (CallPolicy, FaultPolicy, FaultyWorker,
+from repro.serving import (CallPolicy, FaultInjectionError, FaultPolicy,
+                           FaultyWorker,
                            HealthConfig, HealthState, HealthTracker,
                            MissingShardError, RetrievalIndex, ShardRouter,
                            ShardUnavailableError, SnapshotError,
@@ -414,6 +415,12 @@ def test_fault_policy_schedules():
     p = FaultPolicy.latency(0.5, every=2, start=1)
     kinds = [f.kind if f else None for f in map(p.next_fault, range(5))]
     assert kinds == [None, "latency", None, "latency", None]
+    p = FaultPolicy.kill_at(2)
+    assert [f.kind if f else None for f in map(p.next_fault, range(4))] == \
+        [None, None, "kill", None]  # one SIGKILL, not a standing sentence
+    # "kill" is drawable from the Bernoulli taxonomy for proc-backend chaos.
+    k = FaultPolicy.bernoulli(1.0, seed=1, kinds=("kill",))
+    assert all(k.next_fault(i).kind == "kill" for i in range(8))
     # Bernoulli streams are pure functions of (seed, call order).
     pa = FaultPolicy.bernoulli(0.5, seed=3)
     pb = FaultPolicy.bernoulli(0.5, seed=3)
@@ -423,6 +430,18 @@ def test_fault_policy_schedules():
     assert any(f is not None for f in a) and any(f is None for f in a)
     assert [f for f in map(FaultPolicy.none().next_fault, range(8))
             if f is not None] == []
+
+
+def test_kill_fault_requires_a_process_to_kill(fleet):
+    """The "kill" kind is REAL process death (DESIGN.md §15): on an
+    in-process worker there is nothing to SIGKILL, and the policy says so
+    loudly instead of silently downgrading to a simulated raise."""
+    router = load_fleet(fleet.root, replicas=1)
+    w = FaultyWorker(router.workers[0], FaultPolicy.kill_at(0))
+    with pytest.raises(FaultInjectionError, match="no process to kill"):
+        w.topk(fleet.q, K)
+    # The proc-backend kill path itself is pinned by tests/test_transport.py
+    # (SIGKILL mid-batch at R=2 -> bit-identity + respawn).
 
 
 # -- satellite: torn save_shards reports ALL inconsistent shards -------------
