@@ -21,7 +21,7 @@ import time
 
 
 SUITES = ("table1", "scaling", "kernels", "selection", "serving", "ivf",
-          "pq", "snapshot", "shards", "faults", "rpc")
+          "pq", "snapshot", "shards", "faults", "rpc", "lifecycle")
 
 
 def run_suite(name: str, smoke: bool) -> None:
@@ -100,6 +100,14 @@ def run_suite(name: str, smoke: bool) -> None:
                               batches=4, ncells=16, nprobe=8, n_shards=2)
         else:
             serving.rpc_sweep()
+    elif name == "lifecycle":
+        from benchmarks import serving
+        if smoke:
+            serving.lifecycle_sweep(corpus=2048, d=32, k=10, ncells=16,
+                                    nprobe=8, churn=128, iters=12,
+                                    wal_batches=8)
+        else:
+            serving.lifecycle_sweep()
     else:
         raise SystemExit(f"unknown suite {name!r}; have {SUITES}")
 

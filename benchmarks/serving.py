@@ -555,6 +555,121 @@ def rpc_sweep(corpus: int = 8192, d: int = 64, k: int = 10,
         shutil.rmtree(tmp, ignore_errors=True)
 
 
+def lifecycle_sweep(corpus: int = 8192, d: int = 64, k: int = 10,
+                    ncells: int = 64, nprobe: int = 8, queries: int = 32,
+                    churn: int = 512, iters: int = 24, wal_batches: int = 16):
+    """Crash-safe lifecycle costs (DESIGN.md §16, ``benchmarks.run lifecycle``).
+
+    Three measurements, all timed CALLER-side — churn + compaction re-tag
+    every engine batch cold at bench sizes, so the meter's steady-state p99
+    would see nothing:
+
+    * **WAL ack cost** — ms per fsync-acked mutation record, next to the
+      fsync-less framing cost (the disk barrier is the durability price);
+    * **serving latency through a compact+retrain window** — a fixed query
+      loop issues ``compact()`` mid-stream; with ``background_retrain`` the
+      worker trains epoch N+1 off the query path and p99 stays bounded
+      (gated), while the blocking baseline eats the whole train as one
+      serving stall (reported as ``stall_ms``, ungated: training wall clock
+      is machine-noisy);
+    * **crash recovery** — wall clock to recover snapshot + acked WAL tail
+      with a torn frame at the journal tail, bit-identity hard-checked.
+    """
+    import os
+    import shutil
+    import struct
+    import tempfile
+
+    from repro.data.synthetic import clustered_vectors
+    from repro.serving import (EngineConfig, LifecycleConfig, LifecycleIndex,
+                               QueryEngine, RetrievalIndex)
+    from repro.serving.snapshot import _JOURNAL
+
+    vecs = clustered_vectors(corpus, d, seed=41)
+    q = clustered_vectors(queries, d, seed=42)
+    new = clustered_vectors(churn, d, seed=43)
+    kw = {"ivf_cells": ncells, "nprobe": nprobe}
+    tmp = tempfile.mkdtemp(prefix="repro-wal-")
+    try:
+        # WAL ack cost: fsync-acked vs framing-only appends.
+        rows_per = max(1, churn // wal_batches)
+        for fsync in (True, False):
+            idx = RetrievalIndex.build(np.arange(corpus), vecs, **kw)
+            snap = os.path.join(tmp, f"wal-{int(fsync)}")
+            lc = LifecycleIndex.attach(
+                idx, LifecycleConfig(snapshot_dir=snap, fsync=fsync))
+            t0 = time.perf_counter()
+            for b in range(wal_batches):
+                lo = b * rows_per
+                lc.insert(np.arange(corpus + lo, corpus + lo + rows_per),
+                          new[lo : lo + rows_per])
+            t = time.perf_counter() - t0
+            lc.close()
+            tag = "fsync" if fsync else "nofsync"
+            emit(f"lifecycle_wal_{tag}", t / wal_batches,
+                 f"ms_per_ack={t / wal_batches * 1e3:.3f};"
+                 f"records={wal_batches};rows_per_record={rows_per}")
+
+        # Serving latency through a compact+retrain window.  Blocking runs
+        # FIRST: it pays the post-compact compiles (part of the cliff it
+        # demonstrates), so the background pass measures the handoff itself
+        # rather than first-compile noise.
+        trigger = iters // 3
+        for mode in ("blocking", "background"):
+            idx = RetrievalIndex.build(np.arange(corpus), vecs, **kw)
+            idx.search(q, k)  # train the initial epoch off the clock
+            snap = os.path.join(tmp, mode)
+            lc = LifecycleIndex.attach(idx, LifecycleConfig(
+                snapshot_dir=snap, background_retrain=(mode == "background")))
+            eng = QueryEngine(lc, EngineConfig(k=k, min_batch=8,
+                                               max_batch=max(32, queries)))
+            eng.search(q, k)  # warm the query shape
+            lc.insert(np.arange(2 * corpus, 2 * corpus + churn), new)
+            lats, i = [], 0
+            while i < iters or lc.handoff_pending:
+                t0 = time.perf_counter()
+                if i == trigger:
+                    lc.compact()  # background: returns; blocking: stalls
+                eng.search(q, k)  # swaps a ready epoch at the boundary
+                lats.append(time.perf_counter() - t0)
+                i += 1
+            lc.close()
+            lats_ms = np.asarray(lats) * 1e3
+            p99 = float(np.percentile(lats_ms, 99))
+            worst = float(lats_ms.max())
+            total = float(lats_ms.sum() / 1e3)
+            extra = (f"p99_ms={p99:.2f};" if mode == "background"
+                     else f"stall_ms={worst:.1f};")
+            emit(f"lifecycle_compact_{mode}", total / len(lats_ms),
+                 extra + f"max_ms={worst:.2f};batches={len(lats_ms)};"
+                 f"qps={queries * len(lats_ms) / total:.0f}")
+
+        # Crash recovery: torn tail + acked records, bit-identity checked.
+        idx = RetrievalIndex.build(np.arange(corpus), vecs, **kw)
+        snap = os.path.join(tmp, "crash")
+        lc = LifecycleIndex.attach(idx, LifecycleConfig(snapshot_dir=snap))
+        lc.insert(np.arange(2 * corpus, 2 * corpus + churn), new)
+        lc.delete(np.arange(0, corpus, 17))
+        want = lc.search(q, k)
+        lc.close()
+        with open(os.path.join(snap, _JOURNAL), "ab") as f:
+            f.write(struct.pack("<4sII", b"ADD\0", 1 << 20, 0) + b"\0" * 40)
+        t0 = time.perf_counter()
+        lc2, rec = LifecycleIndex.recover(LifecycleConfig(snapshot_dir=snap))
+        got = lc2.search(q, k)
+        t_rec = time.perf_counter() - t0
+        lc2.close()
+        ident = (np.array_equal(np.asarray(want.ids), np.asarray(got.ids))
+                 and np.array_equal(np.asarray(want.distances),
+                                    np.asarray(got.distances)))
+        assert ident, "recovered lifecycle index is not bit-identical"
+        emit("lifecycle_recover", t_rec,
+             f"bit_identical={int(ident)};recover_ms={t_rec * 1e3:.1f};"
+             f"tail_records={rec.tail_records};torn_bytes={rec.torn_bytes}")
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
 def main(corpus: int = 8192, d: int = 64, k: int = 10,
          batch_sizes=(8, 64, 256), batches: int = 12, churn: int = 512,
          scan_dtypes=("float32", "bfloat16", "int8"), overfetch: int = 4):
@@ -617,6 +732,11 @@ if __name__ == "__main__":
                     help="run the process-worker transport sweep: inproc vs "
                          "proc qps/p99, the analytic wire-bytes model, and "
                          "the SIGKILL crash-recovery timeline (DESIGN.md §15)")
+    ap.add_argument("--lifecycle", action="store_true",
+                    help="run the crash-safe lifecycle sweep: WAL fsync ack "
+                         "cost, serving p99 through a compact+retrain window "
+                         "(background handoff vs blocking), and torn-tail "
+                         "crash recovery (DESIGN.md §16)")
     ap.add_argument("--corpus", type=int, default=8192)
     ap.add_argument("--d", type=int, default=64)
     ap.add_argument("--k", type=int, default=10)
@@ -626,7 +746,10 @@ if __name__ == "__main__":
     ap.add_argument("--nprobe", type=int, default=8)
     a = ap.parse_args()
     print("name,us_per_call,derived")
-    if a.rpc:
+    if a.lifecycle:
+        lifecycle_sweep(a.corpus, a.d, a.k, ncells=a.ivf_cells,
+                        nprobe=a.nprobe)
+    elif a.rpc:
         rpc_sweep(a.corpus, a.d, a.k, ncells=a.ivf_cells, nprobe=a.nprobe,
                   overfetch=a.overfetch)
     elif a.faults:

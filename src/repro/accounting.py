@@ -256,6 +256,10 @@ class ServingMeter:
         # Per-worker dispatch accounting (the shard router's failover path):
         # worker key -> [calls, failures, total seconds, last error].
         self._shard: dict[str, list] = {}
+        # Lifecycle accounting (DESIGN.md §16): WAL fsync-acked appends
+        # [records, bytes, seconds] and background-retrain handoff times.
+        self._wal: list = [0, 0, 0.0]
+        self._handoffs: list[float] = []
 
     def record(self, batch_size: int, seconds: float, *, compile_batch: bool = False) -> None:
         if compile_batch:
@@ -263,6 +267,16 @@ class ServingMeter:
             return
         self._sizes.append(int(batch_size))
         self._secs.append(float(seconds))
+
+    def record_wal(self, records: int, nbytes: int, seconds: float) -> None:
+        """One fsync-acked WAL append (serving.lifecycle durability path)."""
+        self._wal[0] += int(records)
+        self._wal[1] += int(nbytes)
+        self._wal[2] += float(seconds)
+
+    def record_handoff(self, train_seconds: float) -> None:
+        """One background-retrain epoch handoff completed off the query path."""
+        self._handoffs.append(float(train_seconds))
 
     def record_shard_call(self, worker: str, seconds: float, *, ok: bool,
                           error: str | None = None) -> None:
@@ -326,4 +340,11 @@ class ServingMeter:
             sh = self.shard_summary()
             out["shard_calls"] = sh["calls"]
             out["shard_failures"] = sh["failures"]
+        if self._wal[0]:
+            out["wal_records"] = self._wal[0]
+            out["wal_bytes"] = self._wal[1]
+            out["wal_fsync_ms"] = self._wal[2] / self._wal[0] * 1e3
+        if self._handoffs:
+            out["handoffs"] = len(self._handoffs)
+            out["handoff_train_s"] = sum(self._handoffs)
         return out

@@ -59,6 +59,20 @@ Flags (see README.md "CLI reference"):
                     (DESIGN.md §Persistence: versioned, atomic, CRC-stamped)
   --restore         cold-start from the --snapshot-dir snapshot instead of
                     re-embedding + retraining (prints the wall-clock saved)
+  --wal             crash-safe lifecycle (DESIGN.md §16): journal every churn
+                    mutation fsync-acked into --snapshot-dir between
+                    compacts, train post-compact epochs in the background,
+                    and finish with a simulated crash-restart (torn journal
+                    tail) + recovery-stats report; with --restore the run
+                    starts by recovering snapshot + WAL instead of
+                    re-embedding (needs --snapshot-dir; excludes
+                    --shards/--mesh)
+  --delta-budget N  admission control: mutations that would grow the delta
+                    past N rows raise BackpressureError — the driver then
+                    compacts and retries (0 = unbounded; needs --wal)
+  --sync-compact    disable background retrain: compact() blocks through
+                    repack + IVF/PQ training + full save (the latency-cliff
+                    baseline the lifecycle bench compares against)
   --seed S
 """
 from __future__ import annotations
@@ -126,10 +140,30 @@ def main():
     ap.add_argument("--restore", action="store_true",
                     help="cold-start from --snapshot-dir instead of "
                          "re-embedding + retraining")
+    ap.add_argument("--wal", action="store_true",
+                    help="crash-safe lifecycle: fsync-acked journaling + "
+                         "background epoch handoff + simulated crash-restart "
+                         "report (DESIGN.md §16; needs --snapshot-dir)")
+    ap.add_argument("--delta-budget", type=int, default=0,
+                    help="max delta rows before mutations raise "
+                         "BackpressureError (0 = unbounded; needs --wal)")
+    ap.add_argument("--sync-compact", action="store_true",
+                    help="block compact() through retrain + full save "
+                         "instead of background handoff (needs --wal)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     if args.restore and not args.snapshot_dir:
         ap.error("--restore needs --snapshot-dir")
+    if args.wal and not args.snapshot_dir:
+        ap.error("--wal needs --snapshot-dir (the journal lives inside the "
+                 "snapshot)")
+    if args.wal and (args.shards or args.mesh):
+        ap.error("--wal is the single-host lifecycle tier; --shards/--mesh "
+                 "have their own persistence (DESIGN.md §13-§15)")
+    if (args.delta_budget or args.sync_compact) and not args.wal:
+        ap.error("--delta-budget/--sync-compact need --wal")
+    if args.delta_budget < 0:
+        ap.error("--delta-budget must be >= 0")
     if args.shards:
         if not args.ivf_cells:
             ap.error("--shards needs --ivf-cells > 0 (cells are the "
@@ -179,7 +213,9 @@ def main():
                     snapshot_dir=args.snapshot_dir,
                     replicas=args.replicas, degraded=args.degraded,
                     workers=args.workers, heartbeat_s=args.heartbeat_s,
-                    queue_depth=args.queue_depth)
+                    queue_depth=args.queue_depth,
+                    wal=args.wal, delta_budget=args.delta_budget,
+                    background_retrain=not args.sync_compact)
     mesh = None
     if args.mesh:
         from repro.launch.mesh import make_host_mesh
@@ -198,7 +234,15 @@ def main():
     user_lim = min(cfg.u_sizes())
     corpus_fields = rng.integers(
         0, item_lim, size=(args.corpus, cfg.n_item_fields)).astype(np.int32)
-    if args.restore:
+    if args.restore and args.wal:
+        t0 = time.perf_counter()
+        rec = svc.recover_lifecycle()
+        print(f"[serve] recovered {len(svc.lifecycle)} rows from snapshot + "
+              f"WAL at {args.snapshot_dir} in {time.perf_counter() - t0:.2f}s")
+        print(f"[serve] recovery: {rec.tail_records} acked tail record(s) "
+              f"replayed past the {rec.stamped_bytes}-byte stamp, "
+              f"{rec.torn_bytes} torn in-flight byte(s) dropped")
+    elif args.restore:
         t0 = time.perf_counter()
         svc.restore_index()
         print(f"[serve] restored {len(svc.index)} x {svc.index.dim} from "
@@ -210,7 +254,18 @@ def main():
         t_build = time.perf_counter() - t0
         print(f"[serve] corpus embedded + indexed: {len(svc.index)} x "
               f"{svc.index.dim} in {t_build:.2f}s")
-        if args.snapshot_dir:
+        if args.wal:
+            # The lifecycle's attach writes the full WAL image itself: from
+            # here every churn mutation is one fsync-acked journal record,
+            # and save() between compacts is a manifest-only checkpoint.
+            t0 = time.perf_counter()
+            svc.enable_lifecycle()
+            print(f"[serve] lifecycle armed -> {args.snapshot_dir} in "
+                  f"{time.perf_counter() - t0:.2f}s (WAL journaling, "
+                  f"{'sync' if args.sync_compact else 'background'} "
+                  f"compaction, delta budget "
+                  f"{args.delta_budget or 'unbounded'})")
+        elif args.snapshot_dir:
             # save() finalizes any lazily-pending IVF/PQ training first, so
             # this wall clock includes it — which is exactly the work a
             # later --restore run skips (benchmarks.serving --cold-start
@@ -263,6 +318,7 @@ def main():
         0, user_lim, size=(n_users, cfg.n_user_fields)).astype(np.int32)
     next_item = args.corpus
     refused = 0
+    backpressured = 0
     for b in range(args.batches):
         n_rep = int(args.queries * args.repeat_frac)
         keys = np.concatenate([
@@ -293,10 +349,27 @@ def main():
         if args.churn:
             churn_ids = np.arange(next_item, next_item + args.churn)
             next_item += args.churn
-            svc.ingest_items(
-                churn_ids,
-                rng.integers(0, item_lim,
-                             size=(args.churn, cfg.n_item_fields)).astype(np.int32))
+            churn_fields = rng.integers(
+                0, item_lim,
+                size=(args.churn, cfg.n_item_fields)).astype(np.int32)
+            if args.wal:
+                from repro.serving import BackpressureError
+
+                try:
+                    svc.ingest_items(churn_ids, churn_fields)
+                except BackpressureError:
+                    # Admission control fired: fold the delta down (blocking
+                    # — the budget says we MUST NOT grow it) and retry once.
+                    backpressured += 1
+                    svc.compact(wait=True)
+                    svc.ingest_items(churn_ids, churn_fields)
+                # Incremental save between compacts: manifest-only — the
+                # acked records are already durable, this just folds them
+                # into the strictly-verified prefix.
+                if not svc.lifecycle.handoff_pending:
+                    svc.lifecycle.checkpoint()
+            else:
+                svc.ingest_items(churn_ids, churn_fields)
         if args.compact_every and (b + 1) % args.compact_every == 0:
             svc.compact()
 
@@ -330,6 +403,46 @@ def main():
             print(f"[serve] supervisor: {sup['respawns']} respawn(s), "
                   f"heartbeat={sup['heartbeat_s']}s "
                   f"queue_depth={sup['queue_depth']}")
+    lc = st.get("lifecycle")
+    if lc is not None:
+        w = lc["wal"]
+        print(f"[serve] lifecycle: epoch {lc['epoch']}, "
+              f"{lc['handoffs']} background handoff(s) "
+              f"(last train {lc['last_train_s']:.2f}s off the query path); "
+              f"WAL: {w['records']} fsync-acked record(s), {w['bytes']} B, "
+              f"{w['seconds'] * 1e3 / max(w['records'], 1):.2f} ms/ack; "
+              f"backpressure retries={backpressured} "
+              f"rejected={lc['rejected']}")
+
+        # Simulated crash-restart: tear the journal mid-append (an in-flight
+        # frame a kill-9 would leave), then recover in a fresh service and
+        # verify the served results are bit-identical to the pre-crash ones.
+        import os
+        import struct as _struct
+
+        probe_keys = np.arange(8) + 10_000_000
+        probe_fields = rng.integers(
+            0, user_lim, size=(8, cfg.n_user_fields)).astype(np.int32)
+        want_ids, want_scores = svc.recommend(probe_keys, probe_fields)
+        svc.lifecycle._wal.close()  # the "crash": no checkpoint, no goodbye
+        jpath = os.path.join(args.snapshot_dir, "journal.bin")
+        with open(jpath, "ab") as f:
+            f.write(_struct.pack("<4sII", b"ADD\0", 1 << 20, 0))
+            f.write(b"\x00" * 37)  # header promises 1 MiB; the crash hit here
+        svc2 = TwoTowerRetrievalService(values, cfg, ServiceConfig(**defaults))
+        t0 = time.perf_counter()
+        rec = svc2.recover_lifecycle()
+        got_ids, got_scores = svc2.recommend(probe_keys, probe_fields)
+        identical = (np.array_equal(want_ids, got_ids)
+                     and np.array_equal(want_scores, got_scores))
+        print(f"[serve] crash-restart: recovered in "
+              f"{time.perf_counter() - t0:.2f}s — {rec.tail_records} acked "
+              f"tail record(s) replayed, {rec.torn_bytes} torn in-flight "
+              f"byte(s) dropped; post-recovery results "
+              f"{'bit-identical' if identical else 'DIVERGED'}")
+        if not identical:
+            raise SystemExit("recovered service diverged from pre-crash")
+        svc2.lifecycle.close()
     # A proc fleet's workers are real OS processes: drain and reap them.
     svc.shutdown_shards()
 

@@ -26,9 +26,18 @@ Layering (each importable on its own):
   supervisor.py  WorkerSupervisor/ProcWorker — one OS process per replica,
               heartbeat liveness, crash detection, snapshot respawn into
               PROBATION, bounded in-flight queues, graceful drain (§15).
+  lifecycle.py  LifecycleIndex/WalWriter — durable fsync-acked write-ahead
+              journaling, torn-tail crash recovery, background retrain with
+              epoch handoff, delta-budget admission control (§16).
 """
 from repro.serving.cache import EmbeddingCache
 from repro.serving.engine import EngineConfig, QueryEngine
+from repro.serving.lifecycle import (
+    LifecycleConfig,
+    LifecycleIndex,
+    RecoveryStats,
+    WalWriter,
+)
 from repro.serving.faults import (
     FaultInjectionError,
     FaultPolicy,
@@ -90,9 +99,12 @@ __all__ = [
     "HealthConfig",
     "HealthState",
     "HealthTracker",
+    "LifecycleConfig",
+    "LifecycleIndex",
     "MissingShardError",
     "ProcWorker",
     "QueryEngine",
+    "RecoveryStats",
     "RemoteWorkerError",
     "RetrievalIndex",
     "SearchResult",
@@ -106,6 +118,7 @@ __all__ = [
     "TornResultError",
     "TwoTowerRetrievalService",
     "VirtualClock",
+    "WalWriter",
     "WireError",
     "WorkerCrashedError",
     "WorkerSupervisor",

@@ -98,6 +98,12 @@ class QueryEngine:
     def search(self, queries, k: int | None = None) -> SearchResult:
         """Exact top-k for [m, d] queries, padded/chunked to engine shapes."""
         k = self.cfg.k if k is None else int(k)
+        # Batch-boundary hook: a lifecycle-managed index swaps a ready
+        # background epoch in HERE, never mid-batch — the shape signature
+        # read below then sees the post-swap index (DESIGN.md §16).
+        hook = getattr(self.index, "before_batch", None)
+        if hook is not None:
+            hook()
         q = np.asarray(queries, np.float32)
         assert q.ndim == 2, q.shape
         if len(q) == 0:  # nothing to score, nothing to meter

@@ -229,6 +229,11 @@ class RetrievalIndex:
         self._dev_version = {"main": -1, "delta": -1}
         self._dev: dict = {}
         self._sharded_cache: dict = {}
+        # Lifecycle tripwire (DESIGN.md §16): when True, a search that would
+        # train IVF/PQ synchronously (enter core.kmeans.lloyd inside
+        # _device_state) raises instead — the lifecycle layer guarantees
+        # training happens in its background worker, never on the query path.
+        self._forbid_sync_train = False
 
     # -- construction -------------------------------------------------------
 
@@ -249,7 +254,7 @@ class RetrievalIndex:
     # -- persistence (DESIGN.md §Persistence) --------------------------------
 
     def save(self, directory: str, *, include_replicas: bool = True,
-             extra: dict | None = None) -> str:
+             extra: dict | None = None, wal: bool = False) -> str:
         """Snapshot the full index state under ``directory``.
 
         Versioned, atomic, integrity-stamped — see ``serving.snapshot``.
@@ -257,12 +262,14 @@ class RetrievalIndex:
         (they are deterministic maps, rebuilt on load); trained IVF/PQ state
         is always included — that is the point of the snapshot.  ``extra``
         rides in the manifest verbatim (callers pin provenance there, e.g.
-        the service's tower-params fingerprint).
+        the service's tower-params fingerprint).  ``wal=True`` stamps the
+        journal as a verified PREFIX so a ``lifecycle.WalWriter`` can extend
+        it in place (see ``serving.snapshot``).
         """
         from repro.serving.snapshot import save_index
 
         return save_index(self, directory, include_replicas=include_replicas,
-                          extra=extra)
+                          extra=extra, wal=wal)
 
     @classmethod
     def restore(cls, directory: str, *, mesh=None, db_axis: str = "model",
@@ -364,11 +371,12 @@ class RetrievalIndex:
         self._delta_n = r0 + len(ids)
         self._bump("delta")
 
-    def compact(self) -> None:
-        """Re-pack live rows into a fresh immutable main segment.
+    def _live_rows(self) -> tuple[np.ndarray, np.ndarray]:
+        """Live (vecs, ids) in compact order: main rows, then delta rows.
 
-        Clears every tombstone and the delta; on a mesh this is also the
-        re-shard point (the new main is re-split over ``db_axis``).
+        This IS the row order ``compact()`` packs — the lifecycle layer cuts
+        its background-epoch training set with the same call, so a handoff
+        index is bit-identical to a synchronous compact of the same state.
         """
         segs = [
             (self._main_vecs, self._main_ids, self._main_live),
@@ -377,7 +385,28 @@ class RetrievalIndex:
         ]
         vecs = np.concatenate([v[m] for v, _, m in segs], axis=0)
         ids = np.concatenate([i[m] for _, i, m in segs], axis=0)
-        self._main_vecs = np.ascontiguousarray(vecs)
+        return np.ascontiguousarray(vecs), ids
+
+    def config_kwargs(self) -> dict:
+        """Constructor kwargs reproducing this index's search config.
+
+        ``RetrievalIndex(self.dim, **idx.config_kwargs())`` scans identically
+        — the lifecycle layer builds each background epoch with exactly this.
+        (Runtime state — mesh, axes — is the caller's to thread through.)
+        """
+        return {"distance": self.distance, "impl": self.impl,
+                "scan_dtype": self.scan_dtype, "overfetch": self.overfetch,
+                "ivf_cells": self.ivf_cells, "nprobe": self.nprobe,
+                "pq_m": self.pq_m, "pq_nbits": self.pq_nbits}
+
+    def compact(self) -> None:
+        """Re-pack live rows into a fresh immutable main segment.
+
+        Clears every tombstone and the delta; on a mesh this is also the
+        re-shard point (the new main is re-split over ``db_axis``).
+        """
+        vecs, ids = self._live_rows()
+        self._main_vecs = vecs
         self._main_ids = ids
         self._main_live = np.ones(len(ids), bool)
         self._delta_vecs = np.zeros((0, self.dim), np.float32)
@@ -421,6 +450,13 @@ class RetrievalIndex:
             # compact retrain/repack; tombstones never do (they ride the
             # live mask through the permutation at query time).
             if self._dev_version.get("main_ivf") != self._main_epoch:
+                if self._forbid_sync_train:
+                    raise RuntimeError(
+                        f"synchronous IVF/PQ training tripwire: epoch "
+                        f"{self._main_epoch} has no trained structure and "
+                        f"_forbid_sync_train is set — the lifecycle layer "
+                        f"must train it in the background worker "
+                        f"(serving.lifecycle, DESIGN.md §16)")
                 from repro.core.ivf import build_ivf
 
                 self._dev["main_ivf"] = build_ivf(

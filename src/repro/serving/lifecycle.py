@@ -1,0 +1,552 @@
+"""Crash-safe online index lifecycle (DESIGN.md §16).
+
+``RetrievalIndex`` absorbs churn correctly but not durably and not smoothly:
+an acked insert lives only in memory until a full blocking ``save_index``
+runs, and the first search after ``build()``/``compact()`` trains IVF/PQ
+synchronously — a multi-second latency cliff no production service can eat.
+This module closes both gaps with three cooperating pieces:
+
+* **WalWriter — durable write-ahead journal.**  Every mutation is applied in
+  memory, appended to the snapshot's ``journal.bin`` as one CRC-framed record
+  (the §12 framing, ``snapshot.write_record``), and fsynced *before* the call
+  returns.  The ack IS the durability point: a crash at any moment loses only
+  writes whose ack never happened.  ``checkpoint()`` folds the appended tail
+  into the manifest's verified prefix by rewriting ``manifest.json`` alone —
+  the multi-GB ``main.npz`` is never rewritten between compacts.
+
+* **Torn-tail recovery.**  ``recover()`` restores the snapshot, replaying the
+  stamped journal prefix strictly and the appended tail leniently
+  (``snapshot.read_journal``): an in-flight record torn by the crash is
+  dropped at the last valid frame boundary — by the durability contract it
+  was never acked — while mid-file corruption is refused exactly as for any
+  snapshot.  The torn bytes are physically truncated before the WAL reopens,
+  so the journal only ever grows from a verified state.
+
+* **Background retrain with epoch handoff.**  ``compact()`` cuts the live
+  row set (``RetrievalIndex._live_rows`` — the same order a synchronous
+  compact packs) and trains epoch N+1's IVF/PQ in a daemon thread while
+  epoch N keeps serving.  The worker seeds k-means with the NEW epoch before
+  training, so the handed-off index is bit-identical to what a synchronous
+  ``compact()`` + first-search-train would have produced.  The swap happens
+  at a batch boundary (``before_batch``, called by ``QueryEngine``), never
+  inside a search: post-cut mutations are copied from the old WAL into the
+  next image's journal (one fsync) and replayed in memory through
+  ``snapshot.replay_record``, the directories swap atomically, and the WAL
+  reopens on the new image.  ``RetrievalIndex._forbid_sync_train`` stays set
+  the whole time — a search that would enter ``core.kmeans.lloyd``
+  synchronously raises instead of stalling.
+
+* **Churn admission control.**  The delta segment flat-scans at full cost;
+  ``delta_budget`` bounds it.  A mutation that would grow the delta past the
+  budget raises ``BackpressureError`` (§15 semantics) *before* anything is
+  applied or logged — callers shed or retry after a compact, and the
+  rejection is counted in ``stats()``.
+
+States: ``serve`` (no pending epoch) → ``train`` (worker building N+1,
+mutations keep flowing to N and the WAL) → ``handoff`` (worker done, swap at
+the next batch boundary) → ``serve``.  Crash anywhere: recovery replays the
+last image + WAL — acked mutations survive every window, including mid-swap
+(the old image stays restorable until the rename, and the next image already
+carries the copied tail before it).
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import threading
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.serving.snapshot import (
+    _JOURNAL,
+    _JOURNAL_MAGIC,
+    SnapshotError,
+    checkpoint_journal,
+    read_journal,
+    read_manifest,
+    replay_record,
+    restore_index,
+    save_index,
+    write_record,
+)
+from repro.serving.transport import BackpressureError
+
+__all__ = ["LifecycleConfig", "LifecycleIndex", "RecoveryStats", "WalWriter"]
+
+
+@dataclass(frozen=True)
+class LifecycleConfig:
+    """Knobs of the crash-safe lifecycle (DESIGN.md §16)."""
+
+    snapshot_dir: str
+    # Max delta rows before mutations raise BackpressureError; 0 = unbounded.
+    delta_budget: int = 0
+    # False: compact() repacks + retrains synchronously (the PR-1 latency
+    # cliff, kept as the benchmark baseline); True: epoch N+1 trains in a
+    # background worker and swaps at a batch boundary.
+    background_retrain: bool = True
+    # False skips the per-record fsync (benchmark-only: measures framing cost
+    # without the disk barrier; the durability contract needs True).
+    fsync: bool = True
+    include_replicas: bool = True
+    # Carried verbatim in every manifest this lifecycle writes (the service
+    # layer pins its tower-params fingerprint here).
+    extra: dict | None = None
+
+
+@dataclass(frozen=True)
+class RecoveryStats:
+    """What a ``recover()`` found in the journal — crash forensics.
+
+    ``torn_bytes > 0`` means the crash hit mid-append: the in-flight record
+    was dropped (it was never acked).  ``tail_records`` counts acked records
+    replayed from past the manifest stamp — the writes an old-style blocking
+    save would have lost.
+    """
+
+    wal: bool = False
+    stamped_bytes: int = 0
+    valid_bytes: int = 0
+    torn_bytes: int = 0
+    prefix_records: int = 0
+    tail_records: int = 0
+    rows_live: int = 0
+    rows_delta: int = 0
+
+    def as_dict(self) -> dict:
+        return {
+            "wal": self.wal, "stamped_bytes": self.stamped_bytes,
+            "valid_bytes": self.valid_bytes, "torn_bytes": self.torn_bytes,
+            "prefix_records": self.prefix_records,
+            "tail_records": self.tail_records,
+            "rows_live": self.rows_live, "rows_delta": self.rows_delta,
+        }
+
+
+class WalWriter:
+    """Appends fsync-acked records to a WAL snapshot's ``journal.bin``.
+
+    Refuses journals without the current magic: a version-1 journal's record
+    CRCs are not tag-seeded, and a mixed-mode file would be unreadable —
+    ``LifecycleIndex.recover`` upgrades old images with a full re-save before
+    ever constructing a writer.
+    """
+
+    def __init__(self, path: str, *, fsync: bool = True):
+        self.path = path
+        self._fsync = bool(fsync)
+        self._f = open(path, "r+b")
+        magic = self._f.read(len(_JOURNAL_MAGIC))
+        if magic != _JOURNAL_MAGIC:
+            self._f.close()
+            raise SnapshotError(
+                f"cannot append to journal {path}: magic {magic!r} is not "
+                f"{_JOURNAL_MAGIC!r} (old-format journals need a full "
+                f"re-save first)")
+        self._f.seek(0, os.SEEK_END)
+        self.nbytes = self._f.tell()
+        self.records = 0
+
+    def append(self, tag: bytes, arrays: dict) -> int:
+        """Frame + append + flush + fsync one record; returns bytes written.
+
+        When this returns, the record survives power loss — this is the
+        moment a mutation becomes acked.
+        """
+        n = write_record(self._f, tag, arrays)
+        self._f.flush()
+        if self._fsync:
+            os.fsync(self._f.fileno())
+        self.nbytes += n
+        self.records += 1
+        return n
+
+    def tell(self) -> int:
+        """Current journal length — always a frame boundary."""
+        return self.nbytes
+
+    def close(self) -> None:
+        if not self._f.closed:
+            self._f.close()
+
+
+@dataclass
+class _Pending:
+    """One in-flight background epoch (train → handoff)."""
+
+    thread: threading.Thread | None
+    epoch: int
+    cut_offset: int  # WAL length at the cut: later records replay onto N+1
+    next_dir: str
+    out: dict = field(default_factory=dict)  # index/train_s or error
+
+
+class LifecycleIndex:
+    """A ``RetrievalIndex`` wrapped in the crash-safe lifecycle.
+
+    Duck-types the index surface ``QueryEngine`` consumes (``search``,
+    ``shape_signature``, ``dim``, ``before_batch``) plus the mutation verbs,
+    each of which is WAL-logged and fsync-acked.  Construct with ``attach``
+    (fresh index) or ``recover`` (after a crash/restart); never directly.
+    """
+
+    def __init__(self, idx, config: LifecycleConfig, *, meter=None,
+                 _token: object = None):
+        if _token is not _CTOR:
+            raise TypeError(
+                "use LifecycleIndex.attach(idx, cfg) or "
+                "LifecycleIndex.recover(cfg) — the snapshot/WAL state must "
+                "exist before a writer opens")
+        self._idx = idx
+        self.cfg = config
+        self.meter = meter
+        self._pending: _Pending | None = None
+        self._dirty_main = False  # compacted since the last full image?
+        self._rejected = 0
+        self._handoffs: list[float] = []
+        self._wal_stats = [0, 0, 0.0]  # records, bytes, seconds
+        idx._forbid_sync_train = bool(config.background_retrain)
+        self._wal = WalWriter(os.path.join(config.snapshot_dir, _JOURNAL),
+                              fsync=config.fsync)
+
+    # -- construction --------------------------------------------------------
+
+    @classmethod
+    def attach(cls, idx, config: LifecycleConfig, *,
+               meter=None) -> "LifecycleIndex":
+        """Write the initial full WAL image of ``idx`` and start journaling.
+
+        ``idx`` trains here if it hasn't yet (admin path, not a query) — from
+        the first ack on, no search will ever train synchronously.
+        """
+        if idx.mesh is not None:
+            raise ValueError(
+                "LifecycleIndex does not manage mesh-sharded indexes; the "
+                "shard fleet has its own persistence tier (DESIGN.md §13)")
+        _reap_stale(config.snapshot_dir)
+        save_index(idx, config.snapshot_dir, wal=True, extra=config.extra,
+                   include_replicas=config.include_replicas)
+        return cls(idx, config, meter=meter, _token=_CTOR)
+
+    @classmethod
+    def recover(cls, config: LifecycleConfig, *, meter=None,
+                impl: str | None = None,
+                ) -> tuple["LifecycleIndex", RecoveryStats]:
+        """Restore snapshot + WAL after a crash/restart and resume journaling.
+
+        Replays the verified prefix strictly and the acked tail leniently,
+        truncates any torn in-flight bytes, and upgrades non-WAL (or
+        version-1) images with one full re-save before attaching.  Returns
+        the lifecycle plus the crash forensics.
+        """
+        _reap_stale(config.snapshot_dir)
+        rec: dict = {}
+        idx = restore_index(config.snapshot_dir, recovery=rec, impl=impl)
+        stats = RecoveryStats(**rec)
+        if not rec["wal"]:
+            # Upgrade-on-attach: restamp as a WAL image (full save — also
+            # rewrites a version-1 journal with the current magic).
+            save_index(idx, config.snapshot_dir, wal=True, extra=config.extra,
+                       include_replicas=config.include_replicas)
+        elif rec["torn_bytes"]:
+            # Drop the torn in-flight frame for real: the writer must only
+            # ever append at a verified frame boundary.
+            with open(os.path.join(config.snapshot_dir, _JOURNAL),
+                      "r+b") as f:
+                f.truncate(rec["valid_bytes"])
+                f.flush()
+                os.fsync(f.fileno())
+        return cls(idx, config, meter=meter, _token=_CTOR), stats
+
+    # -- index surface (QueryEngine + service duck-typing) -------------------
+
+    @property
+    def dim(self) -> int:
+        return self._idx.dim
+
+    @property
+    def index(self):
+        """The currently-serving ``RetrievalIndex`` epoch."""
+        return self._idx
+
+    @property
+    def handoff_pending(self) -> bool:
+        return self._pending is not None
+
+    def __len__(self) -> int:
+        return len(self._idx)
+
+    def __contains__(self, item_id: int) -> bool:
+        return item_id in self._idx
+
+    @property
+    def n_dead(self) -> int:
+        return self._idx.n_dead
+
+    def shape_signature(self, k: int) -> tuple:
+        return self._idx.shape_signature(k)
+
+    def before_batch(self) -> None:
+        """Batch-boundary hook (called by ``QueryEngine.search``).
+
+        The ONLY place a ready epoch swaps in on the query path — searches
+        themselves never observe a mid-batch index change, so compiled-shape
+        bookkeeping stays coherent.
+        """
+        p = self._pending
+        if p is not None and not p.thread.is_alive():
+            self._finish_handoff()
+
+    def search(self, queries, k: int):
+        return self._idx.search(queries, k)
+
+    # -- mutation: apply, then fsync-ack -------------------------------------
+
+    def insert(self, ids, vectors) -> None:
+        vectors = np.asarray(vectors, np.float32)
+        ids = self._idx._check_ids(ids, vectors)
+        self._admit(len(ids))
+        self._idx.insert(ids, vectors)
+        self._log(b"ADD\0", {"ids": ids, "vecs": vectors,
+                             "live": np.ones(len(ids), bool)})
+
+    def upsert(self, ids, vectors) -> None:
+        vectors = np.asarray(vectors, np.float32)
+        ids = self._idx._check_ids(ids, vectors)
+        self._admit(len(ids))
+        self._idx.upsert(ids, vectors)
+        self._log(b"UPS\0", {"ids": ids, "vecs": vectors})
+
+    def delete(self, ids) -> int:
+        ids = np.asarray(ids, np.int64).ravel()
+        n = self._idx.delete(ids)
+        self._log(b"DEL\0", {"ids": ids})
+        return n
+
+    def _admit(self, n_new: int) -> None:
+        budget = self.cfg.delta_budget
+        if budget and self._idx._delta_n + n_new > budget:
+            self._rejected += 1
+            raise BackpressureError(
+                f"delta budget exhausted: {self._idx._delta_n} rows + "
+                f"{n_new} new > budget {budget} — compact() (or wait for "
+                f"the pending handoff) before ingesting more")
+
+    def _log(self, tag: bytes, arrays: dict) -> None:
+        t0 = time.perf_counter()
+        n = self._wal.append(tag, arrays)
+        dt = time.perf_counter() - t0
+        self._wal_stats[0] += 1
+        self._wal_stats[1] += n
+        self._wal_stats[2] += dt
+        if self.meter is not None:
+            self.meter.record_wal(1, n, dt)
+
+    # -- persistence ---------------------------------------------------------
+
+    def checkpoint(self) -> dict:
+        """Fold the acked WAL tail into the manifest's verified prefix.
+
+        The incremental ``save()``: one manifest rewrite, ``main.npz``
+        untouched, serving never blocked.  Requires an image whose main
+        segment matches the journal's base — after a synchronous compact the
+        next ``compact()``/``save(full=True)`` writes that image first.
+        """
+        if self._dirty_main:
+            raise SnapshotError(
+                "main segment changed since the last full image — "
+                "checkpoint() extends journals, it cannot re-base them; "
+                "call save(full=True)")
+        idx = self._idx
+        return checkpoint_journal(self.cfg.snapshot_dir, rows={
+            "main": len(idx._main_vecs), "delta": int(idx._delta_n),
+            "live": len(idx)})
+
+    def save(self, *, full: bool = False) -> None:
+        """Persist: cheap journal checkpoint, or a full re-image."""
+        if not full:
+            self.checkpoint()
+            return
+        self._wal.close()
+        save_index(self._idx, self.cfg.snapshot_dir, wal=True,
+                   extra=self.cfg.extra,
+                   include_replicas=self.cfg.include_replicas)
+        self._dirty_main = False
+        self._wal = WalWriter(os.path.join(self.cfg.snapshot_dir, _JOURNAL),
+                              fsync=self.cfg.fsync)
+
+    # -- compaction + epoch handoff ------------------------------------------
+
+    def compact(self, *, wait: bool = False) -> None:
+        """Fold the delta into a fresh main epoch.
+
+        Background mode: cut the live rows NOW, train epoch N+1 in a worker,
+        keep serving (and mutating) epoch N, swap at a batch boundary — or
+        immediately when ``wait=True``.  Synchronous mode
+        (``background_retrain=False``): the classic blocking repack + retrain
+        + full save, kept as the latency-cliff baseline.
+        """
+        if not self.cfg.background_retrain:
+            self._idx.compact()
+            self._dirty_main = True
+            self.save(full=True)
+            return
+        if self._pending is not None:
+            self._finish_handoff()  # at most one epoch in flight
+        idx = self._idx
+        vecs, ids = idx._live_rows()
+        epoch = idx._main_epoch + 1
+        next_dir = self.cfg.snapshot_dir.rstrip("/") + f".next-{os.getpid()}"
+        if os.path.exists(next_dir):
+            shutil.rmtree(next_dir)
+        pend = _Pending(thread=None, epoch=epoch,
+                        cut_offset=self._wal.tell(), next_dir=next_dir)
+        pend.thread = threading.Thread(
+            target=self._train, args=(vecs, ids, pend),
+            name=f"lifecycle-train-{epoch}", daemon=True)
+        self._pending = pend
+        pend.thread.start()
+        if wait:
+            self._finish_handoff()
+
+    def finish_handoff(self, *, wait: bool = True) -> bool:
+        """Swap a ready epoch in off the query path; returns True if swapped."""
+        p = self._pending
+        if p is None:
+            return False
+        if not wait and p.thread.is_alive():
+            return False
+        self._finish_handoff()
+        return True
+
+    def _train(self, vecs: np.ndarray, ids: np.ndarray,
+               pend: _Pending) -> None:
+        """Worker: build + train + image epoch N+1 (runs in ``pend.thread``).
+
+        The new epoch number is installed BEFORE ``_device_state`` so Lloyd
+        seeds exactly as a synchronous compact would have — handoff results
+        are bit-identical to the blocking path.
+        """
+        try:
+            from repro.serving.index import RetrievalIndex
+
+            t0 = time.perf_counter()
+            new = RetrievalIndex(self._idx.dim, **self._idx.config_kwargs())
+            if len(ids):
+                new._main_vecs = vecs
+                new._main_ids = ids.astype(np.int32)
+                new._main_live = np.ones(len(ids), bool)
+                new._loc = {int(i): ("main", r) for r, i in enumerate(ids)}
+                new._bump("main")
+            new._main_epoch = pend.epoch
+            if len(new._main_vecs):
+                new._device_state()  # the training this module exists to move
+            new._forbid_sync_train = True
+            pend.out["train_s"] = time.perf_counter() - t0
+            save_index(new, pend.next_dir, wal=True, extra=self.cfg.extra,
+                       include_replicas=self.cfg.include_replicas)
+            pend.out["index"] = new
+        except BaseException as e:  # surfaced on the serving thread
+            pend.out["error"] = e
+
+    def _finish_handoff(self) -> None:
+        """Join the worker and swap epoch N+1 in (serving thread only).
+
+        Post-cut WAL records are copied verbatim into the next image's
+        journal (their frames are self-verifying; one fsync), replayed in
+        memory through ``snapshot.replay_record``, and only then do the
+        directories swap — every crash window leaves a restorable image
+        holding all acked mutations.
+        """
+        p = self._pending
+        p.thread.join()
+        if "error" in p.out:
+            self._pending = None
+            shutil.rmtree(p.next_dir, ignore_errors=True)
+            raise RuntimeError(
+                f"background retrain for epoch {p.epoch} failed"
+            ) from p.out["error"]
+        new = p.out["index"]
+        cur_j = os.path.join(self.cfg.snapshot_dir, _JOURNAL)
+        # Full strict parse: everything in the current journal is acked.
+        records, _, _ = read_journal(cur_j)
+        with open(cur_j, "rb") as f:
+            f.seek(p.cut_offset)
+            tail_bytes = f.read()
+        if tail_bytes:
+            with open(os.path.join(p.next_dir, _JOURNAL), "ab") as f:
+                f.write(tail_bytes)
+                f.flush()
+                os.fsync(f.fileno())
+        for tag, rec, end in records:
+            if end > p.cut_offset:
+                replay_record(new, tag, rec)
+        self._wal.close()
+        from repro.serving.snapshot import _replace_dir
+
+        _replace_dir(self.cfg.snapshot_dir, p.next_dir)
+        # Stamp the copied tail into the verified prefix right away: from
+        # here on, lenient parsing only ever applies to genuinely in-flight
+        # frames.
+        checkpoint_journal(self.cfg.snapshot_dir, rows={
+            "main": len(new._main_vecs), "delta": int(new._delta_n),
+            "live": len(new)})
+        self._idx = new
+        self._pending = None
+        self._dirty_main = False
+        self._wal = WalWriter(cur_j, fsync=self.cfg.fsync)
+        train_s = float(p.out.get("train_s", 0.0))
+        self._handoffs.append(train_s)
+        if self.meter is not None:
+            self.meter.record_handoff(train_s)
+
+    # -- introspection / teardown --------------------------------------------
+
+    def stats(self) -> dict:
+        p = self._pending
+        state = "serve"
+        if p is not None:
+            state = "train" if p.thread.is_alive() else "handoff"
+        return {
+            "epoch": int(self._idx._main_epoch),
+            "rows": len(self._idx),
+            "delta_rows": int(self._idx._delta_n),
+            "delta_budget": int(self.cfg.delta_budget),
+            "rejected": int(self._rejected),
+            "dirty_main": bool(self._dirty_main),
+            "state": state,
+            "handoffs": len(self._handoffs),
+            "last_train_s": self._handoffs[-1] if self._handoffs else 0.0,
+            "wal": {"records": self._wal_stats[0],
+                    "bytes": self._wal_stats[1],
+                    "seconds": self._wal_stats[2],
+                    "tell": self._wal.tell()},
+        }
+
+    def close(self) -> None:
+        """Finish any pending handoff (its image is already on disk) and
+        release the journal handle."""
+        if self._pending is not None:
+            self._finish_handoff()
+        self._wal.close()
+
+
+_CTOR = object()
+
+
+def _reap_stale(snapshot_dir: str) -> None:
+    """Remove orphaned ``.tmp-*``/``.next-*``/``.old-*`` siblings.
+
+    A crash mid-save or mid-handoff can strand one; they are never
+    restorable state (the swap is the durability point), only disk leaks.
+    """
+    base = snapshot_dir.rstrip("/")
+    parent, name = os.path.dirname(base) or ".", os.path.basename(base)
+    if not os.path.isdir(parent):
+        return
+    for entry in os.listdir(parent):
+        if entry.startswith((f"{name}.tmp-", f"{name}.next-",
+                             f"{name}.old-")):
+            shutil.rmtree(os.path.join(parent, entry), ignore_errors=True)

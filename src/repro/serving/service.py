@@ -72,6 +72,15 @@ class ServiceConfig:
     workers: str = "inproc"
     heartbeat_s: float = 5.0
     queue_depth: int = 8
+    # Crash-safe lifecycle tier (DESIGN.md §16): ``wal=True`` journals every
+    # mutation fsync-acked into the snapshot dir (enable_lifecycle /
+    # recover_lifecycle); ``delta_budget`` bounds the flat-scanned delta
+    # (mutations past it raise BackpressureError, 0 = unbounded);
+    # ``background_retrain`` trains each post-compact epoch in a worker and
+    # swaps at a batch boundary instead of stalling the first search.
+    wal: bool = False
+    delta_budget: int = 0
+    background_retrain: bool = True
 
 
 class TwoTowerRetrievalService:
@@ -104,6 +113,9 @@ class TwoTowerRetrievalService:
             EngineConfig(k=svc.k, min_batch=svc.min_batch,
                          max_batch=svc.max_batch),
             meter=self.meter)
+        # Crash-safe lifecycle (DESIGN.md §16), armed by enable_lifecycle()
+        # or recover_lifecycle(); mutations then flow WAL-acked through it.
+        self.lifecycle = None
 
     # -- offline: corpus embedding + index build ----------------------------
 
@@ -141,6 +153,7 @@ class TwoTowerRetrievalService:
         into the index's segment storage).
         """
         vecs = self._embed(self._item_tower, np.asarray(item_fields, np.int32))
+        self._drop_lifecycle()
         self.index = RetrievalIndex.build(
             item_ids, vecs, distance=self.svc.distance, impl=self.svc.impl,
             mesh=self.index.mesh, scan_dtype=self.svc.scan_dtype,
@@ -176,9 +189,16 @@ class TwoTowerRetrievalService:
         """Snapshot the index (DESIGN.md §Persistence); default location is
         ``ServiceConfig.snapshot_dir``.  The manifest records this service's
         tower-params fingerprint so the snapshot can't silently be served
-        against a different model."""
+        against a different model.  With an active lifecycle the image is
+        re-written through it (the WAL handle follows the new image)."""
         directory = directory if directory is not None else self.svc.snapshot_dir
         assert directory, "pass a directory or set ServiceConfig.snapshot_dir"
+        if self.lifecycle is not None:
+            assert directory == self.lifecycle.cfg.snapshot_dir, (
+                "lifecycle journals into its own snapshot dir; save elsewhere "
+                "by disabling the lifecycle first")
+            self.lifecycle.save(full=True)
+            return directory
         return self.index.save(
             directory, extra={"params_crc32": self._params_fingerprint()})
 
@@ -214,9 +234,84 @@ class TwoTowerRetrievalService:
                 f"snapshot was embedded by a different model: params "
                 f"fingerprint {stored_fp} != this service's "
                 f"{self._params_fingerprint()} (same --seed / checkpoint?)")
+        self._drop_lifecycle()
         self.index = RetrievalIndex.restore(
             directory, mesh=self.index.mesh, impl=self.svc.impl)
         self.engine.rebind(self.index)
+
+    # -- crash-safe lifecycle (DESIGN.md §16) --------------------------------
+
+    def _lifecycle_config(self, directory: str):
+        from repro.serving.lifecycle import LifecycleConfig
+
+        return LifecycleConfig(
+            snapshot_dir=directory, delta_budget=self.svc.delta_budget,
+            background_retrain=self.svc.background_retrain,
+            extra={"params_crc32": self._params_fingerprint()})
+
+    def _drop_lifecycle(self) -> None:
+        if self.lifecycle is not None:
+            self.lifecycle.close()
+            self.lifecycle = None
+
+    def enable_lifecycle(self, directory: str | None = None):
+        """Arm the crash-safe lifecycle over the current index.
+
+        Writes the initial full WAL image under ``directory`` (default
+        ``ServiceConfig.snapshot_dir``) and rebinds the engine onto the
+        ``LifecycleIndex``: from here every ingest/delete is fsync-acked
+        into the journal, ``compact()`` trains the next epoch in the
+        background, and a crash recovers via ``recover_lifecycle``.
+        """
+        from repro.serving.lifecycle import LifecycleIndex
+
+        directory = directory if directory is not None else self.svc.snapshot_dir
+        assert directory, "pass a directory or set ServiceConfig.snapshot_dir"
+        self._drop_lifecycle()
+        self.lifecycle = LifecycleIndex.attach(
+            self.index, self._lifecycle_config(directory), meter=self.meter)
+        self.engine.rebind(self.lifecycle)
+        return self.lifecycle
+
+    def recover_lifecycle(self, directory: str | None = None):
+        """Restore snapshot + WAL after a crash/restart and resume serving.
+
+        Same hard-fail config/params contract as ``restore_index``; returns
+        the ``RecoveryStats`` crash forensics (torn bytes dropped, acked
+        tail records replayed).
+        """
+        from repro.serving.lifecycle import LifecycleIndex
+        from repro.serving.snapshot import (SnapshotError, config_signature,
+                                            read_manifest)
+
+        directory = directory if directory is not None else self.svc.snapshot_dir
+        assert directory, "pass a directory or set ServiceConfig.snapshot_dir"
+        manifest = read_manifest(directory, verify=False)
+        stored = manifest["config"]
+        want = dict(config_signature(self.index))
+        if stored != want:
+            diff = {k: (stored.get(k), want[k]) for k in want
+                    if stored.get(k) != want[k]}
+            raise SnapshotError(
+                f"snapshot config does not match ServiceConfig "
+                f"(snapshot, service): {diff}")
+        stored_fp = manifest.get("extra", {}).get("params_crc32")
+        if stored_fp is not None and stored_fp != self._params_fingerprint():
+            raise SnapshotError(
+                f"snapshot was embedded by a different model: params "
+                f"fingerprint {stored_fp} != this service's "
+                f"{self._params_fingerprint()} (same --seed / checkpoint?)")
+        self._drop_lifecycle()
+        self.lifecycle, recovery = LifecycleIndex.recover(
+            self._lifecycle_config(directory), meter=self.meter,
+            impl=self.svc.impl)
+        self.index = self.lifecycle.index
+        self.engine.rebind(self.lifecycle)
+        return recovery
+
+    def _live_index(self):
+        """The currently-serving RetrievalIndex epoch (lifecycle-aware)."""
+        return self.lifecycle.index if self.lifecycle is not None else self.index
 
     # -- persistence: shard-routed serving (DESIGN.md §13) ------------------
 
@@ -308,14 +403,29 @@ class TwoTowerRetrievalService:
     # -- online: item ingest (delta segment) --------------------------------
 
     def ingest_items(self, item_ids, item_fields) -> None:
+        """Upsert items through the delta segment — WAL-acked when the
+        lifecycle is armed (the ack implies the write survives a crash)."""
         vecs = self._embed(self._item_tower, np.asarray(item_fields, np.int32))
-        self.index.upsert(item_ids, vecs)
+        target = self.lifecycle if self.lifecycle is not None else self.index
+        target.upsert(item_ids, vecs)
 
     def delete_items(self, item_ids) -> int:
-        return self.index.delete(item_ids)
+        target = self.lifecycle if self.lifecycle is not None else self.index
+        return target.delete(item_ids)
 
-    def compact(self) -> None:
-        self.index.compact()
+    def compact(self, *, wait: bool = False) -> None:
+        """Fold the delta into a fresh main epoch.
+
+        With the lifecycle armed and ``background_retrain`` on, training
+        runs in the worker and the swap lands at a batch boundary
+        (``wait=True`` blocks for it); otherwise the classic synchronous
+        repack.
+        """
+        if self.lifecycle is not None:
+            self.lifecycle.compact(wait=wait)
+            self.index = self.lifecycle.index
+        else:
+            self.index.compact()
 
     # -- online: user retrieval ---------------------------------------------
 
@@ -349,13 +459,16 @@ class TwoTowerRetrievalService:
         return np.asarray(res.ids), scores
 
     def stats(self) -> dict:
+        live = self._live_index()
         out = {
-            "index_rows": len(self.index),
-            "index_dead": self.index.n_dead,
+            "index_rows": len(live),
+            "index_dead": live.n_dead,
             "cache": self.user_cache.stats(),
             "serving": self.e2e_meter.summary(),
             "engine": self.meter.summary(),
         }
+        if self.lifecycle is not None:
+            out["lifecycle"] = self.lifecycle.stats()
         router = getattr(self, "router", None)
         if router is not None:
             out["fleet"] = {

@@ -42,10 +42,16 @@ Guarantees:
   restored index returns bit-identical ``SearchResult`` values AND ids.
 
 The delta segment is persisted as a *journal*: length-prefixed, CRC-framed
-``add``/``del`` records replayed through the index's own mutation path on
-restore.  Framing is append-only by construction — a future incremental mode
-can extend an existing journal without rewriting the main segment (ROADMAP:
-journal compaction).
+``add``/``upsert``/``del`` records replayed through the index's own mutation
+path on restore.  Framing is append-only by construction, and the lifecycle
+layer (``serving.lifecycle``, DESIGN.md §16) uses exactly that: a snapshot
+saved with ``wal=True`` marks its journal stamp as a *verified prefix*, so a
+``WalWriter`` can extend the journal in place — one fsync-acked record per
+mutation — without rewriting the main segment.  Restore then replays the
+stamped prefix strictly (mid-file corruption refused, as always) and the
+appended tail leniently: an in-flight record torn by a crash (incomplete
+frame, or a CRC-failing frame that reaches EOF) is dropped at the last valid
+frame boundary — by the durability contract it was never acknowledged.
 """
 from __future__ import annotations
 
@@ -59,7 +65,13 @@ from typing import IO
 import jax.numpy as jnp
 import numpy as np
 
-FORMAT_VERSION = 1
+# Version 2 (this tree): journals carry the RPJL0002 magic whose record CRCs
+# are seeded with the record TAG (a bit-flipped tag cannot silently relabel a
+# WAL record), and manifests may carry the ``wal`` marker (prefix-stamped
+# journal, incremental appends).  Version-1 snapshots restore unchanged —
+# their journals are always fully covered by the file stamp.
+FORMAT_VERSION = 2
+SUPPORTED_VERSIONS = (1, 2)
 _MANIFEST = "manifest.json"
 _MAIN = "main.npz"
 _JOURNAL = "journal.bin"
@@ -67,8 +79,10 @@ _IVF = "ivf.npz"
 _PQ = "pq.npz"
 _REPLICA = "replica.npz"
 
-_JOURNAL_MAGIC = b"RPJL0001"
+_JOURNAL_MAGIC_V1 = b"RPJL0001"  # record CRC covers the payload only
+_JOURNAL_MAGIC = b"RPJL0002"  # record CRC seeded with the tag
 _REC_HEADER = struct.Struct("<4sII")  # tag, payload bytes, payload crc32
+_REC_TAGS = (b"ADD\0", b"UPS\0", b"DEL\0")
 
 # The knobs that determine what a search computes — two indexes with equal
 # signatures scan identically.  Recorded in the manifest and hard-checked on
@@ -84,39 +98,79 @@ class SnapshotError(RuntimeError):
 # -- journal framing ---------------------------------------------------------
 
 
-def _write_record(f: IO[bytes], tag: bytes, arrays: dict) -> None:
+def write_record(f: IO[bytes], tag: bytes, arrays: dict) -> int:
+    """Append one framed record (current-magic CRC: seeded with the tag).
+
+    Returns the number of bytes written — the frame is the WAL's durability
+    unit, so callers (``lifecycle.WalWriter``) account appends by it.
+    """
     import io
 
     buf = io.BytesIO()
     np.savez(buf, **arrays)
     payload = buf.getvalue()
-    f.write(_REC_HEADER.pack(tag, len(payload), zlib.crc32(payload)))
+    f.write(_REC_HEADER.pack(tag, len(payload),
+                             zlib.crc32(payload, zlib.crc32(tag))))
     f.write(payload)
+    return _REC_HEADER.size + len(payload)
 
 
-def _read_records(path: str) -> list[tuple[bytes, dict]]:
-    """Parse a journal file; raise SnapshotError on any torn/corrupt frame."""
+def read_journal(path: str, *, verified_bytes: int | None = None,
+                 allow_torn_tail: bool = False,
+                 ) -> tuple[list[tuple[bytes, dict, int]], int, int]:
+    """Parse a journal into ``(records, valid_bytes, torn_bytes)``.
+
+    ``records`` entries are ``(tag, arrays, end_offset)`` in append order.
+    Frames are strict by default: any torn or CRC-failing frame raises
+    ``SnapshotError``.  A WAL journal (manifest ``wal`` marker) passes its
+    stamped prefix length as ``verified_bytes`` and ``allow_torn_tail=True``;
+    frames starting past the prefix then get the torn-tail policy:
+
+    * an incomplete frame (header or payload runs off EOF), or a CRC-failing
+      frame whose extent REACHES EOF, is a torn in-flight append — the crash
+      hit mid-write, the record was never fsync-acked, and parsing stops at
+      the last valid frame boundary (``valid_bytes``; ``torn_bytes`` counts
+      the dropped bytes);
+    * a CRC-failing frame with more journal BEYOND it cannot be an in-flight
+      append (appends land at the end) — that is mid-file corruption and is
+      refused exactly like corruption inside the stamped prefix.
+    """
     import io
 
     with open(path, "rb") as f:
         data = f.read()
-    if data[: len(_JOURNAL_MAGIC)] != _JOURNAL_MAGIC:
-        raise SnapshotError(f"journal magic mismatch in {path}")
+    magic = data[: len(_JOURNAL_MAGIC)]
+    if magic == _JOURNAL_MAGIC:
+        seed_tag = True
+    elif magic == _JOURNAL_MAGIC_V1:
+        seed_tag = False
+    else:
+        raise SnapshotError(f"journal magic mismatch in {path}: {magic!r}")
     pos, out = len(_JOURNAL_MAGIC), []
+    ver = len(data) if verified_bytes is None else int(verified_bytes)
     while pos < len(data):
+        in_tail = allow_torn_tail and pos >= ver
         if pos + _REC_HEADER.size > len(data):
+            if in_tail:
+                return out, pos, len(data) - pos
             raise SnapshotError(f"truncated journal header at byte {pos}")
         tag, nbytes, crc = _REC_HEADER.unpack_from(data, pos)
-        pos += _REC_HEADER.size
-        payload = data[pos : pos + nbytes]
-        if len(payload) != nbytes:
+        end = pos + _REC_HEADER.size + nbytes
+        if end > len(data):
+            if in_tail:
+                return out, pos, len(data) - pos
             raise SnapshotError(f"truncated journal payload at byte {pos}")
-        if zlib.crc32(payload) != crc:
+        payload = data[pos + _REC_HEADER.size : end]
+        want = (zlib.crc32(payload, zlib.crc32(tag)) if seed_tag
+                else zlib.crc32(payload))
+        if want != crc:
+            if in_tail and end == len(data):
+                return out, pos, len(data) - pos
             raise SnapshotError(f"journal record CRC mismatch at byte {pos}")
         with np.load(io.BytesIO(payload)) as z:
-            out.append((tag, {k: z[k] for k in z.files}))
-        pos += nbytes
-    return out
+            out.append((tag, {k: z[k] for k in z.files}, end))
+        pos = end
+    return out, pos, 0
 
 
 # -- save --------------------------------------------------------------------
@@ -128,19 +182,48 @@ def _npz_atomic(path: str, arrays: dict) -> None:
         np.savez(f, **arrays)
 
 
-def _file_stamp(path: str) -> dict:
+def _file_stamp(path: str, limit: int | None = None) -> dict:
     """Byte count + streaming CRC32 — never the whole file in memory (a
-    main segment at the scale this module cites is multi-GB)."""
+    main segment at the scale this module cites is multi-GB).  ``limit``
+    stamps only the first ``limit`` bytes: the verified-prefix stamp of a
+    WAL journal that keeps growing past its manifest."""
     crc, nbytes = 0, 0
+    left = limit
     with open(path, "rb") as f:
-        while chunk := f.read(1 << 22):
+        while True:
+            want = 1 << 22 if left is None else min(1 << 22, left)
+            if not want:
+                break
+            chunk = f.read(want)
+            if not chunk:
+                break
             crc = zlib.crc32(chunk, crc)
             nbytes += len(chunk)
+            if left is not None:
+                left -= len(chunk)
     return {"bytes": nbytes, "crc32": crc}
 
 
+def _replace_dir(directory: str, tmp: str) -> None:
+    """Swap ``tmp`` into ``directory`` — replace-by-rename, never
+    delete-then-rename: a crash between the two must leave SOME restorable
+    snapshot.  The old image moves aside, the new one renames in, and only
+    then is the old one reaped.  (A crash in the window leaves the old image
+    at ``.old-<pid>``: recoverable by hand, vs. an empty path which defeats
+    the module's whole purpose.)"""
+    old = None
+    if os.path.exists(directory):
+        old = directory.rstrip("/") + f".old-{os.getpid()}"
+        if os.path.exists(old):
+            shutil.rmtree(old)
+        os.rename(directory, old)
+    os.rename(tmp, directory)
+    if old is not None:
+        shutil.rmtree(old)
+
+
 def save_index(idx, directory: str, *, include_replicas: bool = True,
-               extra: dict | None = None) -> str:
+               extra: dict | None = None, wal: bool = False) -> str:
     """Snapshot ``idx`` (a ``serving.index.RetrievalIndex``) under ``directory``.
 
     Returns the final snapshot path.  The write is atomic (tmp + rename): an
@@ -148,6 +231,11 @@ def save_index(idx, directory: str, *, include_replicas: bool = True,
     complete on disk.  ``extra`` is caller metadata carried verbatim in the
     manifest (the service layer stores a tower-params fingerprint there, so
     a snapshot cannot be served against a different model).
+
+    ``wal=True`` marks the journal stamp as a *verified prefix* rather than a
+    whole-file stamp: a ``lifecycle.WalWriter`` may then extend ``journal.bin``
+    in place, and restore verifies the prefix by CRC and the appended tail by
+    record framing (torn in-flight tail dropped, mid-file corruption refused).
     """
     tmp = directory.rstrip("/") + f".tmp-{os.getpid()}"
     if os.path.exists(tmp):
@@ -169,7 +257,7 @@ def save_index(idx, directory: str, *, include_replicas: bool = True,
     with open(os.path.join(tmp, _JOURNAL), "wb") as f:
         f.write(_JOURNAL_MAGIC)
         if n:
-            _write_record(f, b"ADD\0", {
+            write_record(f, b"ADD\0", {
                 "ids": idx._delta_ids[:n], "vecs": idx._delta_vecs[:n],
                 "live": idx._delta_live[:n],
             })
@@ -214,23 +302,40 @@ def save_index(idx, directory: str, *, include_replicas: bool = True,
         "files": files,
         "complete": True,
     }
+    if wal:
+        manifest["wal"] = True
     with open(os.path.join(tmp, _MANIFEST), "w") as f:
         json.dump(manifest, f, indent=1)
-    # Replace-by-rename, never delete-then-rename: a crash between the two
-    # must leave SOME restorable snapshot — the old image moves aside, the
-    # new one renames in, and only then is the old one reaped.  (A crash in
-    # the window leaves the old image at .old-<pid>: recoverable by hand,
-    # vs. an empty path which defeats the module's whole purpose.)
-    old = None
-    if os.path.exists(directory):
-        old = directory.rstrip("/") + f".old-{os.getpid()}"
-        if os.path.exists(old):
-            shutil.rmtree(old)
-        os.rename(directory, old)
-    os.rename(tmp, directory)
-    if old is not None:
-        shutil.rmtree(old)
+    _replace_dir(directory, tmp)
     return directory
+
+
+def checkpoint_journal(directory: str, *, rows: dict | None = None) -> dict:
+    """Fold a WAL snapshot's appended journal tail into its verified prefix.
+
+    The incremental ``save()``: restamps ``journal.bin`` at its CURRENT
+    length (the frames a ``WalWriter`` fsync-acked since the last stamp
+    become part of the strictly-verified prefix) and rewrites only
+    ``manifest.json`` — the multi-GB ``main.npz`` is untouched.  ``rows``
+    optionally updates the manifest row counts to the index's current
+    geometry.  Atomic via tmp + ``os.replace``.  Returns the new stamp.
+    """
+    manifest = read_manifest(directory, verify=False)
+    _expect(bool(manifest.get("wal")),
+            f"{directory} is not a WAL snapshot — checkpoint_journal extends "
+            f"journal stamps in place; use save_index for full images")
+    stamp = _file_stamp(os.path.join(directory, _JOURNAL))
+    manifest["files"][_JOURNAL] = stamp
+    if rows is not None:
+        manifest["rows"] = {k: int(v) for k, v in rows.items()}
+    mpath = os.path.join(directory, _MANIFEST)
+    tmp = mpath + f".tmp-{os.getpid()}"
+    with open(tmp, "w") as f:
+        json.dump(manifest, f, indent=1)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, mpath)
+    return stamp
 
 
 def config_signature(idx) -> dict:
@@ -258,16 +363,23 @@ def read_manifest(directory: str, *, verify: bool = True) -> dict:
     if not manifest.get("complete"):
         raise SnapshotError(f"incomplete snapshot (torn save?) at {directory}")
     ver = manifest.get("format_version")
-    if ver != FORMAT_VERSION:
+    if ver not in SUPPORTED_VERSIONS:
         raise SnapshotError(
-            f"snapshot format_version {ver} != supported {FORMAT_VERSION}; "
-            f"re-save the index with this tree (no silent cross-version read)")
+            f"snapshot format_version {ver} not in supported "
+            f"{SUPPORTED_VERSIONS}; re-save the index with this tree "
+            f"(no silent cross-version read)")
     if not verify:
         return manifest
+    wal = bool(manifest.get("wal"))
     for name, stamp in manifest["files"].items():
         fpath = os.path.join(directory, name)
+        # A WAL journal's stamp covers a verified PREFIX: the file may have
+        # grown past it (fsync-acked appends), so CRC only the stamped bytes
+        # — the tail is verified record-by-record at replay.  A file SHORTER
+        # than its stamp is truncation either way.
+        limit = stamp["bytes"] if wal and name == _JOURNAL else None
         try:
-            got = _file_stamp(fpath)
+            got = _file_stamp(fpath, limit)
         except OSError as e:
             raise SnapshotError(f"missing snapshot segment {name}: {e}") from e
         if got != stamp:
@@ -277,8 +389,60 @@ def read_manifest(directory: str, *, verify: bool = True) -> dict:
     return manifest
 
 
+def replay_record(idx, tag: bytes, rec: dict) -> None:
+    """Apply one journal record through the index's own mutation path.
+
+    Shared by snapshot restore and the lifecycle handoff replay, so the two
+    consumers of the WAL cannot drift.  Bulk ADD replays as ONE vectorized
+    append — the liveness mask lands in a single slice assignment instead of
+    a per-row Python loop — and the resulting ``_delta_n``/live-mask bits
+    are checked identical to the record's before returning.
+    """
+    if tag == b"ADD\0":
+        _expect(all(k in rec for k in ("ids", "vecs", "live")),
+                f"ADD journal record missing fields: has {sorted(rec)}")
+        rids = rec["ids"].astype(np.int32)
+        _expect(rec["vecs"].shape == (len(rids), idx.dim),
+                f"journal vecs shape {rec['vecs'].shape} != "
+                f"({len(rids)}, {idx.dim})")
+        live = rec["live"].astype(bool)
+        _expect(live.shape == (len(rids),),
+                f"journal live-mask shape {live.shape} != ({len(rids)},)")
+        r0 = idx._delta_n
+        idx._append_delta(rids, rec["vecs"].astype(np.float32))
+        if not live.all():
+            # Rows dead at record time flip in one slice write; an id is
+            # dropped from `_loc` only while it still points at its dead row
+            # (an id upserted again later in the record points at its later,
+            # live row — that mapping stays).
+            idx._delta_live[r0:r0 + len(rids)] = live
+            for off in np.nonzero(~live)[0]:
+                if idx._loc.get(int(rids[off])) == ("delta", r0 + int(off)):
+                    del idx._loc[int(rids[off])]
+        _expect(idx._delta_n == r0 + len(rids),
+                f"vectorized ADD replay grew delta to {idx._delta_n}, "
+                f"expected {r0 + len(rids)}")
+        _expect(np.array_equal(idx._delta_live[r0:r0 + len(rids)], live),
+                "vectorized ADD replay live-mask bits differ from record")
+    elif tag == b"UPS\0":
+        _expect(all(k in rec for k in ("ids", "vecs")),
+                f"UPS journal record missing fields: has {sorted(rec)}")
+        _expect(rec["vecs"].shape == (len(rec["ids"]), idx.dim),
+                f"journal vecs shape {rec['vecs'].shape} != "
+                f"({len(rec['ids'])}, {idx.dim})")
+        idx.upsert(rec["ids"].astype(np.int64),
+                   rec["vecs"].astype(np.float32))
+    elif tag == b"DEL\0":
+        _expect("ids" in rec,
+                f"DEL journal record missing ids: has {sorted(rec)}")
+        idx.delete(rec["ids"].astype(np.int64))
+    else:
+        raise SnapshotError(f"unknown journal record tag {tag!r}")
+
+
 def restore_index(directory: str, *, mesh=None, db_axis: str = "model",
-                  query_axis: str = "data", impl: str | None = None):
+                  query_axis: str = "data", impl: str | None = None,
+                  recovery: dict | None = None):
     """Rebuild a ``RetrievalIndex`` from a snapshot — zero training work.
 
     ``mesh`` is runtime state, never serialized; pass the serving mesh here
@@ -286,6 +450,11 @@ def restore_index(directory: str, *, mesh=None, db_axis: str = "model",
     a cell-block layout cannot be resharded without retraining).  ``impl``
     optionally overrides the scorer backend ("jnp"/"fused"): it changes how
     tiles are computed, not what the index contains.
+
+    ``recovery``, when given, is filled in place with what the journal replay
+    saw — stamped/valid/torn byte counts and prefix/tail record counts — so
+    lifecycle recovery can report exactly what a crash cost (by contract:
+    nothing acknowledged).
     """
     from repro.serving.index import RetrievalIndex
 
@@ -320,36 +489,33 @@ def restore_index(directory: str, *, mesh=None, db_axis: str = "model",
     # compact) to behave identically.
     idx._main_epoch = int(manifest["main_epoch"])
 
-    for tag, rec in _read_records(os.path.join(directory, _JOURNAL)):
-        if tag == b"ADD\0":
-            _expect(all(k in rec for k in ("ids", "vecs", "live")),
-                    f"ADD journal record missing fields: has {sorted(rec)}")
-            rids = rec["ids"].astype(np.int32)
-            _expect(rec["vecs"].shape == (len(rids), dim),
-                    f"journal vecs shape {rec['vecs'].shape} != "
-                    f"({len(rids)}, {dim})")
-            r0 = idx._delta_n
-            idx._append_delta(rids, rec["vecs"].astype(np.float32))
-            for off in np.nonzero(~rec["live"])[0]:
-                # Dead at save time: flip the ROW, and drop the id only if
-                # it still points at this row (an upserted id points at its
-                # later, live row — leave that mapping alone).
-                idx._delta_live[r0 + int(off)] = False
-                if idx._loc.get(int(rids[off])) == ("delta", r0 + int(off)):
-                    del idx._loc[int(rids[off])]
-        elif tag == b"DEL\0":
-            _expect("ids" in rec,
-                    f"DEL journal record missing ids: has {sorted(rec)}")
-            for i in rec["ids"]:
-                idx._tombstone(int(i), missing_ok=False)
-        else:
-            raise SnapshotError(f"unknown journal record tag {tag!r}")
+    wal = bool(manifest.get("wal"))
+    stamped = int(manifest["files"][_JOURNAL]["bytes"])
+    records, valid_bytes, torn_bytes = read_journal(
+        os.path.join(directory, _JOURNAL),
+        verified_bytes=stamped if wal else None, allow_torn_tail=wal)
+    n_prefix = sum(1 for _, _, end in records if end <= stamped)
+    for tag, rec, _ in records[:n_prefix]:
+        replay_record(idx, tag, rec)
+    # The manifest row counts describe the state AT THE STAMP — check them
+    # between prefix and tail replay: the tail holds mutations acked after
+    # the last checkpoint, so the final counts legitimately differ.
     _expect(idx._delta_n == manifest["rows"]["delta"],
             f"journal replay produced {idx._delta_n} delta rows, manifest "
             f"says {manifest['rows']['delta']}")
     _expect(len(idx) == manifest["rows"]["live"],
             f"restored live count {len(idx)} != manifest "
             f"{manifest['rows']['live']}")
+    for tag, rec, _ in records[n_prefix:]:
+        replay_record(idx, tag, rec)
+    if recovery is not None:
+        recovery.update({
+            "wal": wal, "stamped_bytes": stamped,
+            "valid_bytes": int(valid_bytes), "torn_bytes": int(torn_bytes),
+            "prefix_records": n_prefix,
+            "tail_records": len(records) - n_prefix,
+            "rows_live": len(idx), "rows_delta": int(idx._delta_n),
+        })
 
     _preload_trained(idx, directory, manifest)
     return idx
@@ -571,15 +737,7 @@ def save_shards(idx, directory: str, n_shards: int, *, replicas: int = 1,
             "parent_fingerprint": fp,
             "complete": True,
         }, f, indent=1)
-    old = None
-    if os.path.exists(directory):
-        old = directory.rstrip("/") + f".old-{os.getpid()}"
-        if os.path.exists(old):
-            shutil.rmtree(old)
-        os.rename(directory, old)
-    os.rename(tmp, directory)
-    if old is not None:
-        shutil.rmtree(old)
+    _replace_dir(directory, tmp)
     return [os.path.join(directory, _SHARD_DIR_FMT.format(s.shard_id))
             for s in specs]
 
@@ -604,8 +762,9 @@ def read_fleet_manifest(directory: str) -> dict:
     _expect(bool(manifest.get("complete")),
             f"incomplete fleet manifest (torn save?) at {directory}")
     ver = manifest.get("format_version")
-    _expect(ver == FORMAT_VERSION,
-            f"fleet format_version {ver} != supported {FORMAT_VERSION}")
+    _expect(ver in SUPPORTED_VERSIONS,
+            f"fleet format_version {ver} not in supported "
+            f"{SUPPORTED_VERSIONS}")
     n_found = len(shard_dirs(directory))
     _expect(int(manifest.get("n_shards", -1)) == n_found,
             f"fleet manifest says {manifest.get('n_shards')} shards, root "
