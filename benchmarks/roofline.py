@@ -123,7 +123,7 @@ def analyze(rec: dict) -> dict | None:
 
 
 def main(paths=None, md_out=None):
-    # dryrun.json = scanned production compiles (the §Dry-run artifact);
+    # dryrun.json = scanned production compiles (the launch/dryrun.py artifact);
     # dryrun_unrolled.json = trip-count-true accounting (overlays by key:
     # XLA cost_analysis counts while-loop bodies once, so scanned LM / ring
     # records under-report — see launch/dryrun.py --unroll).
@@ -137,7 +137,7 @@ def main(paths=None, md_out=None):
     rows = []
     for key in sorted(recs):
         if recs[key].get("mesh") != "single":
-            continue  # §Roofline is single-pod only; multi-pod lives in §Dry-run
+            continue  # §Roofline is single-pod only; multi-pod lives in the dryrun JSON
         a = analyze(recs[key])
         if a:
             rows.append(a)

@@ -21,7 +21,8 @@ import time
 
 
 SUITES = ("table1", "scaling", "kernels", "selection", "serving", "ivf",
-          "pq", "snapshot", "shards", "faults", "rpc", "lifecycle")
+          "pq", "snapshot", "shards", "faults", "rpc", "lifecycle",
+          "filtered")
 
 
 def run_suite(name: str, smoke: bool) -> None:
@@ -108,6 +109,15 @@ def run_suite(name: str, smoke: bool) -> None:
                                     wal_batches=8)
         else:
             serving.lifecycle_sweep()
+    elif name == "filtered":
+        from benchmarks import serving
+        if smoke:
+            serving.filtered_sweep(corpus=2048, d=32, k=10, batches=4,
+                                   ncells=16, selectivities=(0.5, 0.1),
+                                   nprobes=(8, None), overfetches=(4,),
+                                   n_shards=4)
+        else:
+            serving.filtered_sweep()
     else:
         raise SystemExit(f"unknown suite {name!r}; have {SUITES}")
 

@@ -27,10 +27,16 @@ maps it as the "online retrieval" row).  Reports, in the standard
     ``benchmarks.run snapshot``): snapshot restore vs index retrain wall
     clock, with the snapshot footprint and a bit-identical-results check.
 
+  * the filtered sweep (DESIGN.md §17, ``benchmarks.run filtered``):
+    recall@k under allow-list filters across selectivity x nprobe x
+    overfetch (auto pre/post execution), plus per-query exclusion lists
+    and the sharded-router filtered-parity row.
+
 CLI: ``python -m benchmarks.serving --scan-dtype {float32,bf16,int8}`` runs
 one precision-sweep dtype end-to-end (plus the fp32 baseline it needs for
 recall); ``--ivf`` runs the IVF sweep instead; ``--pq`` the IVF-PQ sweep;
-``--cold-start`` the restore-vs-retrain measurement.
+``--cold-start`` the restore-vs-retrain measurement; ``--filtered`` the
+filtered-retrieval sweep.
 """
 from __future__ import annotations
 
@@ -670,6 +676,122 @@ def lifecycle_sweep(corpus: int = 8192, d: int = 64, k: int = 10,
         shutil.rmtree(tmp, ignore_errors=True)
 
 
+def filtered_sweep(corpus: int = 8192, d: int = 64, k: int = 10,
+                   batches: int = 6, ncells: int = 64,
+                   selectivities=(0.5, 0.25, 0.1), nprobes=(8, None),
+                   overfetches=(4, 16), n_queries: int = 64,
+                   n_shards: int = 4):
+    """Filtered retrieval (DESIGN.md §17): recall@k under predicate filters.
+
+    The grid is selectivity x nprobe x overfetch over one IVF index served
+    with an allow-list ``QueryFilter`` in ``mode="auto"`` — so the rows show
+    both executions the auto policy picks: below ``AUTO_PRE_BELOW`` the scan
+    masks disallowed rows (pre-filter), above it the fetch widens and
+    filters after (post-filter).  Recall is measured against the EXACT
+    filtered baseline (flat fp32 scan under the same filter), so the number
+    is "what did filtering through the ANN path cost", not "what did the
+    filter remove".
+
+    Row keying for the CI floor: exhaustive-probe rows in the pre regime
+    are exact by construction and carry ``recall@k`` (the gated filtered
+    floor — filtering itself must lose nothing); probed and post-regime
+    rows carry ``recall_sel@k`` — the selectivity/probe interaction is the
+    tradeoff being CHARTED, not a regression.  Two extra rows: per-query
+    exclusion lists at exhaustive probe (exact via additive k+E widening —
+    gated), and the sharded-router parity row (routed filtered result vs
+    the single-host filtered result, both exhaustive).
+    """
+    import os
+    import shutil
+    import tempfile
+
+    from repro.accounting import ServingMeter
+    from repro.data.synthetic import clustered_vectors
+    from repro.serving import (EngineConfig, QueryEngine, QueryFilter,
+                               RetrievalIndex, load_router)
+    from repro.serving.filters import AUTO_PRE_BELOW
+    from repro.serving.snapshot import save_shards, shard_dirs
+
+    rng = np.random.default_rng(53)
+    vecs = clustered_vectors(corpus, d, seed=51)
+    q = clustered_vectors(n_queries, d, seed=52)
+    flat = RetrievalIndex.build(np.arange(corpus), vecs, impl="fused")
+    idx = RetrievalIndex.build(np.arange(corpus), vecs, ivf_cells=ncells,
+                               nprobe=8, overfetch=overfetches[0])
+    eff = idx._effective_ncells()
+
+    for s in selectivities:
+        allow = rng.choice(corpus, size=max(k, int(s * corpus)),
+                           replace=False)
+        filt = QueryFilter(allowed_ids=allow)
+        # Exact filtered baseline: flat fp32 under the same filter (the
+        # flat pre path is exact over allowed rows — property-tested).
+        want = np.asarray(flat.search(q, k, filter=filt).ids)
+        for nprobe in nprobes:
+            np_eff = eff if nprobe is None else min(int(nprobe), eff)
+            for of in overfetches:
+                idx.nprobe, idx.overfetch = np_eff, of
+                meter = ServingMeter()
+                eng = QueryEngine(
+                    idx, EngineConfig(k=k, min_batch=8, max_batch=1024),
+                    meter=meter)
+                for _ in range(batches):
+                    r = eng.search(q, k, filter=filt)
+                rec = _recall_at_k(np.asarray(r.ids), want)
+                sm = meter.summary()
+                gated = np_eff >= eff and s < AUTO_PRE_BELOW
+                rkey = f"recall@{k}" if gated else f"recall_sel@{k}"
+                emit(f"serving_filtered_s{int(s * 100):02d}"
+                     f"_np{np_eff}_of{of}",
+                     (sm["mean_ms"] / 1e3) if sm["batches"] else 0.0,
+                     f"qps={sm['qps']:.0f};p50_ms={sm['p50_ms']:.2f};"
+                     f"p99_ms={sm['p99_ms']:.2f};{rkey}={rec:.4f};"
+                     f"selectivity={s};nprobe={np_eff};overfetch={of};"
+                     f"mode=auto")
+
+    # Per-query exclusion lists (the "already seen" recommender filter):
+    # exclude every query's true top-3, exhaustive probe.  Exact by the
+    # additive k+E widening — at most E excluded ids can land in the
+    # widened top-(k+E), so k allowed survivors always remain.
+    ex = np.asarray(flat.search(q, k).ids)[:, :3]
+    filt = QueryFilter(exclude_ids=ex)
+    want = np.asarray(flat.search(q, k, filter=filt).ids)
+    idx.nprobe, idx.overfetch = eff, overfetches[-1]
+    meter = ServingMeter()
+    eng = QueryEngine(idx, EngineConfig(k=k, min_batch=8, max_batch=1024),
+                      meter=meter)
+    for _ in range(batches):
+        r = eng.search(q, k, filter=filt)
+    sm = meter.summary()
+    emit("serving_filtered_exclusions",
+         (sm["mean_ms"] / 1e3) if sm["batches"] else 0.0,
+         f"qps={sm['qps']:.0f};p50_ms={sm['p50_ms']:.2f};"
+         f"p99_ms={sm['p99_ms']:.2f};"
+         f"recall@{k}={_recall_at_k(np.asarray(r.ids), want):.4f};"
+         f"exclude_per_query={ex.shape[1]};nprobe={eff}")
+
+    # Sharded parity: the same filtered query through the probe-set router
+    # must return the single-host filtered id set (both exhaustive → both
+    # exact → identical sets; the test suite pins this bit-exactly).
+    tmp = tempfile.mkdtemp(prefix="repro-filtered-")
+    try:
+        S = min(n_shards, eff)
+        root = os.path.join(tmp, "fleet")
+        save_shards(idx, root, S)
+        router = load_router(shard_dirs(root))
+        allow = rng.choice(corpus, size=corpus // 4, replace=False)
+        filt = QueryFilter(allowed_ids=allow, exclude_ids=ex)
+        single = np.asarray(idx.search(q, k, filter=filt).ids)
+        routed = np.asarray(router.search(q, k, filter=filt).ids)
+        match = float(np.mean([set(a.tolist()) == set(b.tolist())
+                               for a, b in zip(routed, single)]))
+        emit("serving_filtered_sharded_parity", 0.0,
+             f"set_match={match:.4f};shards={S};nprobe={eff};"
+             f"allow={len(allow)};exclude_per_query={ex.shape[1]}")
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
 def main(corpus: int = 8192, d: int = 64, k: int = 10,
          batch_sizes=(8, 64, 256), batches: int = 12, churn: int = 512,
          scan_dtypes=("float32", "bfloat16", "int8"), overfetch: int = 4):
@@ -732,6 +854,11 @@ if __name__ == "__main__":
                     help="run the process-worker transport sweep: inproc vs "
                          "proc qps/p99, the analytic wire-bytes model, and "
                          "the SIGKILL crash-recovery timeline (DESIGN.md §15)")
+    ap.add_argument("--filtered", action="store_true",
+                    help="run the filtered-retrieval sweep: recall@k under "
+                         "allow-list filters across selectivity x nprobe x "
+                         "overfetch, plus the exclusion-list and sharded "
+                         "parity rows (DESIGN.md §17)")
     ap.add_argument("--lifecycle", action="store_true",
                     help="run the crash-safe lifecycle sweep: WAL fsync ack "
                          "cost, serving p99 through a compact+retrain window "
@@ -746,7 +873,10 @@ if __name__ == "__main__":
     ap.add_argument("--nprobe", type=int, default=8)
     a = ap.parse_args()
     print("name,us_per_call,derived")
-    if a.lifecycle:
+    if a.filtered:
+        filtered_sweep(a.corpus, a.d, a.k, a.batches, ncells=a.ivf_cells,
+                       overfetches=(a.overfetch, 4 * a.overfetch))
+    elif a.lifecycle:
         lifecycle_sweep(a.corpus, a.d, a.k, ncells=a.ivf_cells,
                         nprobe=a.nprobe)
     elif a.rpc:

@@ -9,7 +9,9 @@
      vector");
   4. serve user->item retrieval through the batched query engine, then
      exercise the online index lifecycle: ingest fresh items into the
-     delta segment, delete stale ones, compact, and re-serve.
+     delta segment, delete stale ones, compact, and re-serve;
+  5. re-recommend with per-user seen-item exclusion lists — the filtered
+     retrieval path every production recommender needs (DESIGN.md §17).
 
     PYTHONPATH=src python examples/recommender.py
 """
@@ -90,4 +92,15 @@ st = svc.stats()
 print(f"after churn: {st['index_rows']} items, serving p50 "
       f"{st['serving']['p50_ms']:.1f} ms, cache hit-rate "
       f"{st['cache']['hit_rate']:.2f}")
+
+# -- 5. seen-item exclusion: never recommend what the user already saw -------
+# Each user's click history (here: their previous recommendations, the
+# classic impression-discounting loop) becomes a ragged exclusion list; the
+# index widens its fetch by the list width so the page stays exactly the
+# next-best k items (DESIGN.md §17).
+seen = [ids3[u].tolist()[: 2 + u % 3] for u in range(len(user_keys))]
+ids4, _ = svc.recommend(user_keys, users, exclude_ids=seen)
+for u in range(len(user_keys)):
+    assert not set(ids4[u]) & set(seen[u]), "excluded item resurfaced"
+print(f"seen-item exclusion: user 0 saw {seen[0]}, now gets {ids4[0].tolist()}")
 print("done.")

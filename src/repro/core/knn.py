@@ -100,6 +100,7 @@ def knn_query(
     exclude_self: bool = False,
     threshold_skip: bool | None = None,
     db_live: Array | None = None,
+    q_allowed: Array | None = None,
 ) -> KNNResult:
     """k nearest database rows for each query row (asymmetric problem).
 
@@ -113,6 +114,14 @@ def knn_query(
     and are never selected (the serving index's tombstones).  A mask keeps
     the compiled shapes independent of how many rows are dead, unlike
     over-fetch-and-filter schemes.
+
+    ``q_allowed``: optional traced bool [m, n] PER-QUERY filter bitmap
+    (DESIGN.md §17) — row j scores +inf for query i when
+    ``q_allowed[i, j]`` is False, the per-query generalization of
+    ``db_live``.  Both masks compose (a row must be live AND allowed);
+    an all-True bitmap is bit-identical to passing None.  On the fused
+    path the bitmap rides as a [bm, bn]-blocked kernel operand (the
+    rank-1 ``hy`` epilogue can only express per-ROW masks).
     """
     dist = get_distance(distance)
     m_real, d = queries.shape
@@ -132,6 +141,7 @@ def knn_query(
             tile_n=tile_n,
             exclude_self=exclude_self,
             db_live=db_live,
+            q_allowed=q_allowed,
             threshold_skip=threshold_skip,
         )
     threshold_skip = T.resolve_threshold_skip(threshold_skip, pallas=False)
@@ -144,6 +154,14 @@ def knn_query(
     if db_live is not None:
         pad = db.shape[0] - n_real
         live = jnp.concatenate([db_live, jnp.zeros((pad,), bool)])
+    allowed = None
+    if q_allowed is not None:
+        # Pad rows (sliced off) and columns (already +inf via n_real) False.
+        allowed = _pad_rows(q_allowed, tile_m)
+        pad_n = db.shape[0] - n_real
+        if pad_n:
+            allowed = jnp.concatenate(
+                [allowed, jnp.zeros((allowed.shape[0], pad_n), bool)], axis=1)
 
     def tile_fn(qt, dbt):
         if impl == "pallas":
@@ -165,6 +183,10 @@ def knn_query(
             if live is not None:
                 live_sl = jax.lax.dynamic_slice(live, (col_off,), (tile_n,))
                 tile = jnp.where(live_sl[None, :], tile, T.POS_INF)
+            if allowed is not None:
+                asl = jax.lax.dynamic_slice(
+                    allowed, (row_off, col_off), (tile_m, tile_n))
+                tile = jnp.where(asl, tile, T.POS_INF)
             return T.update_running(*run, tile, col_off, threshold_skip=threshold_skip)
 
         run = jax.lax.fori_loop(0, n_col_tiles, col_step, run)
@@ -349,6 +371,7 @@ def quantized_scan(
     cell_cap: int | None = None,
     pq_codebook=None,
     cell_bias: Array | None = None,
+    q_allowed: Array | None = None,
 ) -> KNNResult:
     """Tiled jnp scan of a compressed replica — stage 1 reference.
 
@@ -376,6 +399,12 @@ def quantized_scan(
     of cell ``c`` is masked +inf for queries that did not probe ``c``
     (the ``db_live``-style fallback when the scalar-prefetch kernels are not
     in play; cells here cost predicated compute, not zero DMA).
+
+    ``q_allowed``: optional bool [m, n] PER-QUERY filter bitmap in the SAME
+    row order as ``db_q`` (packed-slot order for a cell-packed replica —
+    see ``ivf_query``, which permutes it); column j is +inf for query i
+    when False, composing with both ``db_live`` and ``probed``
+    (DESIGN.md §17).
     """
     from repro.core.pq import PQCodes, build_pq_luts
     from repro.kernels.pq_scan import adc_tile
@@ -417,6 +446,12 @@ def quantized_scan(
     if probed is not None:
         assert cell_cap is not None
         probed = _pad_rows(probed, tile_m)
+    if q_allowed is not None:
+        q_allowed = _pad_rows(q_allowed, tile_m)
+        if pad_n:
+            q_allowed = jnp.concatenate(
+                [q_allowed, jnp.zeros((q_allowed.shape[0], pad_n), bool)],
+                axis=1)
     if cell_bias is not None:
         assert pq and cell_cap is not None
         cell_bias = _pad_rows(cell_bias, tile_m)
@@ -458,6 +493,10 @@ def quantized_scan(
                 cell_ids = jnp.clip(cell_ids, 0, pbt.shape[1] - 1)
                 tile = jnp.where(jnp.take(pbt, cell_ids, axis=1), tile,
                                  T.POS_INF)
+            if q_allowed is not None:
+                asl = jax.lax.dynamic_slice(
+                    q_allowed, (row_off, col_off), (tile_m, tile_n))
+                tile = jnp.where(asl, tile, T.POS_INF)
             return T.update_running(*run, tile, col_off,
                                     threshold_skip=threshold_skip)
 
@@ -497,6 +536,7 @@ def two_stage_query(
     overfetch: int = 4,
     threshold_skip: bool | None = None,
     db_live: Array | None = None,
+    q_allowed: Array | None = None,
 ) -> KNNResult:
     """Quantized scan of ``db_q`` + exact fp32 rescore against ``database``.
 
@@ -509,6 +549,9 @@ def two_stage_query(
     (DESIGN.md §Quantized).  ``impl="fused"`` scans with the Pallas kernel;
     anything else uses the tiled jnp reference (``quantized_scan`` — scores
     the stored rows directly, never a dequantized corpus copy).
+    ``q_allowed`` ([m, n] bool, DESIGN.md §17) masks the SCAN per query, so
+    the candidate set — and therefore the exact rescore — only ever holds
+    allowed rows.
     """
     n = database.shape[0]
     k_scan = scan_width(n, k, overfetch)
@@ -519,13 +562,44 @@ def two_stage_query(
         bm = min(256, T.next_pow2(max(m, 8)))
         cand = kops.fused_knn(
             queries, db_q, k_scan, distance=distance, tile_m=bm,
-            db_live=db_live, threshold_skip=threshold_skip).indices
+            db_live=db_live, q_allowed=q_allowed,
+            threshold_skip=threshold_skip).indices
     else:
         cand = quantized_scan(
             queries, db_q, k_scan, distance=distance,
-            db_live=db_live, threshold_skip=threshold_skip).indices
+            db_live=db_live, q_allowed=q_allowed,
+            threshold_skip=threshold_skip).indices
     return rescore(queries, database, cand, min(k, n), distance=distance,
                    impl=impl)
+
+
+def _packed_allowed(ivf, q_allowed: Array | None) -> Array | None:
+    """Per-query bitmap [m, n] in ORIGINAL row order -> packed-slot order.
+
+    The per-query analogue of ``core.ivf.packed_live``: the mask rides the
+    cell-packing permutation (pad slots disallowed), never retraining it
+    (DESIGN.md §17).
+    """
+    if q_allowed is None:
+        return None
+    safe = jnp.clip(ivf.row_of_slot, 0, q_allowed.shape[1] - 1)
+    return jnp.logical_and(ivf.row_of_slot >= 0,
+                           jnp.take(q_allowed, safe, axis=1))
+
+
+def _mask_excluded_rows(rows: Array, exclude_rows: Array | None) -> Array:
+    """Drop candidate rows named by a per-query exclusion list.
+
+    ``exclude_rows`` [m, E] int32 database rows, -1 padded; matching
+    candidates become -1 (the empty-slot convention ``rescore`` maps to
+    +inf / id -1).  Exactness needs the candidate width to exceed k + E —
+    callers widen ``overfetch`` (the serving layer's post-filter budget,
+    DESIGN.md §17).
+    """
+    if exclude_rows is None:
+        return rows
+    hit = jnp.any(rows[:, :, None] == exclude_rows[:, None, :], axis=2)
+    return jnp.where(hit, -1, rows)
 
 
 # ---------------------------------------------------------------------------
@@ -552,6 +626,8 @@ def ivf_query(
     threshold_skip: bool | None = None,
     db_live: Array | None = None,
     packed_q: QuantizedRows | None = None,
+    q_allowed: Array | None = None,
+    exclude_rows: Array | None = None,
 ) -> KNNResult:
     """Cell-probed kNN: centroid shortlist → pruned scan → exact rescore.
 
@@ -574,6 +650,15 @@ def ivf_query(
     replica the result is identical to ``knn_query`` (the exactness escape
     hatch, tested).  ``db_live`` is the [n] tombstone mask in ORIGINAL row
     order; it rides through the packing permutation, never retraining it.
+
+    ``q_allowed`` ([m, n] bool in ORIGINAL row order, DESIGN.md §17) is the
+    per-query filter bitmap: on jnp impls it permutes to slot order and
+    masks INSIDE the pruned scan (pre-filter — exact under the same escape
+    hatch); on ``impl="fused"`` the scalar-prefetch kernel is left
+    untouched and the bitmap drops disallowed CANDIDATES before rescore
+    instead (post-filter at scan width — widen ``overfetch`` for selective
+    filters).  ``exclude_rows`` ([m, E] int32, -1 padded) names per-query
+    rows dropped at the rescore stage on every impl.
     """
     from repro.core import ivf as IVF
 
@@ -584,6 +669,7 @@ def ivf_query(
     cells = IVF.probe_cells(queries, ivf.centroids, nprobe,
                             distance=distance, impl=impl)
     live_p = IVF.packed_live(ivf, db_live)
+    allowed_p = _packed_allowed(ivf, q_allowed)
     k_scan = scan_width(n, k, overfetch)
     if impl == "fused":
         from repro.kernels import ops as kops
@@ -594,6 +680,12 @@ def ivf_query(
             queries, ivf.packed if packed_q is None else packed_q, cells,
             min(k_scan, cap), cell_cap=cap, distance=distance,
             packed_live=live_p, threshold_skip=threshold_skip).indices
+        if allowed_p is not None:
+            # Post-filter: the scalar-prefetch kernel stays mask-free; the
+            # bitmap culls its candidate slots before the exact rescore.
+            ok = jnp.take_along_axis(
+                allowed_p, jnp.clip(cand, 0, allowed_p.shape[1] - 1), axis=1)
+            cand = jnp.where(ok, cand, -1)
     else:
         scan_q = packed_q
         if scan_q is None:
@@ -604,10 +696,11 @@ def ivf_query(
             cells[:, :, None] == jnp.arange(ncells)[None, None, :], axis=1)
         cand = quantized_scan(
             queries, scan_q, k_scan, distance=distance, db_live=live_p,
-            probed=probed, cell_cap=cap,
+            probed=probed, cell_cap=cap, q_allowed=allowed_p,
             threshold_skip=threshold_skip).indices
     safe = jnp.clip(cand, 0, ivf.row_of_slot.shape[0] - 1)
     rows = jnp.where(cand >= 0, jnp.take(ivf.row_of_slot, safe), -1)
+    rows = _mask_excluded_rows(rows, exclude_rows)
     return rescore(queries, database, rows, k, distance=distance,
                    impl="fused" if impl == "fused" else "jnp")
 
@@ -638,6 +731,8 @@ def ivfpq_query(
     threshold_skip: bool | None = None,
     db_live: Array | None = None,
     residual: bool = True,
+    q_allowed: Array | None = None,
+    exclude_rows: Array | None = None,
 ) -> KNNResult:
     """IVF-PQ kNN: centroid shortlist → ADC scan of m-byte codes → rescore.
 
@@ -658,6 +753,10 @@ def ivfpq_query(
     ``nprobe = ncells`` with ``overfetch`` spanning the corpus reproduces
     ``knn_query`` (tested).  ``db_live`` is the [n] tombstone mask in
     ORIGINAL row order, riding the packing permutation as in ``ivf_query``.
+    ``q_allowed``/``exclude_rows`` follow ``ivf_query`` exactly: per-query
+    bitmap pre-filtered inside the jnp ADC scan (post-filtered at the
+    candidate stage on ``impl="fused"``), per-query exclusion rows dropped
+    at rescore (DESIGN.md §17).
     """
     from repro.core import ivf as IVF
     from repro.core.pq import pq_cell_bias
@@ -669,6 +768,7 @@ def ivfpq_query(
     cells = IVF.probe_cells(queries, ivf.centroids, nprobe,
                             distance=distance, impl=impl)
     live_p = IVF.packed_live(ivf, db_live)
+    allowed_p = _packed_allowed(ivf, q_allowed)
     k_scan = scan_width(n, k, overfetch)
     if impl == "fused":
         from repro.kernels import ops as kops
@@ -679,6 +779,10 @@ def ivfpq_query(
             queries, pq_cb, pq_codes, cells, min(k_scan, cap), cell_cap=cap,
             centroids=ivf.centroids if residual else None, distance=distance,
             packed_live=live_p, threshold_skip=threshold_skip).indices
+        if allowed_p is not None:
+            ok = jnp.take_along_axis(
+                allowed_p, jnp.clip(cand, 0, allowed_p.shape[1] - 1), axis=1)
+            cand = jnp.where(ok, cand, -1)
     else:
         probed = jnp.any(
             cells[:, :, None] == jnp.arange(ncells)[None, None, :], axis=1)
@@ -687,8 +791,9 @@ def ivfpq_query(
         cand = quantized_scan(
             queries, pq_codes, k_scan, distance=distance, db_live=live_p,
             probed=probed, cell_cap=cap, pq_codebook=pq_cb, cell_bias=cbias,
-            threshold_skip=threshold_skip).indices
+            q_allowed=allowed_p, threshold_skip=threshold_skip).indices
     safe = jnp.clip(cand, 0, ivf.row_of_slot.shape[0] - 1)
     rows = jnp.where(cand >= 0, jnp.take(ivf.row_of_slot, safe), -1)
+    rows = _mask_excluded_rows(rows, exclude_rows)
     return rescore(queries, database, rows, k, distance=distance,
                    impl="fused" if impl == "fused" else "jnp")

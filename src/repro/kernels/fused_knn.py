@@ -39,13 +39,17 @@ from repro.kernels.stream_topk import _tile_reduce_topk
 
 
 def _kernel(K, nj, nk, bm, bn, alpha, finalize, n_real, exclude_self,
-            threshold_skip, scaled):
+            threshold_skip, scaled, masked):
     def kernel(fx_ref, gy_ref, *refs):
+        pos = 0
+        gs_ref = qm_ref = None
         if scaled:
-            gs_ref, hx_ref, hy_ref = refs[:3]
-        else:
-            gs_ref = None
-            hx_ref, hy_ref = refs[:2]
+            gs_ref = refs[pos]
+            pos += 1
+        if masked:
+            qm_ref = refs[pos]
+            pos += 1
+        hx_ref, hy_ref = refs[pos], refs[pos + 1]
         out_v_ref, out_i_ref, acc, run_v, run_i = refs[-5:]
         i, j, kd = pl.program_id(0), pl.program_id(1), pl.program_id(2)
 
@@ -77,6 +81,12 @@ def _kernel(K, nj, nk, bm, bn, alpha, finalize, n_real, exclude_self,
             if exclude_self:
                 row = jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 0) + i * bm
                 tile = jnp.where(row == col, T.POS_INF, tile)
+            if masked:
+                # Per-query filter bitmap (DESIGN.md §17) — a full [bm, bn]
+                # VMEM block, because the rank-1 hy epilogue can only carry
+                # per-ROW masks.  fp32 {0, 1} rather than i1: the mask block
+                # then shares the fp32 tiling of every other operand.
+                tile = jnp.where(qm_ref[...] != 0, tile, T.POS_INF)
 
             def merge():
                 tv, ti = _tile_reduce_topk(tile, K, j * bn)
@@ -124,6 +134,7 @@ def fused_knn_pallas(
     k: int,
     *,
     gy_scale: jnp.ndarray | None = None,
+    q_mask: jnp.ndarray | None = None,
     distance: str = "sqeuclidean",
     bm: int = 256,
     bn: int = 512,
@@ -140,6 +151,11 @@ def fused_knn_pallas(
     and ``interpret`` default to the backend policy (``None`` → skip on, and
     interpret off exactly on real TPUs) — see ``topk.resolve_threshold_skip``.
 
+    ``q_mask``: optional [m, n] fp32 per-query filter bitmap (0 = masked,
+    nonzero = allowed; DESIGN.md §17) blocked [bm, bn] alongside the
+    distance tile — disallowed entries finalize to +inf exactly like column
+    padding, so they can never enter the running top-K.
+
     Returns (values [m, K], indices [m, K]) ascending, K = next_pow2(k).
     """
     interpret = resolve_interpret(interpret)
@@ -155,6 +171,7 @@ def fused_knn_pallas(
     nj, nk = n // bn, d // bd
     grid = (m // bm, nj, nk)
     scaled = gy_scale is not None
+    masked = q_mask is not None
     in_specs = [
         pl.BlockSpec((bm, bd), lambda i, j, kd: (i, kd)),
         pl.BlockSpec((bn, bd), lambda i, j, kd: (j, kd)),
@@ -163,6 +180,10 @@ def fused_knn_pallas(
     if scaled:
         in_specs.append(pl.BlockSpec((1, bn), lambda i, j, kd: (0, j)))
         operands.append(gy_scale)
+    if masked:
+        assert q_mask.shape == (m, n), (q_mask.shape, m, n)
+        in_specs.append(pl.BlockSpec((bm, bn), lambda i, j, kd: (i, j)))
+        operands.append(q_mask)
     in_specs += [
         pl.BlockSpec((bm, 1), lambda i, j, kd: (i, 0)),
         pl.BlockSpec((1, bn), lambda i, j, kd: (0, j)),
@@ -181,6 +202,7 @@ def fused_knn_pallas(
             exclude_self,
             threshold_skip,
             scaled,
+            masked,
         ),
         grid=grid,
         in_specs=in_specs,

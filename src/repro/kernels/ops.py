@@ -152,6 +152,7 @@ def fused_knn(
     exclude_self: bool = False,
     db_valid=None,
     db_live=None,
+    q_allowed=None,
     threshold_skip: bool | None = None,
     interpret: bool | None = None,
 ):
@@ -168,6 +169,11 @@ def fused_knn(
     lets SPMD callers mask ragged shards without a per-device static shape.
     ``db_live``: optional traced bool [n] mask — False rows get +inf the same
     way (the serving index's tombstones; arbitrary pattern, same epilogue).
+    ``q_allowed``: optional traced bool [m, n] PER-QUERY filter bitmap
+    (DESIGN.md §17) — False entries get +inf inside the kernel via a
+    [bm, bn]-blocked fp32 mask operand (a per-query pattern cannot ride the
+    rank-1 ``hy`` epilogue).  Composes with both masks above; an all-True
+    bitmap is bit-identical to passing None.
     """
     from repro.core.knn import KNNResult
 
@@ -199,6 +205,12 @@ def fused_knn(
     hy = _pad_axis(hy, tile_n, 1)
     if gs is not None:
         gs = _pad_axis(gs, tile_n, 1)
+    qm = None
+    if q_allowed is not None:
+        # Pad value 0 (= masked) is safe: the column tail is already +inf via
+        # n_real and the row tail is sliced off below.
+        qm = _pad_axis(
+            _pad_axis(q_allowed.astype(jnp.float32), tile_m, 0), tile_n, 1)
     vals, idx = _fused.fused_knn_pallas(
         fx,
         gy,
@@ -206,6 +218,7 @@ def fused_knn(
         hy,
         k,
         gy_scale=gs,
+        q_mask=qm,
         distance=distance,
         bm=tile_m,
         bn=tile_n,

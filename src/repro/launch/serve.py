@@ -73,6 +73,11 @@ Flags (see README.md "CLI reference"):
   --sync-compact    disable background retrain: compact() blocks through
                     repack + IVF/PQ training + full save (the latency-cliff
                     baseline the lifecycle bench compares against)
+  --filter-mode M   filtered-search execution policy for ``recommend()``
+                    calls that carry a QueryFilter (DESIGN.md §17):
+                    "auto" (default: selectivity-driven pre/post choice) |
+                    "pre" (mask inside the scan) | "post" (widened fetch,
+                    filter after)
   --seed S
 """
 from __future__ import annotations
@@ -150,6 +155,11 @@ def main():
     ap.add_argument("--sync-compact", action="store_true",
                     help="block compact() through retrain + full save "
                          "instead of background handoff (needs --wal)")
+    ap.add_argument("--filter-mode", choices=("auto", "pre", "post"),
+                    default="auto",
+                    help="execution policy for filtered recommend() calls "
+                         "(DESIGN.md §17): auto = selectivity-driven, "
+                         "pre = mask in scan, post = widened fetch + filter")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     if args.restore and not args.snapshot_dir:
@@ -215,7 +225,8 @@ def main():
                     workers=args.workers, heartbeat_s=args.heartbeat_s,
                     queue_depth=args.queue_depth,
                     wal=args.wal, delta_budget=args.delta_budget,
-                    background_retrain=not args.sync_compact)
+                    background_retrain=not args.sync_compact,
+                    filter_mode=args.filter_mode)
     mesh = None
     if args.mesh:
         from repro.launch.mesh import make_host_mesh

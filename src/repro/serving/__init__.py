@@ -9,6 +9,9 @@ Layering (each importable on its own):
   cache.py    EmbeddingCache — LRU for repeat-query embeddings.
   service.py  TwoTowerRetrievalService — towers + index + engine + cache,
               the end-to-end recommender flow.
+  filters.py  QueryFilter — tenant isolation, allow-lists, per-user
+              exclusions, selectivity-aware pre/post execution (§17
+              Filtered & multi-tenant retrieval).
   snapshot.py versioned on-disk save/restore of the full index state —
               restart without re-embedding or retraining (§Persistence) —
               plus per-shard images (save_shards/restore_shard) and the
@@ -32,6 +35,7 @@ Layering (each importable on its own):
 """
 from repro.serving.cache import EmbeddingCache
 from repro.serving.engine import EngineConfig, QueryEngine
+from repro.serving.filters import QueryFilter
 from repro.serving.lifecycle import (
     LifecycleConfig,
     LifecycleIndex,
@@ -104,6 +108,7 @@ __all__ = [
     "MissingShardError",
     "ProcWorker",
     "QueryEngine",
+    "QueryFilter",
     "RecoveryStats",
     "RemoteWorkerError",
     "RetrievalIndex",

@@ -95,8 +95,18 @@ class QueryEngine:
     def _bucket(self, m: int) -> int:
         return min(self.cfg.max_batch, T.next_pow2(max(m, self.cfg.min_batch)))
 
-    def search(self, queries, k: int | None = None) -> SearchResult:
-        """Exact top-k for [m, d] queries, padded/chunked to engine shapes."""
+    def search(self, queries, k: int | None = None, *,
+               filter=None) -> SearchResult:
+        """Exact top-k for [m, d] queries, padded/chunked to engine shapes.
+
+        ``filter``: optional ``serving.filters.QueryFilter`` (DESIGN.md §17).
+        Per-query predicate rows (tenant tags, exclusion lists) are chunked
+        and pow2-padded in lockstep with the query rows — pad rows get
+        tenant 0 / no exclusions and their results are sliced off, so the
+        batching layer stays invariant under filtering.
+        """
+        from repro.serving import filters as F
+
         k = self.cfg.k if k is None else int(k)
         # Batch-boundary hook: a lifecycle-managed index swaps a ready
         # background epoch in HERE, never mid-batch — the shape signature
@@ -109,10 +119,12 @@ class QueryEngine:
         if len(q) == 0:  # nothing to score, nothing to meter
             return SearchResult(jnp.zeros((0, k), jnp.float32),
                                 jnp.zeros((0, k), jnp.int32))
+        f = F.normalize(filter, len(q)) if filter is not None else None
         out_v, out_i, out_c, out_s = [], [], [], []
         for s in range(0, len(q), self.cfg.max_batch):
             chunk = q[s : s + self.cfg.max_batch]
-            r = self._search_padded(chunk, k)
+            r = self._search_padded(chunk, k,
+                                    F.slice_rows(f, s, s + len(chunk)))
             out_v.append(r.distances)
             out_i.append(r.ids)
             if r.coverage is not None:
@@ -130,7 +142,10 @@ class QueryEngine:
         return SearchResult(jnp.concatenate(out_v), jnp.concatenate(out_i),
                             coverage=coverage, shard_status=status)
 
-    def _search_padded(self, chunk: np.ndarray, k: int) -> SearchResult:
+    def _search_padded(self, chunk: np.ndarray, k: int,
+                       f=None) -> SearchResult:
+        from repro.serving import filters as F
+
         m = len(chunk)
         mp = self._bucket(m)
         qp = np.zeros((mp, chunk.shape[1]), np.float32)
@@ -143,11 +158,19 @@ class QueryEngine:
             self._seen_shapes = {s for s in self._seen_shapes
                                  if s[2][0] == sig[0]}
             self._live_main = sig[0]
-        shape_key = (mp, k, sig)
+        # The filter's compiled-shape contribution: which predicates exist,
+        # the execution mode, and the exclusion width (a traced-array dim).
+        fkey = None if f is None else (f.mode, f.tenant is not None,
+                                       f.allowed_ids is not None,
+                                       F.exclusion_width(f))
+        shape_key = (mp, k, sig, fkey)
         cold = shape_key not in self._seen_shapes
         self._seen_shapes.add(shape_key)
         t0 = time.perf_counter()
-        res = self.index.search(qp, k)
+        if f is None:
+            res = self.index.search(qp, k)
+        else:
+            res = self.index.search(qp, k, filter=F.pad_rows(f, mp))
         # Block on the array legs only: coverage is host numpy and
         # shard_status is plain python — neither has device futures.
         jax.block_until_ready((res.distances, res.ids))

@@ -57,17 +57,43 @@ class SearchResult(NamedTuple):
     shard_status: tuple | None = None  # ((shard_id, "ok|skipped|failed"),...)
 
 
-@functools.partial(jax.jit, static_argnames=("k_out", "distance", "impl"))
-def _segment_candidates(q, vecs, live, ids, *, k_out, distance, impl):
+@functools.partial(jax.jit,
+                   static_argnames=("k_out", "distance", "impl", "post"))
+def _segment_candidates(q, vecs, live, ids, allowed=None, *, k_out, distance,
+                        impl, post=False):
     """Top-``k_out`` LIVE candidates of one segment, ascending, padded.
 
     Dead rows are masked to +inf inside the scorer (``db_live``), so the
     result is exact at fetch width ``k_out`` no matter how many rows are
-    tombstoned.  Returns ([m, k_out] vals, [m, k_out] external ids).
+    tombstoned.  ``allowed`` is the optional [m, n] per-query filter bitmap
+    (DESIGN.md §17): ``post=False`` pre-filters inside the scan,
+    ``post=True`` scans unfiltered and drops disallowed candidates after —
+    the caller widens ``k_out`` to keep that exact enough.  Returns
+    ([m, k_out] vals, [m, k_out] external ids).
     """
     vals, idx = knn_query(q, vecs, k_out, distance=distance, impl=impl,
-                          db_live=live)
+                          db_live=live,
+                          q_allowed=None if post else allowed)
+    if post and allowed is not None:
+        vals, idx = _drop_disallowed(vals, idx, allowed)
     return _externalize(vals, idx, ids, k_out)
+
+
+def _drop_disallowed(vals, idx, allowed):
+    """Post-filter scored candidates by the [m, n] bitmap; re-sorts.
+
+    Disallowed entries become +inf / -1 and are sorted past every survivor
+    (stable, so surviving order is preserved) — the output obeys the same
+    ascending/-1-padded contract as the scorers (DESIGN.md §17).
+    """
+    ok = jnp.take_along_axis(
+        allowed, jnp.clip(idx, 0, allowed.shape[1] - 1), axis=1)
+    ok = jnp.logical_and(ok, idx >= 0)
+    vals = jnp.where(ok, vals, T.POS_INF)
+    idx = jnp.where(ok, idx, -1)
+    order = jnp.argsort(vals, axis=1, stable=True)
+    return (jnp.take_along_axis(vals, order, axis=1),
+            jnp.take_along_axis(idx, order, axis=1))
 
 
 def _externalize(vals, idx, ids, k_out):
@@ -81,26 +107,32 @@ def _externalize(vals, idx, ids, k_out):
 
 
 @functools.partial(jax.jit, static_argnames=("k_out", "nprobe", "overfetch",
-                                             "distance", "impl"))
-def _segment_candidates_ivf(q, vecs, ivf, qrows, live, ids, *, k_out, nprobe,
-                            overfetch, distance, impl):
+                                             "distance", "impl", "post"))
+def _segment_candidates_ivf(q, vecs, ivf, qrows, live, ids, allowed=None, *,
+                            k_out, nprobe, overfetch, distance, impl,
+                            post=False):
     """Cell-probed top-``k_out`` of one segment (DESIGN.md §IVF).
 
     ``ivf`` is the segment's trained ``IVFCells`` (epoch-keyed: rebuilt at
     build/compact only); ``qrows`` the quantized replica of its PACKED rows
     (None = fp32 scan); ``live`` the tombstone mask in ORIGINAL row order —
     it rides through the packing permutation, never retraining it.
+    ``allowed``/``post`` as in ``_segment_candidates`` (DESIGN.md §17).
     """
     vals, idx = ivf_query(q, vecs, ivf, k_out, nprobe=nprobe,
                           distance=distance, impl=impl, overfetch=overfetch,
-                          db_live=live, packed_q=qrows)
+                          db_live=live, packed_q=qrows,
+                          q_allowed=None if post else allowed)
+    if post and allowed is not None:
+        vals, idx = _drop_disallowed(vals, idx, allowed)
     return _externalize(vals, idx, ids, k_out)
 
 
 @functools.partial(jax.jit, static_argnames=("k_out", "nprobe", "overfetch",
-                                             "distance", "impl"))
-def _segment_candidates_ivfpq(q, vecs, ivf, pq_cb, pq_codes, live, ids, *,
-                              k_out, nprobe, overfetch, distance, impl):
+                                             "distance", "impl", "post"))
+def _segment_candidates_ivfpq(q, vecs, ivf, pq_cb, pq_codes, live, ids,
+                              allowed=None, *, k_out, nprobe, overfetch,
+                              distance, impl, post=False):
     """IVF-PQ top-``k_out`` of one segment (DESIGN.md §PQ).
 
     ``pq_cb``/``pq_codes`` are the segment's epoch-keyed residual-PQ replica
@@ -110,14 +142,18 @@ def _segment_candidates_ivfpq(q, vecs, ivf, pq_cb, pq_codes, live, ids, *,
     """
     vals, idx = ivfpq_query(q, vecs, ivf, pq_cb, pq_codes, k_out,
                             nprobe=nprobe, distance=distance, impl=impl,
-                            overfetch=overfetch, db_live=live)
+                            overfetch=overfetch, db_live=live,
+                            q_allowed=None if post else allowed)
+    if post and allowed is not None:
+        vals, idx = _drop_disallowed(vals, idx, allowed)
     return _externalize(vals, idx, ids, k_out)
 
 
 @functools.partial(jax.jit, static_argnames=("k_out", "overfetch", "distance",
-                                             "impl"))
-def _segment_candidates_quantized(q, vecs, qrows, live, ids, *, k_out,
-                                  overfetch, distance, impl):
+                                             "impl", "post"))
+def _segment_candidates_quantized(q, vecs, qrows, live, ids, allowed=None, *,
+                                  k_out, overfetch, distance, impl,
+                                  post=False):
     """Two-stage top-``k_out`` of one segment: quantized scan + exact rescore.
 
     Stage 1 scans the segment's low-precision replica (``qrows``, tombstones
@@ -126,7 +162,10 @@ def _segment_candidates_quantized(q, vecs, qrows, live, ids, *, k_out,
     Returns ([m, k_out] exact vals, [m, k_out] external ids).
     """
     vals, idx = two_stage_query(q, vecs, qrows, k_out, distance=distance,
-                                impl=impl, overfetch=overfetch, db_live=live)
+                                impl=impl, overfetch=overfetch, db_live=live,
+                                q_allowed=None if post else allowed)
+    if post and allowed is not None:
+        vals, idx = _drop_disallowed(vals, idx, allowed)
     return _externalize(vals, idx, ids, k_out)
 
 
@@ -135,6 +174,26 @@ def _merge_candidates(av, ai, bv, bi, *, k):
     """Merge two ascending equal-width candidate sets, keep k smallest."""
     mv, mi = T.merge_topk_sorted(av, ai, bv, bi)
     return T.finalize_topk(mv, mi, k)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _finalize_filtered(vals, ids, exclude_ids, *, k):
+    """Apply per-query EXTERNAL-id exclusions and cut to width ``k``.
+
+    ``exclude_ids`` [m, E] int32, -1 padded (None = no exclusions).  The
+    candidate width arriving here is >= k + E (``_search_filtered`` widens
+    the fetch), so masking E rows still leaves k exact survivors
+    (DESIGN.md §17).  Same stable re-sort contract as ``_drop_disallowed``.
+    """
+    if exclude_ids is not None:
+        hit = jnp.any(ids[:, :, None] == exclude_ids[:, None, :], axis=2)
+        hit = jnp.logical_and(hit, ids >= 0)
+        vals = jnp.where(hit, T.POS_INF, vals)
+        ids = jnp.where(hit, -1, ids)
+        order = jnp.argsort(vals, axis=1, stable=True)
+        vals = jnp.take_along_axis(vals, order, axis=1)
+        ids = jnp.take_along_axis(ids, order, axis=1)
+    return vals[:, :k], ids[:, :k]
 
 
 class RetrievalIndex:
@@ -218,9 +277,14 @@ class RetrievalIndex:
         self._main_vecs = np.zeros((0, dim), np.float32)
         self._main_ids = np.zeros((0,), np.int32)
         self._main_live = np.zeros((0,), bool)
+        # Per-row namespace tags (DESIGN.md §17): int32, default tenant 0.
+        # Data, not config — they ride mutations/compaction/snapshots next to
+        # ids and never key a recompile.
+        self._main_tenant = np.zeros((0,), np.int32)
         self._delta_vecs = np.zeros((0, dim), np.float32)
         self._delta_ids = np.zeros((0,), np.int32)
         self._delta_live = np.zeros((0,), bool)
+        self._delta_tenant = np.zeros((0,), np.int32)
         self._delta_n = 0  # write head; rows past it are dead capacity
         self._loc: dict[int, tuple[str, int]] = {}  # id -> (segment, row)
         # Per-segment versions: a delta append must not re-upload the
@@ -238,14 +302,19 @@ class RetrievalIndex:
     # -- construction -------------------------------------------------------
 
     @classmethod
-    def build(cls, ids, vectors, **kw) -> "RetrievalIndex":
-        """Pack (ids, vectors) straight into the main segment."""
+    def build(cls, ids, vectors, *, tenants=None, **kw) -> "RetrievalIndex":
+        """Pack (ids, vectors) straight into the main segment.
+
+        ``tenants``: optional per-row int32 namespace tags (DESIGN.md §17);
+        None tags every row tenant 0 — the untenanted default.
+        """
         vectors = np.asarray(vectors, np.float32)
         idx = cls(vectors.shape[1], **kw)
         ids = idx._check_ids(ids, vectors)
         idx._main_vecs = np.ascontiguousarray(vectors)
         idx._main_ids = ids.copy()
         idx._main_live = np.ones(len(ids), bool)
+        idx._main_tenant = idx._check_tenants(tenants, len(ids))
         idx._loc = {int(i): ("main", r) for r, i in enumerate(ids)}
         idx._bump("main")
         idx._main_epoch += 1
@@ -294,6 +363,16 @@ class RetrievalIndex:
         assert len(np.unique(ids)) == len(ids), "duplicate ids in one call"
         return ids.astype(np.int32)
 
+    @staticmethod
+    def _check_tenants(tenants, n: int) -> np.ndarray:
+        if tenants is None:
+            return np.zeros((n,), np.int32)
+        tenants = np.asarray(tenants, np.int64)
+        assert tenants.shape == (n,), (tenants.shape, n)
+        assert (tenants >= 0).all() and (tenants < 2**31).all(), \
+            "tenant tags must fit int32"
+        return tenants.astype(np.int32)
+
     # -- introspection ------------------------------------------------------
 
     def __len__(self) -> int:
@@ -315,22 +394,22 @@ class RetrievalIndex:
 
     # -- mutation -----------------------------------------------------------
 
-    def insert(self, ids, vectors) -> None:
+    def insert(self, ids, vectors, *, tenants=None) -> None:
         """Append new rows; error on an id that already exists (use upsert)."""
         vectors = np.asarray(vectors, np.float32)
         ids = self._check_ids(ids, vectors)
         for i in ids:
             if int(i) in self._loc:
                 raise KeyError(f"id {int(i)} already indexed (use upsert)")
-        self._append_delta(ids, vectors)
+        self._append_delta(ids, vectors, self._check_tenants(tenants, len(ids)))
 
-    def upsert(self, ids, vectors) -> None:
+    def upsert(self, ids, vectors, *, tenants=None) -> None:
         """Insert-or-replace: an existing id is tombstoned, then re-appended."""
         vectors = np.asarray(vectors, np.float32)
         ids = self._check_ids(ids, vectors)
         for i in ids:
             self._tombstone(int(i), missing_ok=True)
-        self._append_delta(ids, vectors)
+        self._append_delta(ids, vectors, self._check_tenants(tenants, len(ids)))
 
     def delete(self, ids) -> int:
         """Tombstone ids; returns how many existed."""
@@ -350,14 +429,17 @@ class RetrievalIndex:
         self._bump(seg)
         return 1
 
-    def _append_delta(self, ids: np.ndarray, vectors: np.ndarray) -> None:
+    def _append_delta(self, ids: np.ndarray, vectors: np.ndarray,
+                      tenants: np.ndarray | None = None) -> None:
+        if tenants is None:
+            tenants = np.zeros((len(ids),), np.int32)
         need = self._delta_n + len(ids)
         if need > len(self._delta_vecs):
             cap = max(_MIN_DELTA_CAP, T.next_pow2(need))
             grown = np.zeros((cap, self.dim), np.float32)
             grown[: self._delta_n] = self._delta_vecs[: self._delta_n]
             self._delta_vecs = grown
-            for name in ("_delta_ids", "_delta_live"):
+            for name in ("_delta_ids", "_delta_live", "_delta_tenant"):
                 old = getattr(self, name)
                 fresh = np.zeros((cap,), old.dtype)
                 fresh[: self._delta_n] = old[: self._delta_n]
@@ -366,6 +448,7 @@ class RetrievalIndex:
         self._delta_vecs[r0 : r0 + len(ids)] = vectors
         self._delta_ids[r0 : r0 + len(ids)] = ids
         self._delta_live[r0 : r0 + len(ids)] = True
+        self._delta_tenant[r0 : r0 + len(ids)] = tenants
         for off, i in enumerate(ids):
             self._loc[int(i)] = ("delta", r0 + off)
         self._delta_n = r0 + len(ids)
@@ -387,6 +470,14 @@ class RetrievalIndex:
         ids = np.concatenate([i[m] for _, i, m in segs], axis=0)
         return np.ascontiguousarray(vecs), ids
 
+    def _live_tenants(self) -> np.ndarray:
+        """Live tenant tags in the exact ``_live_rows`` order (DESIGN.md §17)."""
+        return np.concatenate([
+            self._main_tenant[self._main_live],
+            self._delta_tenant[: self._delta_n][
+                self._delta_live[: self._delta_n]],
+        ])
+
     def config_kwargs(self) -> dict:
         """Constructor kwargs reproducing this index's search config.
 
@@ -406,12 +497,15 @@ class RetrievalIndex:
         re-shard point (the new main is re-split over ``db_axis``).
         """
         vecs, ids = self._live_rows()
+        tenants = self._live_tenants()
         self._main_vecs = vecs
         self._main_ids = ids
         self._main_live = np.ones(len(ids), bool)
+        self._main_tenant = tenants
         self._delta_vecs = np.zeros((0, self.dim), np.float32)
         self._delta_ids = np.zeros((0,), np.int32)
         self._delta_live = np.zeros((0,), bool)
+        self._delta_tenant = np.zeros((0,), np.int32)
         self._delta_n = 0
         self._loc = {int(i): ("main", r) for r, i in enumerate(ids)}
         self._bump("main")
@@ -556,16 +650,27 @@ class RetrievalIndex:
                 len(self._delta_vecs) if self._delta_n else 0,
                 packed)
 
-    def search(self, queries, k: int) -> SearchResult:
+    def search(self, queries, k: int, *, filter=None) -> SearchResult:
         """Exact k nearest live rows for each query row.
 
         Result width is exactly ``k``; rows beyond the live count carry
         +inf distance and id -1 (same convention as ``core.knn``).
+
+        ``filter``: optional ``serving.filters.QueryFilter`` (DESIGN.md §17)
+        — tenant isolation, allow-lists, per-query exclusions.  A None or
+        trivially-true filter takes this exact code path (bit-identical to
+        unfiltered search, pinned by tests/test_filters.py).
         """
         q = jnp.asarray(queries, jnp.float32)
         assert q.ndim == 2 and q.shape[1] == self.dim, q.shape
         k = int(k)
         assert k >= 1
+        if filter is not None:
+            from repro.serving import filters as F
+
+            f = F.normalize(filter, q.shape[0])
+            if f is not None:
+                return self._search_filtered(q, k, f)
         k_out = T.next_pow2(k)
         dev = self._device_state()
 
@@ -588,37 +693,135 @@ class RetrievalIndex:
         vals, ids = _merge_candidates(av, ai, bv, bi, k=k)
         return SearchResult(vals, ids)
 
+    # -- filtered search (DESIGN.md §17) -------------------------------------
+
+    def _search_filtered(self, q, k: int, f) -> SearchResult:
+        """Search under a canonical (non-trivial) ``QueryFilter``.
+
+        Strategy: measure the filter's live selectivity ``s`` exactly on the
+        host (cheap numpy counts — it drives a static compile-key choice),
+        resolve ``mode`` ("auto" → pre when s < 0.5), and set the fetch
+        width: always widened by the exclusion width E (so dropping E seen
+        rows still leaves k exact survivors), and in post mode additionally
+        by ~1/s (clamped, ``filters.widen``).  Row predicates become
+        per-segment [m, n] bitmaps applied pre (inside the scan) or post
+        (``_drop_disallowed``); exclusions are applied once, by EXTERNAL id,
+        on the merged candidate set — uniform across scan families and the
+        same mechanism the shard router uses (DESIGN.md §17).
+
+        The mesh path always post-filters: the shard_map scorers take no
+        per-query bitmap operand, but they return row-space indices before
+        externalization, which is exactly the post-filter hook.
+        """
+        from repro.serving import filters as F
+
+        m = q.shape[0]
+        dev = self._device_state()
+        E = F.exclusion_width(f)
+        s = F.selectivity(
+            f,
+            live=np.concatenate([self._main_live,
+                                 self._delta_live[: self._delta_n]]),
+            ids=np.concatenate([self._main_ids,
+                                self._delta_ids[: self._delta_n]]),
+            tenants=np.concatenate([self._main_tenant,
+                                    self._delta_tenant[: self._delta_n]]))
+        mode = F.resolve_mode(f.mode, s)
+        if self.mesh is not None:
+            mode = "post"
+        k_fetch = k + E
+        if mode == "post":
+            k_fetch = max(k_fetch, F.widen(k, s) + E)
+        if self._use_ivf() and self.impl == "fused" and len(self._main_vecs):
+            # The scalar-prefetch kernels bound the fetch width by the cell
+            # block; clamp the widening rather than trip their assert.
+            k_fetch = max(k, min(k_fetch, int(dev["main_ivf"].cell_cap)))
+        k_out = T.next_pow2(k_fetch)
+
+        sets = []
+        if len(self._main_vecs):
+            allowed = self._allowed_bitmap("main", f, m)
+            sets.append(self._main_candidates(q, k_out, dev, allowed=allowed,
+                                              post=(mode == "post")))
+        if self._delta_n:
+            vecs, live, ids = dev["delta"]
+            # The delta is small by construction: pre-filter its flat scan
+            # regardless of mode (the bitmap operand costs nothing here).
+            sets.append(_segment_candidates(
+                q, vecs, live, ids, self._allowed_bitmap("delta", f, m),
+                k_out=k_out, distance=self.distance, impl=self.impl))
+        if not sets:
+            return SearchResult(jnp.full((m, k), T.POS_INF, jnp.float32),
+                                jnp.full((m, k), -1, jnp.int32))
+        if len(sets) == 1:
+            vals, ids_out = sets[0]
+        else:
+            (av, ai), (bv, bi) = sets
+            vals, ids_out = T.merge_topk_sorted(av, ai, bv, bi)
+        ex = None if f.exclude_ids is None else jnp.asarray(f.exclude_ids)
+        vals, ids_out = _finalize_filtered(vals, ids_out, ex, k=k)
+        return SearchResult(vals, ids_out)
+
+    def _allowed_bitmap(self, seg: str, f, m: int):
+        """[m, n_seg] bool row-predicate bitmap on device; None if all-true.
+
+        Combines the batch-wide allow-list (host ``np.isin`` on external
+        ids, broadcast over queries) with the per-query tenant equality
+        (device compare against the version-keyed tenant column).  Dead and
+        capacity rows may come out True — the live mask already kills them.
+        """
+        if f.tenant is None and f.allowed_ids is None:
+            return None
+        ids, tenants = {
+            "main": (self._main_ids, self._main_tenant),
+            "delta": (self._delta_ids, self._delta_tenant),
+        }[seg]
+        n = len(ids)
+        ok = None
+        if f.allowed_ids is not None:
+            ok = jnp.broadcast_to(
+                jnp.asarray(np.isin(ids, f.allowed_ids))[None, :], (m, n))
+        if f.tenant is not None:
+            key = seg + "_tenant"
+            if self._dev_version.get(key) != self._version[seg]:
+                self._dev[key] = jnp.asarray(tenants)
+                self._dev_version[key] = self._version[seg]
+            t_ok = self._dev[key][None, :] == jnp.asarray(f.tenant)[:, None]
+            ok = t_ok if ok is None else jnp.logical_and(ok, t_ok)
+        return ok
+
     # -- main-segment scoring (local or query-sharded) ----------------------
 
-    def _main_candidates(self, q, k_out, dev):
+    def _main_candidates(self, q, k_out, dev, allowed=None, post=False):
         vecs, live, ids = dev["main"]
         if self.mesh is not None:
-            return self._main_candidates_sharded(q, k_out, dev)
+            return self._main_candidates_sharded(q, k_out, dev,
+                                                 allowed=allowed)
         if self._use_pq():
             ivf = dev["main_ivf"]
             pq_cb, pq_codes = dev["main_pq"]
             return _segment_candidates_ivfpq(
-                q, vecs, ivf, pq_cb, pq_codes, live, ids, k_out=k_out,
-                nprobe=self.effective_nprobe(),
+                q, vecs, ivf, pq_cb, pq_codes, live, ids, allowed,
+                k_out=k_out, nprobe=self.effective_nprobe(),
                 overfetch=self.overfetch, distance=self.distance,
-                impl=self.impl)
+                impl=self.impl, post=post)
         if self._use_ivf():
             ivf = dev["main_ivf"]
             return _segment_candidates_ivf(
-                q, vecs, ivf, dev["main_ivf_q"], live, ids, k_out=k_out,
-                nprobe=self.effective_nprobe(),
+                q, vecs, ivf, dev["main_ivf_q"], live, ids, allowed,
+                k_out=k_out, nprobe=self.effective_nprobe(),
                 overfetch=self.overfetch, distance=self.distance,
-                impl=self.impl)
+                impl=self.impl, post=post)
         if self.scan_dtype != "float32":
             return _segment_candidates_quantized(
-                q, vecs, dev["main_q"], live, ids, k_out=k_out,
+                q, vecs, dev["main_q"], live, ids, allowed, k_out=k_out,
                 overfetch=self.overfetch, distance=self.distance,
-                impl=self.impl)
+                impl=self.impl, post=post)
         return _segment_candidates(
-            q, vecs, live, ids, k_out=k_out,
-            distance=self.distance, impl=self.impl)
+            q, vecs, live, ids, allowed, k_out=k_out,
+            distance=self.distance, impl=self.impl, post=post)
 
-    def _main_candidates_sharded(self, q, k_out, dev):
+    def _main_candidates_sharded(self, q, k_out, dev, allowed=None):
         """Score main over the mesh: the paper's serving path + tombstones.
 
         The tombstone mask shards over ``db_axis`` next to the database, so
@@ -629,13 +832,19 @@ class RetrievalIndex:
         rescore on its slice of the cached padded replica, and the butterfly
         merge's value payload travels bf16 (``wire_dtype``) — the wire cost
         shrinks with the scan (DESIGN.md §Quantized).
+
+        ``allowed`` ([m, n] bitmap, DESIGN.md §17) is always POST-filtered
+        on mesh paths: the shard_map scorers take no per-query bitmap
+        operand, but they hand back row-space indices right before
+        externalization — exactly the post-filter hook
+        (``_search_filtered`` widens ``k_out`` accordingly).
         """
         from repro.core import distributed as KD
 
         if self._use_pq():
-            return self._main_candidates_sharded_ivfpq(q, k_out, dev)
+            return self._main_candidates_sharded_ivfpq(q, k_out, dev, allowed)
         if self._use_ivf():
-            return self._main_candidates_sharded_ivf(q, k_out, dev)
+            return self._main_candidates_sharded_ivf(q, k_out, dev, allowed)
         quant = self.scan_dtype != "float32"
         _, _, ids = dev["main"]
         P_db = int(self.mesh.shape[self.db_axis])
@@ -679,9 +888,11 @@ class RetrievalIndex:
         qp = jnp.pad(q, ((0, m_pad - m), (0, 0)))
         vals, idx = fn(qp, db, n, live_p, db_q)
         vals, idx = vals[:m], idx[:m]
+        if allowed is not None:
+            vals, idx = _drop_disallowed(vals, idx, allowed)
         return _externalize(vals, idx, ids, k_out)
 
-    def _main_candidates_sharded_ivf(self, q, k_out, dev):
+    def _main_candidates_sharded_ivf(self, q, k_out, dev, allowed=None):
         """Mesh + IVF: cell blocks row-sharded, centroids replicated.
 
         The epoch-keyed IVF structure already rounds ``ncells`` to a
@@ -720,9 +931,11 @@ class RetrievalIndex:
         vals, idx = fn(qp, ivf.centroids, ivf.packed, ivf.row_of_slot,
                        self._dev["main_ivf_live"], dev["main_ivf_q"])
         vals, idx = vals[:m], idx[:m]
+        if allowed is not None:
+            vals, idx = _drop_disallowed(vals, idx, allowed)
         return _externalize(vals, idx, ids, k_out)
 
-    def _main_candidates_sharded_ivfpq(self, q, k_out, dev):
+    def _main_candidates_sharded_ivfpq(self, q, k_out, dev, allowed=None):
         """Mesh + IVF-PQ: code blocks row-sharded, codebook replicated.
 
         Identical sharding story to ``_main_candidates_sharded_ivf`` —
@@ -760,4 +973,6 @@ class RetrievalIndex:
         vals, idx = fn(qp, ivf.centroids, pq_cb, pq_codes, ivf.packed,
                        ivf.row_of_slot, self._dev["main_ivf_live"])
         vals, idx = vals[:m], idx[:m]
+        if allowed is not None:
+            vals, idx = _drop_disallowed(vals, idx, allowed)
         return _externalize(vals, idx, ids, k_out)

@@ -397,6 +397,7 @@ class LifecycleIndex:
             self._finish_handoff()  # at most one epoch in flight
         idx = self._idx
         vecs, ids = idx._live_rows()
+        tenants = idx._live_tenants()
         epoch = idx._main_epoch + 1
         next_dir = self.cfg.snapshot_dir.rstrip("/") + f".next-{os.getpid()}"
         if os.path.exists(next_dir):
@@ -404,7 +405,7 @@ class LifecycleIndex:
         pend = _Pending(thread=None, epoch=epoch,
                         cut_offset=self._wal.tell(), next_dir=next_dir)
         pend.thread = threading.Thread(
-            target=self._train, args=(vecs, ids, pend),
+            target=self._train, args=(vecs, ids, tenants, pend),
             name=f"lifecycle-train-{epoch}", daemon=True)
         self._pending = pend
         pend.thread.start()
@@ -422,7 +423,7 @@ class LifecycleIndex:
         return True
 
     def _train(self, vecs: np.ndarray, ids: np.ndarray,
-               pend: _Pending) -> None:
+               tenants: np.ndarray, pend: _Pending) -> None:
         """Worker: build + train + image epoch N+1 (runs in ``pend.thread``).
 
         The new epoch number is installed BEFORE ``_device_state`` so Lloyd
@@ -438,6 +439,7 @@ class LifecycleIndex:
                 new._main_vecs = vecs
                 new._main_ids = ids.astype(np.int32)
                 new._main_live = np.ones(len(ids), bool)
+                new._main_tenant = tenants.astype(np.int32)
                 new._loc = {int(i): ("main", r) for r, i in enumerate(ids)}
                 new._bump("main")
             new._main_epoch = pend.epoch

@@ -81,6 +81,11 @@ class ServiceConfig:
     wal: bool = False
     delta_budget: int = 0
     background_retrain: bool = True
+    # Filtered retrieval (DESIGN.md §17): execution strategy for queries that
+    # carry a QueryFilter — "auto" measures live selectivity and picks,
+    # "pre" always masks inside the scan, "post" always drops candidates at
+    # a widened fetch.  Unfiltered queries are untouched by this knob.
+    filter_mode: str = "auto"
 
 
 class TwoTowerRetrievalService:
@@ -442,15 +447,33 @@ class TwoTowerRetrievalService:
                 cached[int(user_keys[i])] = row
         return np.stack([cached[int(key)] for key in user_keys])
 
-    def recommend(self, user_keys, user_fields, k: int | None = None):
-        """Top-k items per user: (item_ids [m,k], scores [m,k] descending)."""
+    def recommend(self, user_keys, user_fields, k: int | None = None, *,
+                  exclude_ids=None, tenant=None, allowed_ids=None):
+        """Top-k items per user: (item_ids [m,k], scores [m,k] descending).
+
+        ``exclude_ids``: per-user seen-item lists (ragged or [m, E] with -1
+        padding) — excluded items never appear in that user's results;
+        ``tenant``: namespace tag (scalar or per-user) restricting results
+        to same-tenant items; ``allowed_ids``: batch-wide catalog
+        allow-list.  All three build a ``serving.filters.QueryFilter`` under
+        ``ServiceConfig.filter_mode`` (DESIGN.md §17); all-None is the
+        unfiltered fast path, bit-identical to not passing them.
+        """
         import time
 
+        filt = None
+        if exclude_ids is not None or tenant is not None \
+                or allowed_ids is not None:
+            from repro.serving.filters import QueryFilter
+
+            filt = QueryFilter(tenant=tenant, allowed_ids=allowed_ids,
+                               exclude_ids=exclude_ids,
+                               mode=self.svc.filter_mode)
         t0 = time.perf_counter()
         n_cold0 = self.meter.summary()["compile_batches"]
         self._last_embed_cold = False  # set by _embed iff misses were embedded
         u = self.embed_users(user_keys, user_fields)
-        res = self.engine.search(u, k)
+        res = self.engine.search(u, k, filter=filt)
         cold = (self.meter.summary()["compile_batches"] > n_cold0
                 or self._last_embed_cold)
         self.e2e_meter.record(len(u), time.perf_counter() - t0,

@@ -249,20 +249,34 @@ class ShardWorker:
         return int(np.asarray(jnp.sum(self.live)))
 
     def topk(self, queries, k: int, *, nprobe: int | None = None,
-             overfetch: int | None = None) -> KNNResult:
+             overfetch: int | None = None,
+             allowed_ids=None) -> KNNResult:
         """Sorted ascending [m, next_pow2(k)] local top-k (values, ext ids).
 
         ``nprobe``/``overfetch`` default to the parent config and stay
         query-time tunable (they change fetch width, not stored state) —
         the bit-identity test drives both to their exhaustive settings.
+
+        ``allowed_ids``: optional batch-wide EXTERNAL-id allow-list
+        (DESIGN.md §17).  Applied as a pre-filter: disallowed slots are
+        folded into the tombstone mask before the scan, so they die through
+        the same hy epilogue as deletes — bit-matching the single-host
+        pre-filter path.  The allow-list is batch-uniform by contract
+        (per-query predicates stay a single-host feature), which is what
+        lets it fold into ``db_live`` instead of a per-query bitmap.
         """
         q = jnp.asarray(queries, jnp.float32)
         nprobe = self.config["nprobe"] if nprobe is None else int(nprobe)
         nprobe = min(nprobe, int(self.centroids.shape[0]))
         overfetch = (self.config["overfetch"] if overfetch is None
                      else int(overfetch))
+        live = self.live
+        if allowed_ids is not None:
+            ok = np.isin(np.asarray(self.ids_of_slot),
+                         np.asarray(allowed_ids))
+            live = jnp.asarray(np.asarray(self.live) & ok)
         vals, ids = _shard_topk(
-            q, self.centroids, self.packed, self.ids_of_slot, self.live,
+            q, self.centroids, self.packed, self.ids_of_slot, live,
             self._scan_rep, self.pq_cb, k=int(k), nprobe=nprobe,
             overfetch=overfetch, cell_lo=self.spec.cell_lo,
             cell_cap=self.cell_cap, distance=self.config["distance"],
@@ -559,8 +573,8 @@ class ShardRouter:
                              (j - rot) % n, widx))
         return [widx for *_, widx in sorted(admitted)]
 
-    def _dispatch(self, gid: int, q, k: int, m: int,
-                  K: int) -> tuple[KNNResult | None, list[Attempt]]:
+    def _dispatch(self, gid: int, q, k: int, m: int, K: int,
+                  allowed=None) -> tuple[KNNResult | None, list[Attempt]]:
         """One group's failover call: ordered replicas through the
         deadline/retry wrapper, replies validated before acceptance."""
         candidates = []
@@ -570,7 +584,8 @@ class ShardRouter:
             def thunk(w=w):
                 self._outstanding[w.key] += 1
                 try:
-                    return validate_run(w.topk(q, k), m, K)
+                    return validate_run(w.topk(q, k, allowed_ids=allowed),
+                                        m, K)
                 finally:
                     self._outstanding[w.key] -= 1
 
@@ -587,7 +602,7 @@ class ShardRouter:
 
     # -- search -------------------------------------------------------------
 
-    def search(self, queries, k: int) -> SearchResult:
+    def search(self, queries, k: int, *, filter=None) -> SearchResult:
         """Routed top-k: probe → failover dispatch → butterfly merge.
 
         Dispatch is batch-granular: a replica group runs iff ANY query in
@@ -596,10 +611,43 @@ class ShardRouter:
         depends on the dispatch pattern.  Failover inside a group is
         bit-invisible (replicas serve identical data); a group that fails
         outright follows the ``degraded`` policy.
+
+        ``filter``: optional ``serving.filters.QueryFilter`` (DESIGN.md
+        §17).  Allow-lists pre-filter inside every worker (folded into the
+        tombstone mask, matching the single-host pre path); exclusion
+        lists widen every shard's fetch by E and apply ONCE by external id
+        after the butterfly merge — the wire protocol never changes, so
+        filtered queries work unmodified over the proc backend.  Tenant
+        predicates are refused: shard images carry no per-row tenant tags
+        (run tenant-isolated fleets per tenant instead).
         """
+        from repro.serving import filters as F
+        from repro.serving.index import _finalize_filtered
+
         q = jnp.asarray(queries, jnp.float32)
         m = q.shape[0]
-        K = T.next_pow2(k)
+        f = F.normalize(filter, int(m)) if filter is not None else None
+        if f is not None and f.tenant is not None:
+            raise NotImplementedError(
+                "ShardRouter does not support tenant filters: shard images "
+                "carry no per-row tenant tags (DESIGN.md §17) — serve one "
+                "fleet per tenant, or use a single-host RetrievalIndex")
+        allowed = None if f is None else f.allowed_ids
+        if allowed is not None:
+            # Fail fast instead of burning every replica's retry budget on a
+            # transport that cannot carry the allow-list (proc workers).
+            no = [w.key for w in self.workers
+                  if not getattr(w, "supports_allow_filter", True)]
+            if no:
+                raise NotImplementedError(
+                    f"allow-list filters are not supported by worker(s) "
+                    f"{no} (proc transport carries no allow-list payload); "
+                    f"use the inproc backend or exclusion-only filters")
+        # Exclusions widen the per-shard fetch so dropping E merged
+        # candidates still leaves k survivors — same additive-widening
+        # contract as the single-host path.
+        k_w = int(k) + (0 if f is None else F.exclusion_width(f))
+        K = T.next_pow2(k_w)
         self.health.tick()
         if self.supervisor is not None:
             # Crash-detect + heartbeat + respawn BEFORE dispatch: a worker
@@ -622,7 +670,8 @@ class ShardRouter:
                 runs_v.append(inf_v)
                 runs_i.append(inf_i)
                 continue
-            r, attempts = self._dispatch(g, q, int(k), int(m), K)
+            r, attempts = self._dispatch(g, q, k_w, int(m), K,
+                                         allowed=allowed)
             if r is None:
                 status.append("failed")
                 failed[g] = attempts
@@ -652,8 +701,13 @@ class ShardRouter:
         if failed:
             served &= ~np.isin(gid, list(failed))
         coverage = served.mean(axis=1).astype(np.float32)
-        vals, ids = aggregate_topk(jnp.stack(runs_v), jnp.stack(runs_i), k,
+        vals, ids = aggregate_topk(jnp.stack(runs_v), jnp.stack(runs_i), k_w,
                                    wire_dtype=self.wire_dtype)
+        if f is not None and f.exclude_ids is not None:
+            vals, ids = _finalize_filtered(
+                vals, ids, jnp.asarray(f.exclude_ids), k=int(k))
+        elif k_w != int(k):
+            vals, ids = vals[:, :k], ids[:, :k]
         shard_status = tuple(
             (int(self.workers[g[0]].spec.shard_id), status[i])
             for i, g in enumerate(self.groups))

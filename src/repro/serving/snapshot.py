@@ -243,8 +243,11 @@ def save_index(idx, directory: str, *, include_replicas: bool = True,
     os.makedirs(tmp)
     files: dict[str, dict] = {}
 
+    # "tenant" is optional on disk (DESIGN.md §17): pre-tenant snapshots
+    # lack it and restore as all-tenant-0, the exact pre-tenant semantics.
     _npz_atomic(os.path.join(tmp, _MAIN), {
         "vecs": idx._main_vecs, "ids": idx._main_ids, "live": idx._main_live,
+        "tenant": idx._main_tenant,
     })
     files[_MAIN] = _file_stamp(os.path.join(tmp, _MAIN))
 
@@ -260,6 +263,7 @@ def save_index(idx, directory: str, *, include_replicas: bool = True,
             write_record(f, b"ADD\0", {
                 "ids": idx._delta_ids[:n], "vecs": idx._delta_vecs[:n],
                 "live": idx._delta_live[:n],
+                "tenant": idx._delta_tenant[:n],
             })
     files[_JOURNAL] = _file_stamp(os.path.join(tmp, _JOURNAL))
 
@@ -409,7 +413,12 @@ def replay_record(idx, tag: bytes, rec: dict) -> None:
         _expect(live.shape == (len(rids),),
                 f"journal live-mask shape {live.shape} != ({len(rids)},)")
         r0 = idx._delta_n
-        idx._append_delta(rids, rec["vecs"].astype(np.float32))
+        # Optional tenant column (DESIGN.md §17): records written before
+        # tenant tags existed — and WAL records, which stay tenant-0 by
+        # documented limitation — replay with the default tenant.
+        ten = rec.get("tenant")
+        idx._append_delta(rids, rec["vecs"].astype(np.float32),
+                          None if ten is None else ten.astype(np.int32))
         if not live.all():
             # Rows dead at record time flip in one slice write; an id is
             # dropped from `_loc` only while it still points at its dead row
@@ -471,16 +480,23 @@ def restore_index(directory: str, *, mesh=None, db_axis: str = "model",
 
     with np.load(os.path.join(directory, _MAIN)) as z:
         vecs, ids, live = z["vecs"], z["ids"], z["live"]
+        # Optional column: snapshots from before tenant tags restore as
+        # all-tenant-0, which IS their pre-tenant semantics (DESIGN.md §17).
+        tenant = (z["tenant"] if "tenant" in z.files
+                  else np.zeros(len(ids), np.int32))
     _expect(vecs.shape == (len(ids), dim) and vecs.dtype == np.float32,
             f"main segment shape/dtype mismatch: {vecs.shape} {vecs.dtype} "
             f"vs dim={dim}")
     _expect(live.shape == (len(ids),) and live.dtype == bool,
             f"main live-mask mismatch: {live.shape} {live.dtype}")
+    _expect(tenant.shape == (len(ids),),
+            f"main tenant column shape {tenant.shape} != ({len(ids)},)")
     _expect(len(ids) == manifest["rows"]["main"],
             f"main rows {len(ids)} != manifest {manifest['rows']['main']}")
     idx._main_vecs = np.ascontiguousarray(vecs)
     idx._main_ids = ids.astype(np.int32)
     idx._main_live = live.copy()
+    idx._main_tenant = tenant.astype(np.int32)
     idx._loc = {int(i): ("main", r) for r, i in enumerate(ids) if live[r]}
     idx._bump("main")
     # Resume the epoch counter, not restart it: the epoch keys every derived

@@ -99,6 +99,10 @@ class ProcWorker:
     failover wrapper already understands.
     """
 
+    # v1 QUERY frames carry no allow-list payload; the router checks this
+    # flag and refuses allow-list filters before dispatch (DESIGN.md §17).
+    supports_allow_filter = False
+
     def __init__(self, shard_dir: str, *, replica: int, n_replicas: int,
                  supervisor: "WorkerSupervisor"):
         import jax.numpy as jnp
@@ -193,7 +197,7 @@ class ProcWorker:
         self._pending = max(0, self._pending - 1)
 
     def topk(self, queries, k: int, *, nprobe: int | None = None,
-             overfetch: int | None = None):
+             overfetch: int | None = None, allowed_ids=None):
         """One QUERY/RESULT exchange; same signature as ``ShardWorker.topk``.
 
         Raises ``WorkerCrashedError`` (dead process / broken pipe),
@@ -202,11 +206,22 @@ class ProcWorker:
         the worker's own typed exception rebuilt from its ERROR frame —
         all of which the router's failover wrapper counts as this
         worker's failure and routes around.
+
+        ``allowed_ids`` is refused: the v1 QUERY frame carries no
+        allow-list payload.  Exclusion-only filters never reach workers
+        (the router applies them post-merge), so those work unmodified
+        over this transport (DESIGN.md §17).
         """
         import jax.numpy as jnp
 
         from repro.core.knn import KNNResult
 
+        if allowed_ids is not None:
+            raise NotImplementedError(
+                f"{self.key}: allow-list filters are not supported over the "
+                f"proc worker transport (v1 QUERY frames carry no "
+                f"allow-list); use the inproc backend, or exclusion-only "
+                f"filters (DESIGN.md §17)")
         if self._sock is None or self._dead:
             raise T.WorkerCrashedError(f"{self.key}: worker process is down")
         if self._pending >= self.queue_depth:

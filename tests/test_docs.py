@@ -1,0 +1,138 @@
+"""Docs-consistency: every section citation resolves to a real heading.
+
+DESIGN.md says "section numbers are load-bearing: docstrings across src/
+cite sections of this file by number or by name" — this test ENFORCES that.
+It extracts every citation of the forms
+
+    DESIGN.md <sec>5          EXPERIMENTS.md <sec>Perf
+    DESIGN.md <sec>IVF        DESIGN.md "hardware adaptation"
+
+(plus bare ``<sec>N`` / ``<sec>Name`` tokens inside the markdown files and
+code comments) from all Python sources and the top-level markdown, and
+asserts each resolves:
+
+* numeric ``<sec>N`` against DESIGN.md -> a ``## N.`` heading exists;
+* named ``<sec>Name`` against DESIGN.md -> some ``##``/``###`` heading
+  contains Name as a whole word (case-insensitive), so ``<sec>PQ`` resolves
+  via "(IVF-PQ)" and ``<sec>Serving`` via "## 8. Serving";
+* quoted ``"phrase"`` against DESIGN.md -> some heading contains the phrase
+  (case-insensitive);
+* named ``<sec>Name`` against EXPERIMENTS.md -> a literal ``## <sec>Name``
+  heading exists;
+* a BARE token (no ``FILE.md`` prefix in reach) resolves if either file's
+  rule accepts it — prose like "the <sec>13 butterfly" cites DESIGN from
+  inside EXPERIMENTS, while "(<sec>Quantized)" there cites EXPERIMENTS
+  itself, so bare tokens are checked leniently; prefixed ones strictly.
+
+Renaming or renumbering a heading without a repo-wide citation sweep fails
+here with the offending file:line list.
+
+(The section sign is spelled via an escape throughout so this file's own
+patterns never match themselves.)
+"""
+import pathlib
+import re
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+S = "§"  # the section sign
+
+# Citation token: digits, or a letter word allowing internal hyphens (so
+# "<sec>Shape-cell" parses whole and "<sec>13-<sec>15" parses as 13 then 15).
+TOKEN = r"(\d+|[A-Za-z]+(?:-[A-Za-z]+)*)"
+PREFIXED = re.compile(
+    rf'(DESIGN|EXPERIMENTS)\.md[,:]?\s*(?:{S}{TOKEN}|"([A-Za-z][^"\n]{{1,59}})")')
+BARE = re.compile(rf"{S}{TOKEN}")
+
+SCAN_MD = ("README.md", "DESIGN.md", "EXPERIMENTS.md", "ROADMAP.md")
+SCAN_PY_ROOTS = ("src", "benchmarks", "examples", "tests")
+
+
+def _headings(md_path):
+    lines = (REPO / md_path).read_text().splitlines()
+    return [ln.lstrip("# ").strip() for ln in lines
+            if re.match(r"^#{2,3} ", ln)]
+
+
+def _design_resolves(token_or_phrase, headings, *, quoted=False):
+    if quoted:
+        return any(token_or_phrase.lower() in h.lower() for h in headings)
+    if token_or_phrase.isdigit():
+        return any(re.match(rf"^{token_or_phrase}\.", h) for h in headings)
+    pat = re.compile(rf"\b{re.escape(token_or_phrase)}\b", re.IGNORECASE)
+    return any(pat.search(h) for h in headings)
+
+
+def _experiments_resolves(token, headings):
+    return any(h == f"{S}{token}" for h in headings)
+
+
+def _scan_files():
+    for name in SCAN_MD:
+        yield REPO / name
+    for root in SCAN_PY_ROOTS:
+        yield from sorted((REPO / root).rglob("*.py"))
+
+
+def test_every_section_citation_resolves():
+    design = _headings("DESIGN.md")
+    experiments = _headings("EXPERIMENTS.md")
+
+    def resolves_strict(fname, token=None, phrase=None):
+        if fname == "DESIGN":
+            return _design_resolves(phrase if phrase is not None else token,
+                                    design, quoted=phrase is not None)
+        if phrase is not None:  # EXPERIMENTS is cited by section name only
+            return False
+        return _experiments_resolves(token, experiments)
+
+    def resolves_lenient(token):
+        return (_design_resolves(token, design)
+                or _experiments_resolves(token, experiments))
+
+    dangling = []
+    n_citations = 0
+    for path in _scan_files():
+        text = path.read_text(errors="ignore")
+        rel = path.relative_to(REPO)
+        strict_spans = []
+        for m in PREFIXED.finditer(text):
+            fname, token, phrase = m.group(1), m.group(2), m.group(3)
+            strict_spans.append(m.span())
+            n_citations += 1
+            if not resolves_strict(fname, token=token, phrase=phrase):
+                line = text.count("\n", 0, m.start()) + 1
+                dangling.append(f"{rel}:{line}: {m.group(0)!r} does not "
+                                f"resolve to a heading in {fname}.md")
+        for m in BARE.finditer(text):
+            if any(lo <= m.start() < hi for lo, hi in strict_spans):
+                continue  # already checked strictly above
+            n_citations += 1
+            if not resolves_lenient(m.group(1)):
+                line = text.count("\n", 0, m.start()) + 1
+                dangling.append(f"{rel}:{line}: bare {m.group(0)!r} resolves "
+                                f"in neither DESIGN.md nor EXPERIMENTS.md")
+    assert not dangling, ("dangling section citations:\n  "
+                          + "\n  ".join(dangling))
+    # The extractor finding nothing would mean the regexes rotted, not that
+    # the docs got clean — the repo carries hundreds of citations.
+    assert n_citations > 200, n_citations
+
+
+def test_resolution_rules_catch_known_shapes():
+    """The rules themselves: positives that must resolve, fakes that must not."""
+    design = _headings("DESIGN.md")
+    experiments = _headings("EXPERIMENTS.md")
+    # By-number, by-name (exact word + inside a hyphenation), by-phrase.
+    assert _design_resolves("17", design)
+    assert _design_resolves("2", design)
+    assert _design_resolves("PQ", design)          # via "(IVF-PQ)"
+    assert _design_resolves("Serving", design)
+    assert _design_resolves("Shape-cell", design)
+    assert _design_resolves("hardware adaptation", design, quoted=True)
+    assert _design_resolves("roofline discussion", design, quoted=True)
+    assert not _design_resolves("99", design)
+    assert not _design_resolves("Q", design)       # substring of IVF-PQ only
+    assert not _design_resolves("Nonexistent", design)
+    assert _experiments_resolves("Perf", experiments)
+    assert _experiments_resolves("Filtered", experiments)
+    assert not _experiments_resolves("17", experiments)

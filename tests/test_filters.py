@@ -1,0 +1,423 @@
+"""Filtered & multi-tenant retrieval (DESIGN.md §17).
+
+The contract under test:
+
+* a trivially-true filter is BIT-identical to unfiltered search on every
+  path (the escape hatch: ``filters.normalize`` returns None and the
+  pre-filters code runs verbatim);
+* tenant isolation is an invariant, not a preference — a cross-tenant row
+  never surfaces, on exact AND approximate configs;
+* pre-mode filtered top-k equals brute force over allowed ∩ live rows
+  (property-tested over random corpora/filters/tombstones on flat, IVF and
+  IVF-PQ), including the all-false edge (empty result, id -1 / +inf, not
+  garbage);
+* exclusion lists are exact via the additive k+E fetch widening;
+* the engine's chunk/pad layer is invariant under filtering;
+* a filtered query through ``ShardRouter`` matches the single-host filtered
+  result at the exhaustive knobs;
+* tenant tags survive snapshot save/restore; pre-tenant snapshots restore
+  as tenant 0.
+"""
+import hypothesis
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+
+from repro.serving import (
+    EngineConfig,
+    QueryEngine,
+    QueryFilter,
+    RetrievalIndex,
+)
+from repro.serving import filters as F
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+# (build kwargs, exact-at-these-knobs) — every main-segment scan path.
+# "exact" configs pair an exact stage-1 ranking (fp32 replica or exhaustive
+# probe) with an overfetch wide enough to span the corpus, so pre-mode
+# filtered results must EQUAL brute force, not just approximate it.
+CONFIGS = [
+    ({}, True),
+    ({"impl": "fused"}, True),
+    ({"scan_dtype": "bfloat16", "overfetch": 64}, True),
+    ({"ivf_cells": 8, "nprobe": 8, "overfetch": 64}, True),
+    ({"ivf_cells": 8, "nprobe": 8, "overfetch": 64, "impl": "fused"}, True),
+    ({"ivf_cells": 16, "nprobe": 4}, False),  # probed: invariants only
+    ({"ivf_cells": 8, "nprobe": 8, "pq_m": 4, "overfetch": 64}, True),
+]
+
+
+def _corpus(n=400, d=16, seed=3):
+    rng = np.random.default_rng(seed)
+    vecs = rng.standard_normal((n, d)).astype(np.float32)
+    ids = rng.permutation(10 * n)[:n].astype(np.int64)
+    tenants = rng.integers(0, 3, n).astype(np.int32)
+    return rng, vecs, ids, tenants
+
+
+def _churn(idx, rng, ids, d, n_del=40, n_ins=24):
+    """Delete some rows, insert tenant-tagged new ones; return live truth."""
+    dead = ids[rng.choice(len(ids), n_del, replace=False)]
+    idx.delete(dead)
+    extra = rng.standard_normal((n_ins, d)).astype(np.float32)
+    eids = (np.arange(n_ins) + 10 * len(ids) + 7).astype(np.int64)
+    etens = rng.integers(0, 3, n_ins).astype(np.int32)
+    idx.insert(eids, extra, tenants=etens)
+    return dead, extra, eids, etens
+
+
+def _brute_masked(q, vecs, ids, mask, k):
+    """Exact filtered reference: +inf disallowed, stable sort, id -1 pads."""
+    d2 = ((q[:, None, :] - vecs[None, :, :]) ** 2).sum(-1)
+    d2 = np.where(mask, d2, np.inf)
+    order = np.argsort(d2, axis=1, kind="stable")[:, :k]
+    v = np.take_along_axis(d2, order, axis=1)
+    i = np.where(np.isfinite(v), ids[order], -1)
+    return v, i
+
+
+@pytest.mark.parametrize("kw,exact", CONFIGS,
+                         ids=lambda c: str(c) if isinstance(c, bool) else
+                         "-".join(f"{k}{v}" for k, v in c.items()) or "flat")
+def test_trivial_filter_bit_identical(kw, exact):
+    """QueryFilter() with no predicates == no filter, bit for bit."""
+    del exact
+    rng, vecs, ids, tenants = _corpus()
+    idx = RetrievalIndex.build(ids, vecs, tenants=tenants, **kw)
+    _churn(idx, rng, ids, vecs.shape[1])
+    q = rng.standard_normal((6, vecs.shape[1])).astype(np.float32)
+    r0 = idx.search(q, 8)
+    for f in (QueryFilter(), QueryFilter(mode="pre"),
+              QueryFilter(mode="post"), None):
+        r1 = idx.search(q, 8, filter=f)
+        np.testing.assert_array_equal(np.asarray(r0.ids), np.asarray(r1.ids))
+        np.testing.assert_array_equal(np.asarray(r0.distances),
+                                      np.asarray(r1.distances))
+
+
+@pytest.mark.parametrize("kw,exact", CONFIGS,
+                         ids=lambda c: str(c) if isinstance(c, bool) else
+                         "-".join(f"{k}{v}" for k, v in c.items()) or "flat")
+def test_tenant_isolation_and_exactness(kw, exact):
+    """No cross-tenant row EVER (any mode); exact configs match brute force."""
+    rng, vecs, ids, tenants = _corpus()
+    d, m, k = vecs.shape[1], 7, 8
+    idx = RetrievalIndex.build(ids, vecs, tenants=tenants, **kw)
+    dead, extra, eids, etens = _churn(idx, rng, ids, d)
+    all_vecs = np.concatenate([vecs, extra])
+    all_ids = np.concatenate([ids, eids])
+    all_ten = np.concatenate([tenants, etens])
+    live = ~np.isin(all_ids, dead)
+    q = rng.standard_normal((m, d)).astype(np.float32)
+    qt = rng.integers(0, 3, m).astype(np.int32)
+    for mode in ("auto", "pre", "post"):
+        r = idx.search(q, k, filter=QueryFilter(tenant=qt, mode=mode))
+        ri = np.asarray(r.ids)
+        for i in range(m):
+            got = ri[i][ri[i] >= 0]
+            ok = all_ids[live & (all_ten == qt[i])]
+            assert np.isin(got, ok).all(), (mode, i, "tenant leak")
+        if exact and mode != "post":  # explicit post trades recall for width
+            mask = live[None, :] & (all_ten[None, :] == qt[:, None])
+            bv, bi = _brute_masked(q, all_vecs, all_ids, mask, k)
+            rv = np.asarray(r.distances)
+            np.testing.assert_allclose(
+                np.where(np.isfinite(rv), rv, 0.0),
+                np.where(np.isfinite(bv), bv, 0.0), atol=1e-3)
+            for i in range(m):
+                assert (set(ri[i][np.isfinite(rv[i])])
+                        == set(bi[i][np.isfinite(bv[i])])), (mode, i)
+
+
+def test_exclusions_exact_and_allow_list():
+    """Per-query exclusions exact via k+E widening; allow-list never leaks."""
+    rng, vecs, ids, tenants = _corpus()
+    d, m, k = vecs.shape[1], 7, 8
+    idx = RetrievalIndex.build(ids, vecs, tenants=tenants)
+    dead, extra, eids, _ = _churn(idx, rng, ids, d)
+    all_vecs = np.concatenate([vecs, extra])
+    all_ids = np.concatenate([ids, eids])
+    live = ~np.isin(all_ids, dead)
+    q = rng.standard_normal((m, d)).astype(np.float32)
+
+    # Ragged per-query exclusions: row i excludes its true top-(i % 4).
+    base = _brute_masked(q, all_vecs, all_ids,
+                         np.broadcast_to(live, (m, len(all_ids))), k)[1]
+    ex = [base[i, : i % 4].tolist() for i in range(m)]
+    r = idx.search(q, k, filter=QueryFilter(exclude_ids=ex))
+    ri = np.asarray(r.ids)
+    mask = np.broadcast_to(live, (m, len(all_ids))).copy()
+    for i in range(m):
+        assert not np.isin(ri[i], np.asarray(ex[i], np.int64)).any()
+        mask[i] &= ~np.isin(all_ids, np.asarray(ex[i], np.int64))
+    bv, bi = _brute_masked(q, all_vecs, all_ids, mask, k)
+    for i in range(m):
+        assert set(ri[i][ri[i] >= 0]) == set(bi[i][bi[i] >= 0]), i
+
+    # Batch-wide allow-list, both execution modes.
+    allow = all_ids[live][rng.choice(live.sum(), 50, replace=False)]
+    for mode in ("pre", "auto"):
+        r = idx.search(q, k, filter=QueryFilter(allowed_ids=allow, mode=mode))
+        ri = np.asarray(r.ids)
+        assert np.isin(ri[ri >= 0], allow).all(), (mode, "allow leak")
+        amask = np.broadcast_to(live & np.isin(all_ids, allow),
+                                (m, len(all_ids)))
+        bv, bi = _brute_masked(q, all_vecs, all_ids, amask, k)
+        for i in range(m):
+            assert set(ri[i][ri[i] >= 0]) == set(bi[i][bi[i] >= 0]), (mode, i)
+
+
+def test_all_false_filter_returns_empty_not_garbage():
+    rng, vecs, ids, tenants = _corpus(n=120)
+    idx = RetrievalIndex.build(ids, vecs, tenants=tenants)
+    q = rng.standard_normal((4, vecs.shape[1])).astype(np.float32)
+    for f in (QueryFilter(allowed_ids=np.array([], np.int64)),
+              QueryFilter(tenant=99)):  # no row carries tenant 99
+        r = idx.search(q, 8, filter=f)
+        assert (np.asarray(r.ids) == -1).all()
+        assert not np.isfinite(np.asarray(r.distances)).any()
+
+
+def test_engine_chunk_pad_invariant_under_filtering():
+    """Chunking + pow2 padding never changes a filtered row's results."""
+    rng, vecs, ids, tenants = _corpus(n=200)
+    d, m, k = vecs.shape[1], 11, 6
+    idx = RetrievalIndex.build(ids, vecs, tenants=tenants)
+    q = rng.standard_normal((m, d)).astype(np.float32)
+    qt = rng.integers(0, 3, m).astype(np.int32)
+    ex = [[int(i)] * (j % 3) for j, i in enumerate(ids[:m])]
+    f = QueryFilter(tenant=qt, exclude_ids=ex)
+    want = idx.search(q, k, filter=f)
+    eng = QueryEngine(idx, EngineConfig(k=k, min_batch=4, max_batch=4))
+    got = eng.search(q, k, filter=f)
+    np.testing.assert_array_equal(np.asarray(want.ids), np.asarray(got.ids))
+    np.testing.assert_array_equal(np.asarray(want.distances),
+                                  np.asarray(got.distances))
+
+
+# ---------------------------------------------------------------------------
+# Property test: filtered top-k == brute force over allowed ∩ live.
+# ---------------------------------------------------------------------------
+
+
+@hypothesis.settings(**SETTINGS)
+@hypothesis.given(
+    n=st.sampled_from((64, 96, 128)),
+    kind=st.sampled_from(("flat", "ivf", "ivfpq")),
+    ftype=st.sampled_from(("tenant", "allow", "exclude", "mix",
+                           "all_true", "all_false")),
+    seed=st.integers(0, 10_000),
+)
+def test_filtered_topk_matches_bruteforce(n, kind, ftype, seed):
+    """Random corpus + tombstones + filter -> exact filtered top-k.
+
+    ``mode="pre"`` everywhere row predicates exist: pre-filtering is the
+    exactness-preserving execution (post trades recall for fetch width by
+    design and is covered by the invariant tests above).  IVF/IVF-PQ run
+    at the exhaustive knobs (nprobe = ncells, overfetch spanning the
+    corpus), where their filtered results are exact too.
+    """
+    d, m, k = 8, 4, 4
+    rng = np.random.default_rng(seed)
+    vecs = rng.standard_normal((n, d)).astype(np.float32)
+    ids = rng.permutation(8 * n)[:n].astype(np.int64)
+    tenants = rng.integers(0, 3, n).astype(np.int32)
+    kw = {"flat": {},
+          "ivf": {"ivf_cells": 4, "nprobe": 4, "overfetch": 64},
+          "ivfpq": {"ivf_cells": 4, "nprobe": 4, "overfetch": 64,
+                    "pq_m": 4, "pq_nbits": 4}}[kind]
+    idx = RetrievalIndex.build(ids, vecs, tenants=tenants, **kw)
+    dead = ids[rng.choice(n, n // 8, replace=False)]
+    idx.delete(dead)
+    live = ~np.isin(ids, dead)
+    q = rng.standard_normal((m, d)).astype(np.float32)
+
+    mask = np.broadcast_to(live, (m, n)).copy()
+    if ftype == "all_true":
+        f = QueryFilter()
+        want = idx.search(q, k)
+    elif ftype == "all_false":
+        f = QueryFilter(allowed_ids=np.array([], np.int64), mode="pre")
+        mask[:] = False
+        want = None
+    else:
+        qt = rng.integers(0, 3, m).astype(np.int32)
+        allow = ids[live][rng.choice(live.sum(), live.sum() // 2,
+                                     replace=False)]
+        ex = [ids[rng.choice(n, rng.integers(0, 4), replace=False)].tolist()
+              for _ in range(m)]
+        tenant = qt if ftype in ("tenant", "mix") else None
+        allowed = allow if ftype in ("allow", "mix") else None
+        excl = ex if ftype in ("exclude", "mix") else None
+        f = QueryFilter(tenant=tenant, allowed_ids=allowed,
+                        exclude_ids=excl, mode="pre")
+        if tenant is not None:
+            mask &= tenants[None, :] == qt[:, None]
+        if allowed is not None:
+            mask &= np.isin(ids, allow)[None, :]
+        if excl is not None:
+            for i in range(m):
+                mask[i] &= ~np.isin(ids, np.asarray(ex[i], np.int64))
+        want = None
+
+    r = idx.search(q, k, filter=f)
+    rv, ri = np.asarray(r.distances), np.asarray(r.ids)
+    if want is not None:  # all-true: bit-identical to the unfiltered search
+        np.testing.assert_array_equal(ri, np.asarray(want.ids))
+        np.testing.assert_array_equal(rv, np.asarray(want.distances))
+        return
+    bv, bi = _brute_masked(q, vecs, ids, mask, k)
+    for i in range(m):
+        assert set(ri[i][ri[i] >= 0]) == set(bi[i][bi[i] >= 0]), (i, ftype)
+    np.testing.assert_allclose(np.where(np.isfinite(rv), rv, 0.0),
+                               np.where(np.isfinite(bv), bv, 0.0), atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Sharded router parity + snapshot tenant round-trip.
+# ---------------------------------------------------------------------------
+
+
+def test_shard_router_filtered_matches_single_host(tmp_path):
+    """Filtered routed search == filtered single-host search, bit for bit.
+
+    Exhaustive knobs on both sides (nprobe = ncells, overfetch spanning the
+    corpus): both paths are exact, the workers pre-filter the allow-list
+    exactly as the single-host pre mode does, and exclusions drop the same
+    external ids — so values AND ids must agree bitwise.
+    """
+    from repro.serving import load_router
+    from repro.serving.snapshot import save_shards, shard_dirs
+
+    rng = np.random.default_rng(11)
+    n, d, m, k = 512, 16, 6, 8
+    vecs = rng.standard_normal((n, d)).astype(np.float32)
+    ids = np.arange(n, dtype=np.int64)
+    idx = RetrievalIndex.build(ids, vecs, ivf_cells=8, nprobe=8,
+                               overfetch=64)
+    root = str(tmp_path / "fleet")
+    save_shards(idx, root, 4)
+    router = load_router(shard_dirs(root))
+    q = rng.standard_normal((m, d)).astype(np.float32)
+
+    # Trivial filter: bit-identical to the router's unfiltered search.
+    r0 = router.search(q, k)
+    r1 = router.search(q, k, filter=QueryFilter())
+    np.testing.assert_array_equal(np.asarray(r0.ids), np.asarray(r1.ids))
+    np.testing.assert_array_equal(np.asarray(r0.distances),
+                                  np.asarray(r1.distances))
+
+    allow = rng.choice(n, 200, replace=False)
+    ex = np.asarray(idx.search(q, k).ids)[:, :3]
+    for f in (QueryFilter(allowed_ids=allow, mode="pre"),
+              QueryFilter(exclude_ids=ex),
+              QueryFilter(allowed_ids=allow, exclude_ids=ex, mode="pre")):
+        single = idx.search(q, k, filter=f)
+        routed = router.search(q, k, filter=f)
+        np.testing.assert_array_equal(np.asarray(single.ids),
+                                      np.asarray(routed.ids))
+        np.testing.assert_allclose(np.asarray(single.distances),
+                                   np.asarray(routed.distances),
+                                   rtol=1e-6, atol=1e-6)
+
+    # Tenant predicates are refused loudly: shard images carry no tags.
+    with pytest.raises(NotImplementedError):
+        router.search(q, k, filter=QueryFilter(tenant=1))
+
+
+def test_snapshot_roundtrips_tenants(tmp_path):
+    """Tenant tags survive save/restore on main AND delta segments."""
+    rng, vecs, ids, tenants = _corpus(n=150)
+    d = vecs.shape[1]
+    idx = RetrievalIndex.build(ids, vecs, tenants=tenants)
+    _churn(idx, rng, ids, d)  # delta rows carry their own tenants
+    q = rng.standard_normal((5, d)).astype(np.float32)
+    qt = rng.integers(0, 3, 5).astype(np.int32)
+    f = QueryFilter(tenant=qt, mode="pre")
+    want = idx.search(q, 6, filter=f)
+    idx.save(str(tmp_path / "snap"))
+    r = RetrievalIndex.restore(str(tmp_path / "snap"))
+    got = r.search(q, 6, filter=f)
+    np.testing.assert_array_equal(np.asarray(want.ids), np.asarray(got.ids))
+    np.testing.assert_array_equal(np.asarray(want.distances),
+                                  np.asarray(got.distances))
+    np.testing.assert_array_equal(r._main_tenant, idx._main_tenant)
+    np.testing.assert_array_equal(
+        r._delta_tenant[: r._delta_n], idx._delta_tenant[: idx._delta_n])
+
+
+def test_pre_tenant_snapshot_restores_as_tenant_zero(tmp_path):
+    """A snapshot without a tenant column = everything tenant 0 (back-compat)."""
+    import os
+
+    rng, vecs, ids, _ = _corpus(n=80)
+    idx = RetrievalIndex.build(ids, vecs)  # tenants default to 0
+    idx.save(str(tmp_path / "snap"))
+    # Strip the tenant column, restamp the file, as a pre-§17 writer would
+    # have produced it.
+    from repro.serving import snapshot as S
+
+    main = str(tmp_path / "snap" / "main.npz")
+    with np.load(main) as z:
+        slim = {k: z[k] for k in z.files if k != "tenant"}
+    tmp = main + ".tmp.npz"  # np.savez appends .npz to bare names
+    np.savez(tmp, **slim)
+    os.replace(tmp, main)
+    import json
+
+    mpath = str(tmp_path / "snap" / "manifest.json")
+    with open(mpath) as fh:
+        manifest = json.load(fh)
+    manifest["files"]["main.npz"] = S._file_stamp(main)
+    with open(mpath, "w") as fh:
+        json.dump(manifest, fh)
+    r = RetrievalIndex.restore(str(tmp_path / "snap"))
+    assert (r._main_tenant == 0).all()
+    q = rng.standard_normal((3, vecs.shape[1])).astype(np.float32)
+    want = idx.search(q, 5)
+    got = r.search(q, 5)
+    np.testing.assert_array_equal(np.asarray(want.ids), np.asarray(got.ids))
+
+
+# ---------------------------------------------------------------------------
+# filters.py unit surface.
+# ---------------------------------------------------------------------------
+
+
+def test_normalize_trivial_and_canonical_forms():
+    assert F.normalize(None, 4) is None
+    assert F.normalize(QueryFilter(), 4) is None
+    assert F.normalize(QueryFilter(exclude_ids=[[], [], [], []]), 4) is None
+    f = F.normalize(QueryFilter(tenant=2, exclude_ids=[[5, 6]]), 3)
+    np.testing.assert_array_equal(f.tenant, [2, 2, 2])
+    np.testing.assert_array_equal(f.exclude_ids,
+                                  [[5, 6], [5, 6], [5, 6]])  # broadcast
+    f = F.normalize(QueryFilter(exclude_ids=[[1], [2, 3], []]), 3)
+    np.testing.assert_array_equal(f.exclude_ids, [[1, -1], [2, 3], [-1, -1]])
+    with pytest.raises(ValueError):
+        F.normalize(QueryFilter(mode="sideways"), 4)
+
+
+def test_selectivity_resolve_and_widen():
+    live = np.array([True] * 8 + [False] * 2)
+    ids = np.arange(10)
+    tenants = np.array([0] * 5 + [1] * 5)
+    f = F.normalize(QueryFilter(tenant=[0, 1]), 2)
+    s = F.selectivity(f, live=live, ids=ids, tenants=tenants)
+    assert s == pytest.approx(3 / 8)  # tenant 1: 3 live of 8 live total
+    f = F.normalize(QueryFilter(allowed_ids=[0, 1, 2, 3]), 2)
+    assert F.selectivity(f, live=live, ids=ids,
+                         tenants=tenants) == pytest.approx(0.5)
+    assert F.resolve_mode("auto", 0.1) == "pre"
+    assert F.resolve_mode("auto", 0.9) == "post"
+    assert F.resolve_mode("pre", 0.9) == "pre"
+    assert F.widen(10, 0.5) == 20
+    assert F.widen(10, 1e-9) == 10 * F.MAX_WIDEN  # clamped
+
+
+def test_proc_worker_refuses_allow_filter_flag():
+    """The capability flag the router fails fast on (no transport support)."""
+    from repro.serving.supervisor import ProcWorker
+
+    assert ProcWorker.supports_allow_filter is False
